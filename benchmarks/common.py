@@ -1,0 +1,33 @@
+"""Shared benchmark helpers: standard graph set + timing."""
+
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+from repro.graphs.generators import make_graph
+
+RESULTS = Path(__file__).resolve().parents[1] / "results" / "bench"
+
+# synthetic analogues of the 5 GAP graphs (paper Table II), laptop scale
+GRAPHS = ["kron", "urand", "road", "twitter", "web"]
+SCALE = 13
+EFACTOR = 8
+DEFAULT_P = 16
+DELTAS = [64, 256, 1024, 4096]
+MIN_CHUNK = 16  # "async" commit granularity (finest vectorizable chunk)
+
+
+def load_graph(name: str, kind: str = "pagerank"):
+    scale = SCALE
+    return make_graph(name, scale=scale, efactor=EFACTOR, kind=kind)
+
+
+def record(table: str, rows: list):
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    (RESULTS / f"{table}.json").write_text(json.dumps(rows, indent=1))
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    print(f"{name},{us_per_call:.1f},{derived}")

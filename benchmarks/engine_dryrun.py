@@ -1,0 +1,72 @@
+"""Dry-run roofline of the paper's own engine on the production mesh.
+
+Lowers one delayed-async PageRank round (P = 256 workers = the single-pod
+mesh "data"×"model" axes flattened... here: the "data" axis at 16 workers ×
+16-way replicated, and a full 256-worker variant) for δ ∈ {128, 1024, B} on
+a kron graph, and counts the flush all-gather bytes — the TPU realisation of
+the paper's Table-I flush counts.
+
+    PYTHONPATH=src python -m benchmarks.engine_dryrun
+"""
+
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+import json
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.engine import make_schedule
+from repro.core.semiring import PLUS_TIMES
+from repro.dist.engine_sharded import input_specs_for_engine, sharded_round_fn
+from repro.graphs.generators import make_graph
+from repro.launch.dryrun import collective_stats
+
+RESULTS = Path(__file__).resolve().parents[1] / "results"
+ICI_BW = 50e9
+
+
+def main():
+    g = make_graph("kron", scale=19, efactor=8, kind="pagerank")
+    n = g.n
+    tele = np.float32(0.15 / n)
+    P = 256
+    mesh = jax.make_mesh(
+        (P,), ("data",), axis_types=(jax.sharding.AxisType.Auto,)
+    )
+    rows = []
+    for mode, delta in [("async", None), ("delayed", 512), ("sync", None)]:
+        sched = make_schedule(g, P, delta, PLUS_TIMES, mode=mode)
+        rnd = sharded_round_fn(
+            sched, PLUS_TIMES, lambda o, r, w: tele + r, mesh, axis="data"
+        )
+        with jax.set_mesh(mesh):
+            compiled = jax.jit(rnd).lower(*input_specs_for_engine(sched, PLUS_TIMES)).compile()
+        coll = collective_stats(compiled.as_text())
+        flush_bytes = sched.S * P * sched.delta * 4  # analytic per round
+        rows.append(
+            {
+                "mode": mode,
+                "delta": sched.delta,
+                "commits_per_round": sched.S,
+                "hlo_collective_bytes": coll["total_bytes"],
+                "analytic_flush_bytes": flush_bytes,
+                "flush_time_ms": flush_bytes / (P * ICI_BW) * 1e3
+                + sched.S * 1e-3,  # + α=1µs latency per commit
+            }
+        )
+        print(
+            f"{mode:8s} δ={sched.delta:6d} commits/round={sched.S:4d} "
+            f"HLO coll={coll['total_bytes']/2**20:8.2f} MiB "
+            f"flush-term≈{rows[-1]['flush_time_ms']:.3f} ms/round"
+        )
+    (RESULTS / "engine_dryrun.json").write_text(json.dumps(rows, indent=1))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

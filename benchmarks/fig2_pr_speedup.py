@@ -1,0 +1,68 @@
+"""Paper Fig 2: PR speedup over synchronous baseline, async + δ sweep.
+
+Two speedup columns per point:
+
+* ``wall`` — measured wall-clock on this host (captures the rounds effect;
+  the cache-contention effect does not exist on a 1-core CPU device, see
+  DESIGN.md §9.3);
+* ``modeled`` — the TPU cost model ``rounds(δ)·round_cost(δ)`` with the
+  explicit commit-collective term (repro.core.delta_model), which is where
+  the paper's hump-shaped δ curve lives on this hardware.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import (
+    DEFAULT_P,
+    DELTAS,
+    GRAPHS,
+    MIN_CHUNK,
+    emit,
+    load_graph,
+    record,
+)
+from repro.algorithms import pagerank
+from repro.core.delta_model import fit_delta_model
+
+
+def run(P: int = DEFAULT_P) -> list:
+    rows = []
+    for gname in GRAPHS:
+        g = load_graph(gname)
+        base = pagerank(g, P=P, mode="sync")
+        t_sync = base.rounds * base.avg_round_time_s
+        r_async = pagerank(g, P=P, mode="async", min_chunk=MIN_CHUNK)
+        model = fit_delta_model(g, P, base.rounds, r_async.rounds, delta_min=MIN_CHUNK)
+        m_sync = model.total_time_s(model.B)
+
+        def add(label, res, delta_for_model):
+            t = res.rounds * res.avg_round_time_s
+            m = model.total_time_s(delta_for_model)
+            rows.append(
+                {
+                    "graph": gname,
+                    "mode": label,
+                    "rounds": res.rounds,
+                    "wall_speedup_vs_sync": t_sync / t if t else float("nan"),
+                    "modeled_speedup_vs_sync": m_sync / m,
+                    "flush_bytes": res.flush_bytes,
+                }
+            )
+            emit(
+                f"fig2/{gname}/{label}",
+                t * 1e6,
+                f"wallx={t_sync/t:.3f};modelx={m_sync/m:.3f};rounds={res.rounds}",
+            )
+
+        add("async", r_async, model.delta_min)
+        for d in DELTAS:
+            r = pagerank(g, P=P, mode="delayed", delta=d, min_chunk=MIN_CHUNK)
+            add(f"delayed{d}", r, d)
+    record("fig2_pr_speedup", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

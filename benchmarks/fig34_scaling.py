@@ -1,0 +1,48 @@
+"""Paper Figs 3/4: worker scaling — best δ vs worker count (kron, web).
+
+The paper's finding: on Kron the best δ *decreases* as threads increase; on
+Web no δ beats async.  We sweep P ∈ {4..32} and report measured rounds plus
+the δ* minimizing the modeled TPU total time.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import DELTAS, MIN_CHUNK, emit, load_graph, record
+from repro.algorithms import pagerank
+from repro.core.delta_model import fit_delta_model
+
+
+def run(graphs=("kron", "web"), Ps=(4, 8, 16, 32)) -> list:
+    rows = []
+    for gname in graphs:
+        g = load_graph(gname)
+        for P in Ps:
+            sync = pagerank(g, P=P, mode="sync")
+            asyn = pagerank(g, P=P, mode="async", min_chunk=MIN_CHUNK)
+            model = fit_delta_model(g, P, sync.rounds, asyn.rounds, delta_min=MIN_CHUNK)
+            best = model.best_delta(DELTAS + [model.B])
+            rows.append(
+                {
+                    "graph": gname,
+                    "P": P,
+                    "rounds_sync": sync.rounds,
+                    "rounds_async": asyn.rounds,
+                    "best_delta_modeled": best,
+                    "locality": model.locality,
+                    "modeled_best_speedup_vs_async": model.total_time_s(
+                        model.delta_min
+                    )
+                    / model.total_time_s(best),
+                }
+            )
+            emit(
+                f"fig34/{gname}/P{P}",
+                0.0,
+                f"delta*={best};sync={sync.rounds};async={asyn.rounds}",
+            )
+    record("fig34_scaling", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,59 @@
+"""Paper Fig 6: Bellman-Ford SSSP speedups over sync (async + δ sweep).
+
+Paper finding: fewer updates per round than PR → buffering helps less; Road
+and Web should show no benefit.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import (
+    DEFAULT_P,
+    DELTAS,
+    GRAPHS,
+    MIN_CHUNK,
+    emit,
+    load_graph,
+    record,
+)
+from repro.algorithms import sssp
+from repro.core.delta_model import fit_delta_model
+
+
+def run(P: int = DEFAULT_P) -> list:
+    rows = []
+    for gname in GRAPHS:
+        g = load_graph(gname, kind="sssp")
+        sync = sssp(g, P=P, mode="sync")
+        t_sync = sync.rounds * sync.avg_round_time_s
+        asyn = sssp(g, P=P, mode="async", min_chunk=MIN_CHUNK)
+        model = fit_delta_model(g, P, sync.rounds, asyn.rounds, delta_min=MIN_CHUNK)
+        m_sync = model.total_time_s(model.B)
+
+        def add(label, res, d):
+            t = res.rounds * res.avg_round_time_s
+            m = model.total_time_s(d)
+            rows.append(
+                {
+                    "graph": gname,
+                    "mode": label,
+                    "rounds": res.rounds,
+                    "wall_speedup_vs_sync": t_sync / t if t else float("nan"),
+                    "modeled_speedup_vs_sync": m_sync / m,
+                }
+            )
+            emit(
+                f"fig6/{gname}/{label}",
+                t * 1e6,
+                f"wallx={t_sync/t:.3f};modelx={m_sync/m:.3f};rounds={res.rounds}",
+            )
+
+        add("async", asyn, model.delta_min)
+        for d in DELTAS:
+            r = sssp(g, P=P, mode="delayed", delta=d, min_chunk=MIN_CHUNK)
+            add(f"delayed{d}", r, d)
+    record("fig6_sssp_speedup", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

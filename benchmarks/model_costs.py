@@ -1,0 +1,111 @@
+"""Trip-count-aware analytic FLOP/byte model of the *compiled* programs.
+
+``compiled.cost_analysis()`` on XLA counts while-loop bodies once (verified
+in EXPERIMENTS.md §Dry-run), so scan-over-layers / chunked-attention programs
+under-report by the trip count.  This module reconstructs the executed FLOPs
+of each cell from the model math, *including* the compiled program's known
+overheads:
+
+* remat: backward re-executes the forward of every layer (factor 2 fwd-cost
+  in the bwd term → total 3× fwd +  1× extra fwd ≈ 4·fwd per train step
+  — 2 fwd (orig + recompute) + 2 fwd-equivalents for grads);
+* masked-attention waste: the ``masked`` schedule computes the full q×kv
+  square (2× causal work); ``banded`` computes ⌈(i+1)/nk⌉ tiles only;
+* MoE capacity slack: expert GEMMs run at ``capacity_factor`` occupancy.
+
+Validated against ``cost_analysis()`` on unrolled reduced configs in
+``tests/test_roofline_model.py`` (agreement within tolerance).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs.shapes import SHAPES, ShapeSpec
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class CellCost:
+    flops: float  # executed FLOPs (global, one step)
+    model_flops: float  # useful FLOPs = 6·N_active·D (train) / 2·N_active·D
+    hbm_bytes: float  # global HBM traffic estimate
+    notes: str = ""
+
+
+def _attn_flops_fwd(cfg: ModelConfig, B, S, causal=True, window=0):
+    """QK^T + PV flops for all attention layers at seq S (per fwd)."""
+    n_attn = sum(1 for k in cfg.layer_kinds if k == "attn")
+    if n_attn == 0:
+        return 0.0
+    hd, Hq = cfg.hd, cfg.n_heads
+    if window:
+        eff = min(window, S)
+        pairs = S * eff  # banded
+    elif causal:
+        if cfg.attn_schedule == "banded":
+            pairs = S * S / 2  # tile-level banding ≈ causal half
+        else:
+            pairs = S * S  # masked schedule computes the full square
+    else:
+        pairs = S * S
+    return n_attn * B * Hq * pairs * hd * 2 * 2  # qk + pv, 2 flops/MAC
+
+
+def _ssm_flops_fwd(cfg: ModelConfig, B, S):
+    n_ssm = sum(1 for k in cfg.layer_kinds if k == "ssm")
+    if n_ssm == 0:
+        return 0.0
+    H, P, N, Q = cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state, cfg.ssm_chunk
+    Qe = min(Q, S)
+    # intra-chunk quadratic (CBᵀ then (L∘CB)·X) + inter-chunk state path
+    intra = B * (S // max(Qe, 1)) * (Qe * Qe * N + Qe * Qe * H * P) * 2
+    state = B * S * H * P * N * 2 * 2  # build + read state
+    return n_ssm * (intra + state)
+
+
+def _param_flops(cfg: ModelConfig, n_active_params, B, S):
+    return 2.0 * n_active_params * B * S
+
+
+def cell_cost(cfg: ModelConfig, shape: ShapeSpec, accum: int = 1) -> CellCost:
+    B, S = shape.global_batch, shape.seq_len
+    N_act = cfg.active_param_count()
+    dtype_bytes = 2  # bf16 compute
+
+    if shape.kind == "train":
+        fwd = _param_flops(cfg, N_act, B, S) + _attn_flops_fwd(cfg, B, S) + _ssm_flops_fwd(cfg, B, S)
+        # fwd + remat-recompute-fwd + 2×fwd-equivalent for backward matmuls
+        flops = 4.0 * fwd
+        model = 6.0 * N_act * B * S
+        # HBM: params read ×(fwd+bwd+recompute) + grads + opt states + acts
+        n_par = cfg.param_count()
+        hbm = (
+            3 * n_par * dtype_bytes * accum  # weights per microbatch pass
+            + n_par * 4 * 4  # grads + m + v + params update in f32
+            + 4 * B * S * cfg.d_model * dtype_bytes * cfg.n_layers
+        )
+        return CellCost(flops, model, hbm, f"remat×4fwd, accum={accum}")
+
+    if shape.kind == "prefill":
+        fwd = _param_flops(cfg, N_act, B, S) + _attn_flops_fwd(cfg, B, S) + _ssm_flops_fwd(cfg, B, S)
+        model = 2.0 * N_act * B * S
+        hbm = cfg.param_count() * dtype_bytes + 2 * B * S * cfg.d_model * dtype_bytes * cfg.n_layers
+        return CellCost(fwd, model, hbm, "single fwd")
+
+    # decode: one token; context = S
+    n_attn = sum(1 for k in cfg.layer_kinds if k == "attn")
+    hd, Hq, Hkv = cfg.hd, cfg.n_heads, cfg.n_kv
+    ctx = min(cfg.window, S) if (cfg.pattern and cfg.window) else S
+    attn = n_attn * B * Hq * ctx * hd * 2 * 2
+    ssm = sum(1 for k in cfg.layer_kinds if k == "ssm") * B * (
+        cfg.ssm_heads * cfg.ssm_headdim * cfg.ssm_state * 2 * 2
+    )
+    rglru = sum(1 for k in cfg.layer_kinds if k == "rglru") * B * (
+        (cfg.lru_width or cfg.d_model) ** 2 * 2 * 2
+    )
+    flops = _param_flops(cfg, N_act, B, 1) + attn + ssm + rglru
+    model = 2.0 * N_act * B
+    kv_bytes = n_attn * B * ctx * Hkv * hd * 2 * dtype_bytes
+    hbm = cfg.param_count() * dtype_bytes + kv_bytes
+    return CellCost(flops, model, hbm, f"ctx={ctx}")

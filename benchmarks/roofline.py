@@ -1,0 +1,127 @@
+"""Roofline analysis of every dry-run cell (EXPERIMENTS.md §Roofline).
+
+Three terms per (arch × shape × mesh), all in seconds **per device**:
+
+    compute    = FLOPs / (chips × 197 TFLOP/s bf16)
+    memory     = HBM bytes / (chips × 819 GB/s)
+    collective = collective bytes / (chips × 50 GB/s per ICI link)
+
+FLOPs and HBM bytes come from the trip-count-aware analytic model
+(``model_costs.py`` — XLA's ``cost_analysis()`` counts loop bodies once, see
+§Dry-run), collective bytes from the compiled HLO's collective ops (parsed by
+``dryrun.py``).  MODEL_FLOPS = 6·N_active·D (train) or 2·N_active·D
+(inference); the ratio MODEL_FLOPS/FLOPs exposes remat & masking waste.
+
+Run::
+
+    PYTHONPATH=src python -m benchmarks.roofline [--mesh single] [--csv out.csv]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+from benchmarks.model_costs import cell_cost
+from repro.configs import ALIASES, get_config
+from repro.configs.shapes import SHAPES
+
+PEAK_FLOPS = 197e12  # bf16 / chip (TPU v5e)
+HBM_BW = 819e9  # B/s / chip
+ICI_BW = 50e9  # B/s / link
+
+RESULTS = Path(__file__).resolve().parents[1] / "results" / "dryrun"
+
+
+def analyze(rec: dict) -> dict:
+    rec = dict(rec, arch=ALIASES[rec["arch"]])  # normalize id forms
+    cfg = get_config(rec["arch"])
+    shape = SHAPES[rec["shape"]]
+    chips = rec["n_devices"]
+    accum = 8 if cfg.param_count() > 60e9 else (2 if cfg.param_count() > 9e9 else 1)
+    cost = cell_cost(cfg, shape, accum=accum)
+
+    compute_s = cost.flops / (chips * PEAK_FLOPS)
+    memory_s = cost.hbm_bytes / (chips * HBM_BW)
+    # HLO collective bytes are whole-program (all devices): per-device share
+    coll_bytes = rec["collectives"]["total_bytes"]
+    collective_s = coll_bytes / (chips * ICI_BW)
+
+    terms = {"compute": compute_s, "memory": memory_s, "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    bound_s = max(terms.values())
+    # roofline fraction: useful compute time / dominant-term time
+    useful_s = cost.model_flops / (chips * PEAK_FLOPS)
+    frac = useful_s / bound_s if bound_s > 0 else 0.0
+    return {
+        "arch": rec["arch"],
+        "shape": rec["shape"],
+        "mesh": rec["mesh"],
+        "chips": chips,
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": collective_s,
+        "dominant": dominant,
+        "model_flops": cost.model_flops,
+        "hlo_flops": cost.flops,
+        "useful_ratio": cost.model_flops / cost.flops if cost.flops else 0.0,
+        "roofline_frac": frac,
+        "bytes_per_device_gib": rec["bytes_per_device"] / 2**30,
+        "hlo_reported_flops": rec["cost"].get("flops", 0.0),
+        "notes": cost.notes,
+    }
+
+
+def improvement_hint(row: dict) -> str:
+    d = row["dominant"]
+    if d == "compute":
+        if row["useful_ratio"] < 0.4:
+            return "cut remat/mask waste (banded attention, selective remat)"
+        return "already compute-bound near useful flops — raise MXU occupancy"
+    if d == "memory":
+        return "fuse/shard cache reads; bigger per-chip batch amortizes weight streaming"
+    return "fewer/larger flushes: raise δ, overlap collective with compute"
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--csv", default=None)
+    args = ap.parse_args(argv)
+
+    rows = []
+    for f in sorted(RESULTS.glob("*.json")):
+        if f.name.startswith("FAILED"):
+            continue
+        rec = json.loads(f.read_text())
+        if args.mesh != "both" and rec["mesh"] != args.mesh:
+            continue
+        rows.append(analyze(rec))
+
+    hdr = (
+        f"{'arch':22s} {'shape':12s} {'mesh':6s} "
+        f"{'compute_s':>10s} {'memory_s':>10s} {'coll_s':>10s} "
+        f"{'dominant':>10s} {'useful':>7s} {'roofline':>9s}"
+    )
+    print(hdr)
+    print("-" * len(hdr))
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        print(
+            f"{r['arch']:22s} {r['shape']:12s} {r['mesh']:6s} "
+            f"{r['compute_s']:10.2e} {r['memory_s']:10.2e} {r['collective_s']:10.2e} "
+            f"{r['dominant']:>10s} {r['useful_ratio']:7.2f} {r['roofline_frac']:9.2f}"
+        )
+    if args.csv:
+        import csv as _csv
+
+        with open(args.csv, "w", newline="") as fh:
+            w = _csv.DictWriter(fh, fieldnames=list(rows[0].keys()))
+            w.writeheader()
+            w.writerows(rows)
+        print(f"wrote {args.csv}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark orchestrator.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--skip-roofline]
+
+Sections (one per paper artifact, DESIGN.md §10):
+  table2  graph statistics              (paper Table II)
+  table1  rounds + avg round time       (paper Table I)
+  fig2    PR speedup vs sync, δ sweep   (paper Fig 2)
+  fig34   δ* vs worker count            (paper Figs 3/4)
+  fig5    access-matrix locality        (paper Fig 5)
+  fig6    SSSP speedup vs sync          (paper Fig 6)
+  delta_model  analytic δ-selector validation (beyond paper)
+  roofline     dry-run roofline table   (assignment §Roofline; needs
+               results/dryrun — run repro.launch.dryrun first)
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="small graph set")
+    ap.add_argument("--skip-roofline", action="store_true")
+    args = ap.parse_args(argv)
+
+    print("name,us_per_call,derived")
+    t0 = time.time()
+
+    from benchmarks import (
+        delta_model_validation,
+        fig2_pr_speedup,
+        fig5_access_matrix,
+        fig6_sssp_speedup,
+        fig34_scaling,
+        table1_rounds,
+        table2_graphs,
+    )
+
+    table2_graphs.run()
+    table1_rounds.run()
+    fig5_access_matrix.run()
+    fig2_pr_speedup.run()
+    fig34_scaling.run(Ps=(4, 8, 16) if args.quick else (4, 8, 16, 32))
+    fig6_sssp_speedup.run()
+    delta_model_validation.run()
+
+    if not args.skip_roofline:
+        try:
+            from benchmarks import roofline
+
+            rows = roofline.main(["--mesh", "single"])
+            for r in rows:
+                print(
+                    f"roofline/{r['arch']}/{r['shape']},0.0,"
+                    f"dom={r['dominant']};frac={r['roofline_frac']:.3f}"
+                )
+        except Exception as e:  # dry-run results absent
+            print(f"roofline/skipped,0.0,{type(e).__name__}", file=sys.stderr)
+
+    print(f"# total bench time {time.time()-t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

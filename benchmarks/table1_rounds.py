@@ -1,0 +1,42 @@
+"""Paper Table I: rounds + avg time/round for PR under sync/async/hybrid."""
+
+from __future__ import annotations
+
+from benchmarks.common import DEFAULT_P, GRAPHS, MIN_CHUNK, emit, load_graph, record
+from repro.algorithms import pagerank
+
+
+def run(deltas=(256,)) -> list:
+    rows = []
+    for gname in GRAPHS:
+        g = load_graph(gname)
+        for mode, delta in [("sync", None), ("async", None)] + [
+            ("delayed", d) for d in deltas
+        ]:
+            r = pagerank(
+                g, P=DEFAULT_P, mode=mode, delta=delta, min_chunk=MIN_CHUNK
+            )
+            label = mode if mode != "delayed" else f"delayed{delta}"
+            rows.append(
+                {
+                    "graph": gname,
+                    "mode": label,
+                    "rounds": r.rounds,
+                    "avg_round_time_s": r.avg_round_time_s,
+                    "flushes": r.flushes,
+                    "flush_bytes": r.flush_bytes,
+                    "converged": r.converged,
+                    "delta": r.delta,
+                }
+            )
+            emit(
+                f"table1/{gname}/{label}",
+                r.avg_round_time_s * 1e6,
+                f"rounds={r.rounds};flushes={r.flushes}",
+            )
+    record("table1_rounds", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

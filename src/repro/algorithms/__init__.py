@@ -1,0 +1,6 @@
+from repro.algorithms.pagerank import pagerank
+from repro.algorithms.sssp import sssp
+from repro.algorithms.cc import connected_components
+from repro.algorithms.jacobi import jacobi_solve
+
+__all__ = ["pagerank", "sssp", "connected_components", "jacobi_solve"]

@@ -1,0 +1,184 @@
+"""Sharded checkpointing with manifest + atomic commit + elastic restore.
+
+Layout::
+
+    <dir>/step_000100/
+        manifest.json        # step, tree structure, leaf shapes/dtypes, shard map
+        shard_00000.npz      # one npz per host: its slice of every leaf
+        _COMMITTED           # written last — restart scans for the newest
+                             # committed step and ignores torn writes
+
+Design points for 1000+ nodes:
+
+* every host writes only its own addressable shards (no cross-host traffic);
+* the manifest stores the *global* layout, so restoring onto a different
+  device count / mesh re-slices automatically (elastic re-shard);
+* commit marker is rename-based (atomic on POSIX), a torn checkpoint is
+  invisible;
+* writes stream through a background thread (training continues) —
+  ``save(..., block=False)``.
+"""
+
+from __future__ import annotations
+
+import json
+import threading
+import time
+from pathlib import Path
+
+import jax
+import numpy as np
+
+__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step", "CheckpointManager"]
+
+
+def _flatten_with_names(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    names, leaves = [], []
+    for path, leaf in flat:
+        names.append(jax.tree_util.keystr(path))
+        leaves.append(leaf)
+    return names, leaves, treedef
+
+
+def save_checkpoint(
+    directory,
+    step: int,
+    tree,
+    host_index: int = 0,
+    n_hosts: int = 1,
+    block: bool = True,
+):
+    """Save ``tree``; each host writes leaves sliced on axis 0 where possible."""
+    directory = Path(directory)
+    step_dir = directory / f"step_{step:09d}"
+    tmp_dir = directory / f".tmp_step_{step:09d}_{host_index}"
+    tmp_dir.mkdir(parents=True, exist_ok=True)
+    step_dir.mkdir(parents=True, exist_ok=True)
+
+    names, leaves, _ = _flatten_with_names(tree)
+    host_arrays = {}
+    shard_info = {}
+    for name, leaf in zip(names, leaves):
+        arr = np.asarray(leaf)
+        if arr.ndim >= 1 and arr.shape[0] >= n_hosts and arr.shape[0] % n_hosts == 0:
+            per = arr.shape[0] // n_hosts
+            sl = arr[host_index * per : (host_index + 1) * per]
+            shard_info[name] = {"axis": 0, "per_host": per}
+        else:
+            sl = arr if host_index == 0 else np.zeros((0,), arr.dtype)
+            shard_info[name] = {"axis": None, "per_host": None}
+        host_arrays[name] = sl
+
+    def _write():
+        fn = tmp_dir / f"shard_{host_index:05d}.npz"
+        np.savez(fn, **{n.replace("/", "|"): a for n, a in host_arrays.items()})
+        fn.rename(step_dir / f"shard_{host_index:05d}.npz")
+        if host_index == 0:
+            manifest = {
+                "step": step,
+                "n_hosts": n_hosts,
+                "time": time.time(),
+                "leaves": {
+                    n: {
+                        "shape": list(np.asarray(l).shape),
+                        "dtype": str(np.asarray(l).dtype),
+                        **shard_info[n],
+                    }
+                    for n, l in zip(names, leaves)
+                },
+            }
+            mf = tmp_dir / "manifest.json"
+            mf.write_text(json.dumps(manifest, indent=1))
+            mf.rename(step_dir / "manifest.json")
+            marker = tmp_dir / "_COMMITTED"
+            marker.write_text("ok")
+            marker.rename(step_dir / "_COMMITTED")
+        for leftover in tmp_dir.iterdir():
+            leftover.unlink()
+        tmp_dir.rmdir()
+
+    if block:
+        _write()
+        return None
+    t = threading.Thread(target=_write, daemon=True)
+    t.start()
+    return t
+
+
+def latest_step(directory) -> int | None:
+    directory = Path(directory)
+    if not directory.exists():
+        return None
+    steps = [
+        int(p.name.split("_")[1])
+        for p in directory.iterdir()
+        if p.name.startswith("step_") and (p / "_COMMITTED").exists()
+    ]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(directory, step: int, like_tree):
+    """Restore into the structure of ``like_tree`` (elastic: any host count)."""
+    step_dir = Path(directory) / f"step_{step:09d}"
+    manifest = json.loads((step_dir / "manifest.json").read_text())
+    n_hosts = manifest["n_hosts"]
+    shards = [
+        np.load(step_dir / f"shard_{h:05d}.npz") for h in range(n_hosts)
+    ]
+    names, leaves, treedef = _flatten_with_names(like_tree)
+    out = []
+    for name, leaf in zip(names, leaves):
+        info = manifest["leaves"][name]
+        key = name.replace("/", "|")
+        if info["axis"] == 0:
+            arr = np.concatenate([s[key] for s in shards], axis=0)
+        else:
+            arr = shards[0][key]
+        arr = arr.reshape(info["shape"]).astype(info["dtype"])
+        expect = tuple(getattr(leaf, "shape", arr.shape))
+        assert tuple(arr.shape) == expect, f"{name}: {arr.shape} != {expect}"
+        out.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+class CheckpointManager:
+    """Keep-last-k manager with async save and restart discovery."""
+
+    def __init__(self, directory, keep: int = 3, host_index: int = 0, n_hosts: int = 1):
+        self.directory = Path(directory)
+        self.keep = keep
+        self.host_index = host_index
+        self.n_hosts = n_hosts
+        self._pending: threading.Thread | None = None
+
+    def save(self, step: int, tree, block: bool = False):
+        self.wait()
+        self._pending = save_checkpoint(
+            self.directory, step, tree, self.host_index, self.n_hosts, block=block
+        )
+        self._gc()
+
+    def wait(self):
+        if self._pending is not None:
+            self._pending.join()
+            self._pending = None
+
+    def restore_latest(self, like_tree):
+        step = latest_step(self.directory)
+        if step is None:
+            return None, None
+        return step, restore_checkpoint(self.directory, step, like_tree)
+
+    def _gc(self):
+        if self.host_index != 0:
+            return
+        steps = sorted(
+            p
+            for p in self.directory.iterdir()
+            if p.name.startswith("step_") and (p / "_COMMITTED").exists()
+        )
+        for p in steps[: -self.keep]:
+            for f in p.iterdir():
+                f.unlink()
+            p.rmdir()

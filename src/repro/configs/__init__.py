@@ -1,0 +1,55 @@
+"""Architecture registry: ``--arch <id>`` resolves here.
+
+Each module defines ``CONFIG`` (exact assigned configuration) and
+``reduced()`` (a small same-family config for CPU smoke tests).  Input shapes
+are defined in :mod:`repro.configs.shapes`.
+"""
+
+from __future__ import annotations
+
+import importlib
+
+ARCH_IDS = [
+    "mamba2_1p3b",
+    "qwen2_vl_7b",
+    "granite_8b",
+    "minicpm_2b",
+    "minitron_8b",
+    "mistral_large_123b",
+    "phi3p5_moe_42b",
+    "qwen3_moe_30b",
+    "recurrentgemma_9b",
+    "whisper_base",
+]
+
+# external ids (hyphen form) → module names
+ALIASES = {i.replace("_", "-").replace("p", "."): i for i in ARCH_IDS}
+ALIASES.update({i: i for i in ARCH_IDS})
+ALIASES.update(
+    {
+        "mamba2-1.3b": "mamba2_1p3b",
+        "qwen2-vl-7b": "qwen2_vl_7b",
+        "granite-8b": "granite_8b",
+        "minicpm-2b": "minicpm_2b",
+        "minitron-8b": "minitron_8b",
+        "mistral-large-123b": "mistral_large_123b",
+        "phi3.5-moe-42b-a6.6b": "phi3p5_moe_42b",
+        "qwen3-moe-30b-a3b": "qwen3_moe_30b",
+        "recurrentgemma-9b": "recurrentgemma_9b",
+        "whisper-base": "whisper_base",
+    }
+)
+
+
+def get_config(arch: str):
+    mod = importlib.import_module(f"repro.configs.{ALIASES[arch]}")
+    return mod.CONFIG
+
+
+def get_reduced(arch: str):
+    mod = importlib.import_module(f"repro.configs.{ALIASES[arch]}")
+    return mod.reduced()
+
+
+def all_arch_ids():
+    return list(ARCH_IDS)

@@ -1,0 +1,38 @@
+"""mamba2-1.3b — SSD (state-space duality), attention-free.
+[arXiv:2405.21060; unverified]  48L d_model=2048 d_ff=0 vocab=50280 ssm_state=128.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-1.3b",
+    family="ssm",
+    n_layers=48,
+    d_model=2048,
+    n_heads=0,
+    n_kv=0,
+    d_ff=0,
+    vocab=50280,
+    ssm_state=128,
+    ssm_headdim=64,
+    ssm_expand=2,
+    tie_embeddings=True,
+)
+
+
+def reduced():
+    return ModelConfig(
+        name="mamba2-reduced",
+        family="ssm",
+        n_layers=2,
+        d_model=64,
+        n_heads=0,
+        n_kv=0,
+        d_ff=0,
+        vocab=256,
+        ssm_state=16,
+        ssm_headdim=16,
+        ssm_expand=2,
+        ssm_chunk=8,
+        tie_embeddings=True,
+        remat=False,
+    )

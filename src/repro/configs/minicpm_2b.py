@@ -1,0 +1,34 @@
+"""minicpm-2b — llama-like, trained with the WSD schedule (implemented in
+repro.train.optimizer).  [arXiv:2404.06395; hf]
+40L d_model=2304 36H (kv=36, MHA) d_ff=5760 vocab=122753.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="minicpm-2b",
+    family="dense",
+    n_layers=40,
+    d_model=2304,
+    n_heads=36,
+    n_kv=36,
+    d_ff=5760,
+    vocab=122753,
+    tie_embeddings=True,
+)
+
+
+def reduced():
+    return ModelConfig(
+        name="minicpm-reduced",
+        family="dense",
+        n_layers=2,
+        d_model=48,
+        n_heads=6,
+        n_kv=6,
+        d_ff=96,
+        vocab=256,
+        tie_embeddings=True,
+        q_chunk=16,
+        kv_chunk=16,
+        remat=False,
+    )

@@ -1,0 +1,31 @@
+"""minitron-8b — width-pruned nemotron.  [arXiv:2407.14679; hf]
+32L d_model=4096 32H (GQA kv=8) d_ff=16384 vocab=256000.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="minitron-8b",
+    family="dense",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv=8,
+    d_ff=16384,
+    vocab=256000,
+)
+
+
+def reduced():
+    return ModelConfig(
+        name="minitron-reduced",
+        family="dense",
+        n_layers=2,
+        d_model=64,
+        n_heads=4,
+        n_kv=2,
+        d_ff=192,
+        vocab=512,
+        q_chunk=16,
+        kv_chunk=16,
+        remat=False,
+    )

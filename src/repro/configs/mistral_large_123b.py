@@ -1,0 +1,34 @@
+"""mistral-large-123b.  [hf:mistralai/Mistral-Large-Instruct-2407; unverified]
+88L d_model=12288 96H (GQA kv=8) d_ff=28672 vocab=32768, head_dim=128.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mistral-large-123b",
+    family="dense",
+    n_layers=88,
+    d_model=12288,
+    n_heads=96,
+    n_kv=8,
+    d_ff=28672,
+    vocab=32768,
+    head_dim=128,
+    rope_theta=1e6,
+)
+
+
+def reduced():
+    return ModelConfig(
+        name="mistral-large-reduced",
+        family="dense",
+        n_layers=3,
+        d_model=64,
+        n_heads=8,
+        n_kv=2,
+        d_ff=160,
+        vocab=256,
+        head_dim=8,
+        q_chunk=16,
+        kv_chunk=16,
+        remat=False,
+    )

@@ -1,0 +1,35 @@
+"""qwen2-vl-7b — M-RoPE, dynamic-resolution VLM (backbone only; vision
+frontend stubbed to precomputed patch embeddings).  [arXiv:2409.12191; hf]
+28L d_model=3584 28H (GQA kv=4) d_ff=18944 vocab=152064.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-vl-7b",
+    family="vlm",
+    n_layers=28,
+    d_model=3584,
+    n_heads=28,
+    n_kv=4,
+    d_ff=18944,
+    vocab=152064,
+    mrope_sections=(16, 24, 24),
+    rope_theta=1e6,
+)
+
+
+def reduced():
+    return ModelConfig(
+        name="qwen2-vl-reduced",
+        family="vlm",
+        n_layers=2,
+        d_model=64,
+        n_heads=4,
+        n_kv=2,
+        d_ff=128,
+        vocab=256,
+        mrope_sections=(4, 2, 2),
+        q_chunk=16,
+        kv_chunk=16,
+        remat=False,
+    )

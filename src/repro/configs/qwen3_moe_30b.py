@@ -1,0 +1,41 @@
+"""qwen3-moe-30b-a3b — 128 experts, top-8, qk-norm, head_dim=128.
+[hf:Qwen/Qwen3-30B-A3B; hf]
+48L d_model=2048 32H (GQA kv=4) d_ff=768 (per-expert) vocab=151936.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-moe-30b-a3b",
+    family="moe",
+    n_layers=48,
+    d_model=2048,
+    n_heads=32,
+    n_kv=4,
+    d_ff=768,
+    vocab=151936,
+    n_experts=128,
+    top_k=8,
+    head_dim=128,
+    qk_norm=True,
+    rope_theta=1e6,
+)
+
+
+def reduced():
+    return ModelConfig(
+        name="qwen3-moe-reduced",
+        family="moe",
+        n_layers=2,
+        d_model=64,
+        n_heads=4,
+        n_kv=2,
+        d_ff=64,
+        vocab=256,
+        n_experts=8,
+        top_k=2,
+        head_dim=16,
+        qk_norm=True,
+        q_chunk=16,
+        kv_chunk=16,
+        remat=False,
+    )

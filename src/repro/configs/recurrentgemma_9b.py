@@ -1,0 +1,42 @@
+"""recurrentgemma-9b — RG-LRU + local attention, pattern (rglru, rglru, attn).
+[arXiv:2402.19427; unverified]
+38L d_model=4096 16H (MQA kv=1) d_ff=12288 vocab=256000, window=2048.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="recurrentgemma-9b",
+    family="hybrid",
+    n_layers=38,
+    d_model=4096,
+    n_heads=16,
+    n_kv=1,
+    d_ff=12288,
+    vocab=256000,
+    head_dim=256,
+    window=2048,
+    pattern=("rglru", "rglru", "attn"),
+    lru_width=4096,
+    act="gelu",
+)
+
+
+def reduced():
+    return ModelConfig(
+        name="recurrentgemma-reduced",
+        family="hybrid",
+        n_layers=5,
+        d_model=64,
+        n_heads=4,
+        n_kv=1,
+        d_ff=128,
+        vocab=256,
+        head_dim=16,
+        window=32,
+        pattern=("rglru", "rglru", "attn"),
+        lru_width=64,
+        act="gelu",
+        q_chunk=16,
+        kv_chunk=16,
+        remat=False,
+    )

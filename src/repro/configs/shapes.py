@@ -1,0 +1,35 @@
+"""Assigned input-shape set (LM-family: seq_len × global_batch).
+
+``train_*`` lowers train_step; ``prefill_*`` lowers the prefill serve step;
+``decode_*`` / ``long_*`` lower the single-token decode step with a KV cache
+(or recurrent state) of the given context length.  ``long_500k`` requires
+sub-quadratic attention → only SSM/hybrid archs run it (DESIGN.md §6).
+"""
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str  # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", "train", 4_096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32_768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524_288, 1),
+}
+
+# families that can run long_500k (sub-quadratic context handling)
+LONG_OK_FAMILIES = {"ssm", "hybrid"}
+
+
+def applicable_shapes(family: str):
+    out = ["train_4k", "prefill_32k", "decode_32k"]
+    if family in LONG_OK_FAMILIES:
+        out.append("long_500k")
+    return out

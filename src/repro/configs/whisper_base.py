@@ -1,0 +1,40 @@
+"""whisper-base — encoder-decoder; conv frontend stubbed to precomputed frame
+embeddings (input_specs).  [arXiv:2212.04356; unverified]
+6L enc + 6L dec, d_model=512 8H d_ff=2048 vocab=51865.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-base",
+    family="encdec",
+    n_layers=6,
+    encoder_layers=6,
+    enc_seq=1500,
+    d_model=512,
+    n_heads=8,
+    n_kv=8,
+    d_ff=2048,
+    vocab=51865,
+    act="gelu",
+    scan_layers=False,
+)
+
+
+def reduced():
+    return ModelConfig(
+        name="whisper-reduced",
+        family="encdec",
+        n_layers=2,
+        encoder_layers=2,
+        enc_seq=32,
+        d_model=64,
+        n_heads=4,
+        n_kv=4,
+        d_ff=128,
+        vocab=256,
+        act="gelu",
+        scan_layers=False,
+        q_chunk=16,
+        kv_chunk=16,
+        remat=False,
+    )

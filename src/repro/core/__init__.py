@@ -1,0 +1,27 @@
+# The paper's primary contribution: the delayed-asynchronous iterative
+# engine (sync / async / delayed-δ hybrid execution of pull-style graph
+# algorithms) plus its analysis tools (δ cost model, access matrices).
+from repro.core.engine import (
+    MIN_CHUNK,
+    DeviceSchedule,
+    EngineResult,
+    make_schedule,
+    round_fn,
+    run_host,
+    run_jit,
+)
+from repro.core.semiring import INT_INF, MIN_PLUS, PLUS_TIMES, Semiring
+
+__all__ = [
+    "MIN_CHUNK",
+    "DeviceSchedule",
+    "EngineResult",
+    "make_schedule",
+    "round_fn",
+    "run_host",
+    "run_jit",
+    "INT_INF",
+    "MIN_PLUS",
+    "PLUS_TIMES",
+    "Semiring",
+]

@@ -1,0 +1,252 @@
+"""The delayed-asynchronous iterative engine (the paper's contribution).
+
+One *round* processes every vertex once, in ``S`` **commit steps**.  Commit
+step ``s`` computes, for every worker in parallel, the pull-update of chunk
+``s`` (δ rows) of that worker's block reading the *current committed* frontier,
+then publishes all workers' chunks to the frontier simultaneously.  This is a
+deterministic block Gauss–Seidel schedule with commit period δ — the TPU-native
+semantics of the paper's thread-local buffer flush (DESIGN.md §2, §5):
+
+* ``S == 1``   (δ = block size)  → exact Jacobi          = paper's *synchronous*
+* ``S == B/δ_min`` (finest δ)    → finest block GS       = paper's *asynchronous*
+* in between                     → *delayed asynchronous* (the hybrid)
+
+The engine is mode-free: the mode IS the schedule's δ.  Counters for flushes
+and flush bytes (the TPU analogue of cache-line invalidation traffic) are
+reported on every run.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.semiring import Semiring
+from repro.graphs.formats import CSRGraph, StripeSchedule, build_stripe_schedule
+from repro.graphs.partition import balanced_blocks
+
+__all__ = [
+    "EngineResult",
+    "DeviceSchedule",
+    "make_schedule",
+    "round_fn",
+    "run_host",
+    "run_jit",
+    "MIN_CHUNK",
+]
+
+# Finest vectorizable commit granularity (DESIGN.md §2): the TPU analogue of
+# the paper's one-cache-line δ=16.  One VPU lane row = 128 elements.
+MIN_CHUNK = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceSchedule:
+    """StripeSchedule moved to device (jnp arrays) + metadata."""
+
+    n: int
+    P: int
+    delta: int
+    S: int
+    M: int
+    src: jnp.ndarray  # (S, P, M) int32
+    val: jnp.ndarray  # (S, P, M)
+    dst_local: jnp.ndarray  # (S, P, M) int32
+    rows: jnp.ndarray  # (S, P, delta) int32
+    edges: int
+    padding_overhead: float
+
+    @property
+    def n_slots(self) -> int:
+        return self.n + 1
+
+
+def make_schedule(
+    graph: CSRGraph,
+    P: int,
+    delta: int | None,
+    semiring: Semiring,
+    mode: str = "delayed",
+    min_chunk: int = MIN_CHUNK,
+) -> DeviceSchedule:
+    """Build the device schedule for ``mode`` ∈ {sync, async, delayed}.
+
+    * ``sync``    → δ = max block size (one commit per round).
+    * ``async``   → δ = ``min_chunk`` (finest vectorizable commit).
+    * ``delayed`` → δ as given (the paper's tunable).
+    """
+    bounds = balanced_blocks(graph, P)
+    B = int(np.diff(bounds).max())
+    if mode == "sync":
+        delta_eff = B
+    elif mode == "async":
+        delta_eff = min(min_chunk, B)
+    elif mode == "delayed":
+        assert delta is not None, "delayed mode needs δ"
+        delta_eff = int(min(max(delta, 1), B))
+    else:
+        raise ValueError(f"unknown mode {mode!r}")
+    host = build_stripe_schedule(graph, bounds, delta_eff, semiring.pad_edge_val)
+    return DeviceSchedule(
+        n=host.n,
+        P=host.P,
+        delta=host.delta,
+        S=host.S,
+        M=host.M,
+        src=jnp.asarray(host.src),
+        val=jnp.asarray(host.val),
+        dst_local=jnp.asarray(host.dst_local),
+        rows=jnp.asarray(host.rows),
+        edges=host.edges,
+        padding_overhead=host.padding_overhead,
+    )
+
+
+def _commit_step(s, x_ext, sched: DeviceSchedule, semiring: Semiring, row_update):
+    """One commit step: chunk-SpMV for all workers + publish."""
+    P, delta = sched.P, sched.delta
+    src_s = jax.lax.dynamic_index_in_dim(sched.src, s, 0, keepdims=False)
+    val_s = jax.lax.dynamic_index_in_dim(sched.val, s, 0, keepdims=False)
+    dst_s = jax.lax.dynamic_index_in_dim(sched.dst_local, s, 0, keepdims=False)
+    rows_s = jax.lax.dynamic_index_in_dim(sched.rows, s, 0, keepdims=False)
+
+    gathered = x_ext[src_s]  # (P, M) — reads the committed frontier
+    contrib = semiring.mul(gathered, val_s)  # (P, M)
+    # Per-worker segment-⊕ into δ + 1 slots (last = padding dump).
+    seg = dst_s + (jnp.arange(P, dtype=jnp.int32) * (delta + 1))[:, None]
+    reduced = semiring.segment_reduce(
+        contrib.reshape(-1), seg.reshape(-1), P * (delta + 1)
+    ).reshape(P, delta + 1)[:, :delta]
+    old = x_ext[rows_s]  # (P, delta)
+    new = row_update(old, reduced, rows_s)
+    # Publish: the flush.  Padding rows all point at the dump slot (index n).
+    return x_ext.at[rows_s.reshape(-1)].set(
+        new.reshape(-1).astype(x_ext.dtype), mode="drop", unique_indices=False
+    )
+
+
+def round_fn(sched: DeviceSchedule, semiring: Semiring, row_update) -> Callable:
+    """Return jit-able ``x_ext -> x_ext`` running one full round (S commits)."""
+
+    def body(x_ext):
+        step = partial(
+            _commit_step, sched=sched, semiring=semiring, row_update=row_update
+        )
+        return jax.lax.fori_loop(0, sched.S, step, x_ext)
+
+    return body
+
+
+@dataclasses.dataclass
+class EngineResult:
+    x: np.ndarray  # (n,) converged vertex values
+    rounds: int
+    converged: bool
+    flushes: int  # total commit collectives executed
+    flush_bytes: int  # total bytes published to the global store
+    residuals: list  # per-round convergence residuals
+    round_times_s: list  # host-measured wall time per round (jitted round)
+    delta: int
+    P: int
+
+    @property
+    def avg_round_time_s(self) -> float:
+        # Skip round 0 (compile) when more rounds exist.
+        ts = self.round_times_s[1:] or self.round_times_s
+        return float(np.mean(ts)) if ts else 0.0
+
+
+def run_host(
+    sched: DeviceSchedule,
+    semiring: Semiring,
+    x0: np.ndarray,
+    row_update: Callable,
+    residual_fn: Callable,
+    tol: float,
+    max_rounds: int = 1000,
+) -> EngineResult:
+    """Host-driven loop: one jitted round per iteration, instrumented.
+
+    ``residual_fn(x_prev, x_new) -> scalar``; converged when ``residual ≤ tol``.
+    Used by benchmarks (per-round times/residuals like the paper's Table I).
+    """
+    x_ext = jnp.concatenate(
+        [jnp.asarray(x0, dtype=semiring.dtype), jnp.asarray([semiring.zero])]
+    )
+    rnd = jax.jit(round_fn(sched, semiring, row_update))
+    residuals, times = [], []
+    converged = False
+    rounds = 0
+    for rounds in range(1, max_rounds + 1):
+        t0 = time.perf_counter()
+        x_new = rnd(x_ext)
+        x_new.block_until_ready()
+        times.append(time.perf_counter() - t0)
+        res = float(residual_fn(x_ext[:-1], x_new[:-1]))
+        residuals.append(res)
+        x_ext = x_new
+        if res <= tol:
+            converged = True
+            break
+    bytes_per = np.dtype(semiring.dtype).itemsize
+    return EngineResult(
+        x=np.asarray(x_ext[:-1]),
+        rounds=rounds,
+        converged=converged,
+        flushes=rounds * sched.S,
+        flush_bytes=rounds * sched.S * sched.P * sched.delta * bytes_per,
+        residuals=residuals,
+        round_times_s=times,
+        delta=sched.delta,
+        P=sched.P,
+    )
+
+
+def run_jit(
+    sched: DeviceSchedule,
+    semiring: Semiring,
+    x0: jnp.ndarray,
+    row_update: Callable,
+    residual_fn: Callable,
+    tol: float,
+    max_rounds: int = 1000,
+) -> EngineResult:
+    """Fully fused device loop (``lax.while_loop``) — production path."""
+    rnd = round_fn(sched, semiring, row_update)
+
+    def cond(carry):
+        _, res, rounds, converged = carry
+        return jnp.logical_and(rounds < max_rounds, jnp.logical_not(converged))
+
+    def body(carry):
+        x_ext, _, rounds, _ = carry
+        x_new = rnd(x_ext)
+        res = residual_fn(x_ext[:-1], x_new[:-1]).astype(jnp.float32)
+        return x_new, res, rounds + 1, res <= tol
+
+    x_ext = jnp.concatenate(
+        [jnp.asarray(x0, dtype=semiring.dtype), jnp.asarray([semiring.zero])]
+    )
+    init = (x_ext, jnp.asarray(np.inf, jnp.float32), jnp.asarray(0), jnp.asarray(False))
+    x_ext, res, rounds, converged = jax.jit(
+        lambda c: jax.lax.while_loop(cond, body, c)
+    )(init)
+    rounds = int(rounds)
+    bytes_per = np.dtype(semiring.dtype).itemsize
+    return EngineResult(
+        x=np.asarray(x_ext[:-1]),
+        rounds=rounds,
+        converged=bool(converged),
+        flushes=rounds * sched.S,
+        flush_bytes=rounds * sched.S * sched.P * sched.delta * bytes_per,
+        residuals=[float(res)],
+        round_times_s=[],
+        delta=sched.delta,
+        P=sched.P,
+    )

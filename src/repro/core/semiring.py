@@ -1,0 +1,66 @@
+"""Semiring algebra for pull-style iterative graph algorithms.
+
+A pull update is ``x'[u] = row_update(x[u], ⊕_{v ∈ in(u)} x[v] ⊗ A[v, u])``.
+The semiring supplies ⊕ (as a segment reduction), ⊗, the ⊕-identity, and the
+*annihilating edge value* used for schedule padding (``x ⊗ pad = ⊕-identity``
+for every ``x``), so padded edges are no-ops.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["Semiring", "PLUS_TIMES", "MIN_PLUS", "INT_INF", "min_plus_int32"]
+
+# Largest "infinity" such that INF ⊗ INF never overflows int32 under min-plus.
+INT_INF = np.int32(2**30 - 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class Semiring:
+    name: str
+    dtype: np.dtype
+    zero: object  # ⊕ identity
+    pad_edge_val: object  # annihilator: x ⊗ pad == zero
+    mul: Callable  # ⊗(frontier_vals, edge_vals) -> contributions
+    segment_reduce: Callable  # ⊕ over segments: (vals, seg_ids, num) -> out
+    add: Callable  # elementwise ⊕ (for combining with old values)
+
+
+def _segment_sum(vals, seg_ids, num):
+    return jax.ops.segment_sum(vals, seg_ids, num_segments=num)
+
+
+def _segment_min(vals, seg_ids, num):
+    return jax.ops.segment_min(vals, seg_ids, num_segments=num)
+
+
+PLUS_TIMES = Semiring(
+    name="plus_times",
+    dtype=np.dtype(np.float32),
+    zero=np.float32(0.0),
+    pad_edge_val=np.float32(0.0),
+    mul=lambda x, a: x * a,
+    segment_reduce=_segment_sum,
+    add=lambda a, b: a + b,
+)
+
+# min-plus over saturating int32 (paper's SSSP uses 32-bit integers).
+MIN_PLUS = Semiring(
+    name="min_plus",
+    dtype=np.dtype(np.int32),
+    zero=INT_INF,
+    pad_edge_val=INT_INF,
+    mul=lambda x, a: jnp.minimum(x + a, INT_INF),
+    segment_reduce=_segment_min,
+    add=jnp.minimum,
+)
+
+
+def min_plus_int32() -> Semiring:
+    return MIN_PLUS

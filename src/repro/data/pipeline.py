@@ -1,0 +1,110 @@
+"""Deterministic, shard-aware data pipeline.
+
+Production posture without external deps:
+
+* ``SyntheticLM`` — deterministic counter-based token stream (feeds the same
+  global batch to any device layout: batch index → PRNG fold, so restarts and
+  elastic re-shards reproduce the exact stream; no host state).
+* ``FileBackedLM`` — memory-mapped token file with epoch shuffling by
+  bijective index permutation (Feistel-ish multiplicative hash), sharded by
+  (host, step) without coordination.
+
+Both yield ``{"tokens": (B, S) int32, "labels": (B, S) int32}`` with labels =
+next-token shift; the final position is masked (-1).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+__all__ = ["SyntheticLM", "FileBackedLM", "make_vlm_batch", "make_encdec_batch"]
+
+
+def _hash_u64(x: np.ndarray) -> np.ndarray:
+    x = x.astype(np.uint64)
+    h = np.uint64(0x9E3779B97F4A7C15)
+    x = (x ^ (x >> np.uint64(30))) * np.uint64(0xBF58476D1CE4E5B9)
+    x = (x ^ (x >> np.uint64(27))) * np.uint64(0x94D049BB133111EB)
+    return x ^ (x >> np.uint64(31)) ^ h
+
+
+@dataclasses.dataclass(frozen=True)
+class SyntheticLM:
+    vocab: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+
+    def batch(self, step: int) -> dict:
+        """Global batch for ``step`` — identical regardless of sharding."""
+        b = np.arange(self.global_batch, dtype=np.uint64)[:, None]
+        s = np.arange(self.seq_len + 1, dtype=np.uint64)[None, :]
+        raw = _hash_u64(
+            b * np.uint64(1_000_003)
+            + s
+            + np.uint64(step) * np.uint64(0x5DEECE66D)
+            + np.uint64(self.seed)
+        )
+        toks = (raw % np.uint64(self.vocab)).astype(np.int32)
+        tokens, labels = toks[:, :-1], toks[:, 1:].copy()
+        labels[:, -1] = -1
+        return {"tokens": tokens, "labels": labels}
+
+    def shard(self, step: int, host_index: int, n_hosts: int) -> dict:
+        full = self.batch(step)
+        lo = self.global_batch * host_index // n_hosts
+        hi = self.global_batch * (host_index + 1) // n_hosts
+        return {k: v[lo:hi] for k, v in full.items()}
+
+
+@dataclasses.dataclass
+class FileBackedLM:
+    path: str
+    vocab: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+
+    def __post_init__(self):
+        self._data = np.memmap(self.path, dtype=np.int32, mode="r")
+        self._n_seqs = (self._data.shape[0] - 1) // self.seq_len
+
+    def _perm(self, idx: np.ndarray, epoch: int) -> np.ndarray:
+        # bijective-enough shuffle: multiplicative hash mod n_seqs
+        return (
+            (idx.astype(np.uint64) * np.uint64(2654435761) + np.uint64(epoch * 40503))
+            % np.uint64(self._n_seqs)
+        ).astype(np.int64)
+
+    def batch(self, step: int) -> dict:
+        start = step * self.global_batch
+        epoch = start // self._n_seqs
+        idx = (start + np.arange(self.global_batch)) % self._n_seqs
+        idx = self._perm(idx, epoch)
+        offs = idx[:, None] * self.seq_len + np.arange(self.seq_len + 1)[None, :]
+        toks = self._data[offs].astype(np.int32)
+        tokens, labels = toks[:, :-1], toks[:, 1:].copy()
+        labels[:, -1] = -1
+        return {"tokens": tokens, "labels": labels}
+
+
+def make_vlm_batch(base: dict, d_model: int, seed: int = 0) -> dict:
+    """VLM stub: precomputed patch/token embeddings replace token ids."""
+    tokens = base["tokens"]
+    B, S = tokens.shape
+    rng = np.random.default_rng(seed + int(tokens[0, 0]))
+    embeds = rng.standard_normal((B, S, d_model), dtype=np.float32) * 0.02
+    positions = np.broadcast_to(np.arange(S, dtype=np.int32), (B, S))
+    positions = np.broadcast_to(positions[:, None, :], (B, 3, S)).copy()
+    return {"embeds": embeds, "positions": positions, "labels": base["labels"]}
+
+
+def make_encdec_batch(base: dict, d_model: int, enc_seq: int, seed: int = 0) -> dict:
+    """Whisper stub: precomputed conv-frontend frame embeddings."""
+    tokens = base["tokens"]
+    B = tokens.shape[0]
+    rng = np.random.default_rng(seed + int(tokens[0, 0]))
+    frames = rng.standard_normal((B, enc_seq, d_model), dtype=np.float32) * 0.02
+    return {"tokens": tokens, "frames": frames, "labels": base["labels"]}

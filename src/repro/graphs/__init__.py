@@ -1,0 +1,12 @@
+from repro.graphs.formats import CSRGraph, StripeSchedule, build_stripe_schedule
+from repro.graphs.generators import make_graph, GRAPH_GENERATORS
+from repro.graphs.partition import balanced_blocks
+
+__all__ = [
+    "CSRGraph",
+    "StripeSchedule",
+    "build_stripe_schedule",
+    "make_graph",
+    "GRAPH_GENERATORS",
+    "balanced_blocks",
+]

@@ -1,0 +1,63 @@
+"""Pallas TPU kernel: fused delayed-async inner loop (beyond-paper fusion).
+
+One kernel instance owns a worker's whole vertex block and executes ALL of
+its δ-chunks, committing each chunk into the VMEM-resident frontier copy
+before computing the next (block Gauss–Seidel).  On the CPU of the paper this
+round-trips through the cache hierarchy between chunks; here chunk compute,
+buffer, and flush all stay in VMEM — the on-chip realisation of the paper's
+thread-local delay buffer.  HBM sees exactly one read of the edge tiles and
+one write of the final frontier.
+
+Grid = (n_chunks,) with ``x_ext`` aliased in/out (input_output_aliasing), so
+grid step c reads the frontier state committed by steps < c —
+``dimension_semantics=("arbitrary",)`` pins the sequential order on TPU.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(tele_ref, idx_ref, val_ref, rows_ref, x_in_ref, x_ref):
+    # x_ref is the aliased frontier: initialised from x_in, persistent across
+    # the (sequential) grid steps — reads here see every prior chunk's commit.
+    del x_in_ref
+    idx = idx_ref[0]  # (delta, max_deg)
+    val = val_ref[0]
+    rows = rows_ref[0]  # (delta,)
+    gathered = x_ref[idx]
+    red = jnp.sum(gathered * val, axis=1)  # ⊕ = +, ⊗ = × (PageRank)
+    new = tele_ref[0] + red
+    # the flush: commit this δ-chunk into the shared frontier copy
+    x_ref[rows] = new.astype(x_ref.dtype)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def delayed_block_pagerank(x_ext, idx, val, rows, teleport, *, interpret: bool = True):
+    """Run one worker round: all δ-chunks with in-VMEM commits.
+
+    x_ext (n_slots,) f32 — frontier + dump slot (aliased output);
+    idx/val (n_chunks, delta, max_deg); rows (n_chunks, delta) int32.
+    """
+    n_chunks, delta, max_deg = idx.shape
+    tele = jnp.full((1,), teleport, x_ext.dtype)
+    grid = (n_chunks,)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda c: (0,)),
+            pl.BlockSpec((1, delta, max_deg), lambda c: (c, 0, 0)),
+            pl.BlockSpec((1, delta, max_deg), lambda c: (c, 0, 0)),
+            pl.BlockSpec((1, delta), lambda c: (c, 0)),
+            pl.BlockSpec(x_ext.shape, lambda c: (0,)),
+        ],
+        out_specs=pl.BlockSpec(x_ext.shape, lambda c: (0,)),
+        out_shape=jax.ShapeDtypeStruct(x_ext.shape, x_ext.dtype),
+        input_output_aliases={4: 0},  # x_ext in ↔ out: commits are visible
+        interpret=interpret,
+    )(tele, idx, val, rows, x_ext)

@@ -1,0 +1,57 @@
+"""Dispatch wrappers: Pallas kernel on TPU, interpret-mode or XLA fallback
+elsewhere.  Public entry points used by the engine and benchmarks."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref
+from repro.kernels.delayed_block import delayed_block_pagerank
+from repro.kernels.spmv_ell import spmv_ell
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def spmv(x_ext, idx, val, semiring: str = "plus_times", use_kernel: bool = True):
+    """Semiring SpMV; Pallas when requested (compiled on TPU, interpreted on
+    CPU), pure-jnp otherwise."""
+    if use_kernel:
+        return spmv_ell(x_ext, idx, val, semiring=semiring, interpret=not _on_tpu())
+    return ref.spmv_ell_ref(x_ext, idx, val, semiring)
+
+
+def delayed_round(x_ext, idx, val, rows, teleport, use_kernel: bool = True):
+    """Fused delayed-async PageRank round for one worker block."""
+    if use_kernel:
+        return delayed_block_pagerank(
+            x_ext, idx, val, rows, teleport, interpret=not _on_tpu()
+        )
+    return ref.delayed_block_ref(
+        x_ext, idx, val, rows, teleport, n_chunks=idx.shape[0]
+    )
+
+
+def ell_from_csr(graph, rows_slice=None, lane_pad: int = 128):
+    """Build padded ELL (idx, val) from a CSRGraph (host-side, numpy).
+
+    Padding entries point at the dump slot with annihilating values so the
+    kernels need no masks.  ``max_deg`` is padded to a lane multiple.
+    """
+    indptr, indices, values = graph.indptr, graph.indices, graph.values
+    n = graph.n
+    rows = np.arange(n) if rows_slice is None else rows_slice
+    degs = indptr[rows + 1] - indptr[rows]
+    max_deg = int(max(degs.max(), 1))
+    max_deg = -(-max_deg // lane_pad) * lane_pad
+    idx = np.zeros((len(rows), max_deg), np.int32)
+    pad_val = np.float32(0.0) if values.dtype.kind == "f" else np.int32(2**30 - 1)
+    val = np.full((len(rows), max_deg), pad_val, values.dtype)
+    for i, r in enumerate(rows):
+        e0, e1 = indptr[r], indptr[r + 1]
+        idx[i, : e1 - e0] = indices[e0:e1]
+        val[i, : e1 - e0] = values[e0:e1]
+    return idx, val

@@ -1,0 +1,40 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose reference)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def spmv_ell_ref(x_ext, idx, val, semiring: str):
+    """Semiring SpMV over ELL rows.
+
+    x_ext: (n_slots,) frontier (+ dump slot); idx: (rows, max_deg) int32
+    (padding points anywhere, val annihilates); val: (rows, max_deg).
+    Returns (rows,) = ⊕_j x_ext[idx[r, j]] ⊗ val[r, j].
+    """
+    gathered = x_ext[idx]  # (rows, max_deg)
+    if semiring == "plus_times":
+        return jnp.sum(gathered * val, axis=1)
+    if semiring == "min_plus":
+        return jnp.min(
+            jnp.minimum(gathered.astype(jnp.int64) + val.astype(jnp.int64), 2**30 - 1),
+            axis=1,
+        ).astype(val.dtype)
+    raise ValueError(semiring)
+
+
+def delayed_block_ref(x_ext, idx, val, rows, teleport, n_chunks, semiring="plus_times"):
+    """Oracle for the fused delayed-async PageRank block kernel.
+
+    Processes ``n_chunks`` δ-chunks sequentially; chunk c reads the frontier
+    *including* all previously committed chunks (block Gauss–Seidel).
+
+    idx/val: (n_chunks, delta, max_deg); rows: (n_chunks, delta) int32 row
+    ids (dump = len(x_ext) - 1).
+    """
+    for c in range(n_chunks):
+        red = spmv_ell_ref(x_ext, idx[c], val[c], semiring)
+        new = teleport + red
+        x_ext = x_ext.at[rows[c]].set(new.astype(x_ext.dtype), mode="drop")
+    return x_ext

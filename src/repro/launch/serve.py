@@ -1,0 +1,73 @@
+"""Serving driver: batched prefill + decode loop (greedy) with KV/state cache.
+
+Example::
+
+    PYTHONPATH=src python -m repro.launch.serve --arch mamba2-1.3b --reduced \\
+        --batch 4 --prompt-len 32 --gen 16
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, get_reduced
+from repro.models import decode_step, init_params, prefill
+from repro.models.lm import pad_cache
+
+
+def generate(cfg, params, prompt_tokens, gen_len: int, frames=None):
+    """Greedy generation; returns (B, gen_len) int32."""
+    B, S = prompt_tokens.shape
+    batch = {"tokens": jnp.asarray(prompt_tokens)}
+    if cfg.family == "encdec":
+        batch["frames"] = frames
+    logits, cache = jax.jit(lambda b: prefill(params, cfg, b))(batch)
+    cache = pad_cache(cfg, cache, S + gen_len)
+    dstep = jax.jit(lambda c, t: decode_step(params, cfg, c, t))
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+    out = [tok]
+    for _ in range(gen_len - 1):
+        logits, cache = dstep(cache, tok)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+        out.append(tok)
+    return jnp.concatenate(out, axis=1)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
+    assert cfg.family != "vlm", "vlm serving needs precomputed embeds; use examples/"
+    key = jax.random.PRNGKey(args.seed)
+    params = init_params(cfg, key)
+    rng = np.random.default_rng(args.seed)
+    prompts = rng.integers(0, cfg.vocab, (args.batch, args.prompt_len)).astype(np.int32)
+    frames = None
+    if cfg.family == "encdec":
+        frames = jnp.asarray(
+            rng.standard_normal((args.batch, cfg.enc_seq, cfg.d_model)) * 0.02,
+            jnp.dtype(cfg.dtype),
+        )
+    t0 = time.time()
+    toks = generate(cfg, params, prompts, args.gen, frames=frames)
+    dt = time.time() - t0
+    print(f"generated {toks.shape} in {dt:.2f}s "
+          f"({args.batch * args.gen / dt:.1f} tok/s incl. compile)")
+    print("first sequence:", np.asarray(toks[0]))
+    return toks
+
+
+if __name__ == "__main__":
+    main()

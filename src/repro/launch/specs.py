@@ -1,0 +1,111 @@
+"""ShapeDtypeStruct input stand-ins + shardings for every (arch × shape) cell.
+
+``input_specs`` returns weak-type-correct, shardable stand-ins — no device
+allocation — for the function each shape kind lowers:
+
+* train  → ``train_step(state, batch)``
+* prefill→ ``prefill_step(params, batch)``
+* decode → ``decode_step(params, cache, tokens)``
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.shapes import ShapeSpec
+from repro.models.config import ModelConfig
+from repro.models.lm import init_cache_specs
+
+F32 = jnp.float32
+SDS = jax.ShapeDtypeStruct
+
+
+def _sds_tree(tree):
+    return jax.tree.map(
+        lambda x: SDS(x.shape, x.dtype), tree, is_leaf=lambda x: hasattr(x, "shape")
+    )
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeSpec, with_labels: bool):
+    """Batch ShapeDtypeStructs (+ PartitionSpecs) for train/prefill."""
+    B, S = shape.global_batch, shape.seq_len
+    dtype = jnp.dtype(cfg.dtype)
+    specs, shards = {}, {}
+    if cfg.family == "vlm":
+        specs["embeds"] = SDS((B, S, cfg.d_model), dtype)
+        shards["embeds"] = P(("pod", "data"), None, None)
+        specs["positions"] = SDS((B, 3, S), jnp.int32)
+        shards["positions"] = P(("pod", "data"), None, None)
+    else:
+        specs["tokens"] = SDS((B, S), jnp.int32)
+        shards["tokens"] = P(("pod", "data"), None)
+    if cfg.family == "encdec":
+        specs["frames"] = SDS((B, cfg.enc_seq, cfg.d_model), dtype)
+        shards["frames"] = P(("pod", "data"), None, None)
+    if with_labels:
+        specs["labels"] = SDS((B, S), jnp.int32)
+        shards["labels"] = P(("pod", "data"), None)
+    return specs, shards
+
+
+def cache_shardings(cfg: ModelConfig, cache_specs, rules) -> dict:
+    """PartitionSpecs mirroring the cache pytree."""
+    batch_ax = rules.mapping.get("cache_batch")
+    kv_ax = rules.mapping.get("kv_heads")
+    seq_ax = rules.mapping.get("cache_seq")
+
+    def spec_for(kind, leaf_shape):
+        if kind == "attn":  # (B, S, Hkv, hd) kv, or (B, S, Hkv) int8 scales
+            if len(leaf_shape) == 3:
+                return P(batch_ax, seq_ax, kv_ax)
+            return P(batch_ax, seq_ax, kv_ax, None)
+        if kind == "ssm":
+            if len(leaf_shape) == 4:  # (B, H, P, N)
+                return P(batch_ax, kv_ax, None, None)
+            return P(batch_ax, None, None)  # conv (B, cw-1, C)
+        if kind == "rglru":
+            if len(leaf_shape) == 2:  # (B, W)
+                return P(batch_ax, kv_ax)
+            return P(batch_ax, None, None)
+        return P(*([None] * len(leaf_shape)))
+
+    layers = []
+    for kind, lc in zip(cfg.layer_kinds, cache_specs["layers"]):
+        layers.append(
+            jax.tree.map(
+                lambda leaf: spec_for(kind, leaf.shape),
+                lc,
+                is_leaf=lambda x: isinstance(x, SDS),
+            )
+        )
+    out = {"layers": layers, "cur_len": P(batch_ax)}
+    if "enc" in cache_specs:
+        out["enc"] = P(batch_ax, None, None)
+    return out
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec, rules):
+    """(kind, arg-specs tuple, arg-shardings tuple) for the lowered function."""
+    if shape.kind == "train":
+        specs, shards = batch_specs(cfg, shape, with_labels=True)
+        return "train", (specs,), (shards,)
+    if shape.kind == "prefill":
+        specs, shards = batch_specs(cfg, shape, with_labels=False)
+        return "prefill", (specs,), (shards,)
+    if shape.kind == "decode":
+        B = shape.global_batch
+        dtype = jnp.dtype(cfg.dtype)
+        cache = init_cache_specs(cfg, B, shape.seq_len, dtype)
+        cache_sh = cache_shardings(cfg, cache, rules)
+        batch_ax = rules.mapping.get("cache_batch")
+        if cfg.family == "vlm":
+            tok = SDS((B, 1, cfg.d_model), dtype)
+            tok_sh = P(batch_ax, None, None)
+        else:
+            tok = SDS((B, 1), jnp.int32)
+            tok_sh = P(batch_ax, None)
+        return "decode", (cache, tok), (cache_sh, tok_sh)
+    raise ValueError(shape.kind)

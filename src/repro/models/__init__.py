@@ -1,0 +1,17 @@
+from repro.models.config import ModelConfig
+from repro.models.lm import (
+    decode_step,
+    init_cache_specs,
+    init_params,
+    prefill,
+    train_loss,
+)
+
+__all__ = [
+    "ModelConfig",
+    "decode_step",
+    "init_cache_specs",
+    "init_params",
+    "prefill",
+    "train_loss",
+]

@@ -1,0 +1,117 @@
+"""Unified model configuration for the architecture zoo."""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str  # dense | moe | ssm | hybrid | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0  # 0 → d_model // n_heads
+
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+
+    # SSM (mamba2 / SSD)
+    ssm_state: int = 0
+    ssm_headdim: int = 64
+    ssm_expand: int = 2
+    ssm_chunk: int = 256
+    conv_width: int = 4
+
+    # hybrid (recurrentgemma)
+    window: int = 0  # local attention window (0 → global)
+    pattern: tuple = ()  # per-layer block kinds, cycled; () → all "attn"
+    lru_width: int = 0  # 0 → d_model
+
+    # VLM
+    mrope_sections: tuple = ()  # e.g. (16, 24, 24) over head_dim // 2
+
+    # encoder-decoder
+    encoder_layers: int = 0
+    enc_seq: int = 1500  # precomputed frame embeddings (frontend stub)
+
+    # common
+    rope_theta: float = 1e4
+    tie_embeddings: bool = False
+    norm_eps: float = 1e-5
+    act: str = "silu"
+    qk_norm: bool = False
+    dtype: str = "bfloat16"
+    remat: bool = True
+    scan_layers: bool = True
+    q_chunk: int = 512
+    kv_chunk: int = 1024
+    # causal attention schedule: "masked" computes all kv chunks with a mask
+    # (baseline), "banded" skips fully-masked kv chunks (see §Perf hillclimb)
+    attn_schedule: str = "banded"
+    # §Perf: store the decode KV cache in int8 with per-(token, kv-head)
+    # scales — halves the dominant memory term of decode cells
+    kv_quant_int8: bool = False
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or (self.d_model // max(self.n_heads, 1))
+
+    @property
+    def d_inner(self) -> int:  # mamba2
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_headdim
+
+    @property
+    def layer_kinds(self) -> tuple:
+        if self.family == "ssm":
+            return tuple("ssm" for _ in range(self.n_layers))
+        if self.pattern:
+            reps = -(-self.n_layers // len(self.pattern))
+            return (self.pattern * reps)[: self.n_layers]
+        return tuple("attn" for _ in range(self.n_layers))
+
+    def param_count(self) -> int:
+        """Total parameters N (embedding included once if tied)."""
+        d, ff, V, L = self.d_model, self.d_ff, self.vocab, self.n_layers
+        hd, Hq, Hkv = self.hd, self.n_heads, self.n_kv
+        total = V * d * (1 if self.tie_embeddings else 2)
+        attn = d * hd * Hq + 2 * d * hd * Hkv + hd * Hq * d
+        mlp = 3 * d * ff
+        if self.family == "moe":
+            mlp = self.n_experts * 3 * d * ff + d * self.n_experts
+        ssm = 0
+        if self.family == "ssm":
+            din, H, N = self.d_inner, self.ssm_heads, self.ssm_state
+            ssm = d * (2 * din + 2 * N + H) + din * d + 3 * H  # in/out proj + heads
+        per_layer = 0
+        for kind in self.layer_kinds:
+            if kind == "attn":
+                per_layer += attn + mlp
+            elif kind == "rglru":
+                w = self.lru_width or d
+                per_layer += 2 * d * w + w * d + 3 * w + mlp  # gates + proj + lru
+            elif kind == "ssm":
+                per_layer += ssm
+        total += per_layer + 2 * d * L  # norms
+        if self.encoder_layers:
+            total += self.encoder_layers * (attn + mlp)
+        return int(total)
+
+    def active_param_count(self) -> int:
+        """N_active for MoE (top-k experts per token), else N."""
+        if self.family != "moe":
+            return self.param_count()
+        d, ff = self.d_model, self.d_ff
+        dense_mlp = self.top_k * 3 * d * ff + d * self.n_experts
+        full_mlp = self.n_experts * 3 * d * ff + d * self.n_experts
+        return self.param_count() - self.n_layers * (full_mlp - dense_mlp)

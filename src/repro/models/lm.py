@@ -1,0 +1,542 @@
+"""Unified language model: init / train / prefill / decode for every family.
+
+One assembly covers the whole zoo via per-layer *kinds* ("attn", "ssm",
+"rglru") taken from ``cfg.layer_kinds``:
+
+* homogeneous stacks (dense / moe / vlm / ssm) scan over a (L, …) stacked
+  param tree (fast compiles at 88 layers);
+* heterogeneous stacks (recurrentgemma's rglru/rglru/attn pattern) scan over
+  *superlayers* (one pattern period) with any remainder unrolled;
+* whisper (enc-dec) unrolls its 6+6 layers and adds cross-attention.
+
+Decode paths are unrolled (small graphs) and operate on explicit cache
+pytrees so the serve step is a pure function ``(params, cache, tokens) →
+(logits, cache)`` — the object the decode dry-run cells lower.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.dist.sharding import logical
+from repro.models.blocks import (
+    apply_attn_layer,
+    apply_attn_layer_decode,
+    apply_dense_mlp,
+    init_attn_layer,
+)
+from repro.models.config import ModelConfig
+from repro.models.layers import (
+    F32,
+    dense_init,
+    flash_attention,
+    decode_attention,
+    rms_norm,
+    rope_angles,
+    split_keys,
+)
+from repro.models.mamba2 import apply_ssm_layer, init_ssm_layer
+from repro.models.rglru import apply_rglru_layer, init_rglru_layer
+
+# --------------------------------------------------------------------------- #
+# Parameter construction
+# --------------------------------------------------------------------------- #
+
+_KIND_INIT = {
+    "attn": init_attn_layer,
+    "ssm": init_ssm_layer,
+    "rglru": init_rglru_layer,
+}
+
+
+def _stack_init(key, init_fn, n, cfg, dtype):
+    keys = jnp.stack(split_keys(key, n))
+    return jax.vmap(lambda k: init_fn(k, cfg, dtype))(keys)
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    dtype = jnp.dtype(cfg.dtype)
+    ks = split_keys(key, 8)
+    p = {"final_norm": jnp.ones((cfg.d_model,), dtype)}
+    if cfg.family != "vlm":
+        p["embed"] = dense_init(ks[0], (cfg.vocab, cfg.d_model), dtype, scale=0.02)
+    if not cfg.tie_embeddings:
+        p["w_out"] = dense_init(ks[1], (cfg.d_model, cfg.vocab), dtype)
+
+    kinds = cfg.layer_kinds
+    pattern = cfg.pattern if cfg.pattern else (kinds[0],)
+    plen = len(pattern)
+    n_super, n_rem = divmod(cfg.n_layers, plen)
+
+    if cfg.scan_layers and n_super > 0:
+        super_p = {}
+        for i, kind in enumerate(pattern):
+            super_p[f"b{i}_{kind}"] = _stack_init(
+                ks[2 + i % 4], _KIND_INIT[kind], n_super, cfg, dtype
+            )
+        p["layers"] = super_p
+    else:
+        p["layers_unrolled"] = [
+            _KIND_INIT[k](kk, cfg, dtype)
+            for k, kk in zip(
+                kinds[: n_super * plen], split_keys(ks[2], max(n_super * plen, 1))
+            )
+        ]
+    if n_rem:
+        p["rem_layers"] = [
+            _KIND_INIT[k](kk, cfg, dtype)
+            for k, kk in zip(kinds[n_super * plen :], split_keys(ks[6], n_rem))
+        ]
+    if cfg.encoder_layers:
+        p["encoder"] = _stack_init(
+            ks[7], init_attn_layer, cfg.encoder_layers, cfg, dtype
+        )
+        p["xattn"] = _stack_init(ks[3], _init_xattn_layer, cfg.n_layers, cfg, dtype)
+    return p
+
+
+def _init_xattn_layer(key, cfg: ModelConfig, dtype):
+    d, hd, Hq, Hkv = cfg.d_model, cfg.hd, cfg.n_heads, cfg.n_kv
+    ksx = split_keys(key, 4)
+    return {
+        "lnx": jnp.ones((d,), dtype),
+        "xq": dense_init(ksx[0], (d, Hq * hd), dtype),
+        "xk": dense_init(ksx[1], (d, Hkv * hd), dtype),
+        "xv": dense_init(ksx[2], (d, Hkv * hd), dtype),
+        "xo": dense_init(ksx[3], (Hq * hd, d), dtype),
+    }
+
+
+# --------------------------------------------------------------------------- #
+# Forward (train / prefill shared body)
+# --------------------------------------------------------------------------- #
+
+
+def _angles_for(cfg: ModelConfig, positions):
+    if cfg.family == "ssm":
+        return None
+    return rope_angles(positions, cfg.hd, cfg.rope_theta, cfg.mrope_sections)
+
+
+def _apply_kind(kind, lp, cfg, x, angles, collect_cache):
+    window = cfg.window if kind == "attn" and cfg.pattern else 0
+    if kind == "attn":
+        y, kv, aux = apply_attn_layer(lp, cfg, x, angles, window=window)
+        cache = kv if collect_cache else None
+        return y, cache, aux
+    if kind == "ssm":
+        y, (s, conv_tail) = apply_ssm_layer(lp, cfg, x)
+        return y, ((s, conv_tail) if collect_cache else None), jnp.zeros((), F32)
+    if kind == "rglru":
+        y, (h, conv_tail) = apply_rglru_layer(lp, cfg, x)
+        return y, ((h, conv_tail) if collect_cache else None), jnp.zeros((), F32)
+    raise ValueError(kind)
+
+
+def _backbone(params, cfg: ModelConfig, x, angles, collect_cache=False):
+    """Run the layer stack.  Returns (x, caches, aux_loss)."""
+    kinds = cfg.layer_kinds
+    pattern = cfg.pattern if cfg.pattern else (kinds[0],)
+    plen = len(pattern)
+    n_super, n_rem = divmod(cfg.n_layers, plen)
+    caches, aux_total = [], jnp.zeros((), F32)
+
+    if "layers" in params and n_super > 0:
+
+        def super_fn(x, lp):
+            auxs = jnp.zeros((), F32)
+            ys = []
+            for i, kind in enumerate(pattern):
+                x, cache, aux = _apply_kind(
+                    kind, lp[f"b{i}_{kind}"], cfg, x, angles, collect_cache
+                )
+                auxs += aux
+                ys.append(cache)
+            x = logical(x, ("batch", "seq", "embed"))
+            return x, (tuple(ys), auxs)
+
+        if cfg.remat:
+            super_fn = jax.checkpoint(super_fn)
+        x, (stacked_caches, auxs) = jax.lax.scan(super_fn, x, params["layers"])
+        aux_total += auxs.sum()
+        if collect_cache:
+            # unstack (n_super, …) scan caches into the flat per-layer list
+            for s in range(n_super):
+                for i in range(plen):
+                    caches.append(
+                        jax.tree.map(lambda a: a[s], stacked_caches[i])
+                    )
+    else:
+        for lp, kind in zip(params.get("layers_unrolled", []), kinds):
+            x, cache, aux = _apply_kind(kind, lp, cfg, x, angles, collect_cache)
+            aux_total += aux
+            if collect_cache:
+                caches.append(cache)
+
+    for lp, kind in zip(params.get("rem_layers", []), kinds[n_super * plen :]):
+        x, cache, aux = _apply_kind(kind, lp, cfg, x, angles, collect_cache)
+        aux_total += aux
+        if collect_cache:
+            caches.append(cache)
+    return x, caches, aux_total
+
+
+def _encode(params, cfg: ModelConfig, frames):
+    """Whisper encoder over precomputed (stub) frame embeddings."""
+    x = frames + _sinusoid(frames.shape[1], cfg.d_model, frames.dtype)
+
+    def enc_fn(x, lp):
+        y, _, _ = apply_attn_layer(lp, cfg, x, None, causal=False)
+        return y, None
+
+    if cfg.remat:
+        enc_fn = jax.checkpoint(enc_fn)
+    x, _ = jax.lax.scan(enc_fn, x, params["encoder"])
+    return x
+
+
+def _sinusoid(S, d, dtype):
+    pos = np.arange(S)[:, None]
+    dim = np.arange(d // 2)[None, :]
+    ang = pos / (10000 ** (2 * dim / d))
+    emb = np.concatenate([np.sin(ang), np.cos(ang)], axis=-1)
+    return jnp.asarray(emb, dtype)[None]
+
+
+def _apply_xattn(lp, cfg, x, enc_kv):
+    """Whisper cross-attention sublayer (full, non-causal, cached enc K/V)."""
+    B, S, d = x.shape
+    hd, Hq, Hkv = cfg.hd, cfg.n_heads, cfg.n_kv
+    ek, ev = enc_kv
+    h = rms_norm(x, lp["lnx"], cfg.norm_eps)
+    q = (h @ lp["xq"]).reshape(B, S, Hq, hd)
+    o = flash_attention(
+        q, ek, ev, causal=False, q_chunk=cfg.q_chunk, kv_chunk=cfg.kv_chunk
+    )
+    return x + o.reshape(B, S, -1) @ lp["xo"]
+
+
+def _enc_kv(lp, cfg, enc_out):
+    B, T, d = enc_out.shape
+    hd, Hkv = cfg.hd, cfg.n_kv
+    ek = (enc_out @ lp["xk"]).reshape(B, T, Hkv, hd)
+    ev = (enc_out @ lp["xv"]).reshape(B, T, Hkv, hd)
+    return ek, ev
+
+
+def _whisper_decoder(params, cfg, x, angles, enc_out, collect_cache=False):
+    caches = []
+    xattn = [jax.tree.map(lambda a: a[i], params["xattn"]) for i in range(cfg.n_layers)]
+    for lp, xp in zip(params["layers_unrolled"], xattn):
+        x, kv, _ = apply_attn_layer(lp, cfg, x, angles)
+        x = _apply_xattn(xp, cfg, x, _enc_kv(xp, cfg, enc_out))
+        if collect_cache:
+            caches.append(kv)
+    return x, caches, jnp.zeros((), F32)
+
+
+# --------------------------------------------------------------------------- #
+# Heads / loss
+# --------------------------------------------------------------------------- #
+
+
+def _unembed(params, cfg, x):
+    w = params["embed"].T if cfg.tie_embeddings else params["w_out"]
+    return x, w
+
+
+def lm_loss(params, cfg: ModelConfig, x, labels, chunk=512):
+    """Chunked cross-entropy (f32 log-softmax); labels < 0 are masked."""
+    B, S, d = x.shape
+    x, w = _unembed(params, cfg, x)
+    chunk = min(chunk, S)
+    assert S % chunk == 0
+    nc = S // chunk
+    xr = x.reshape(B, nc, chunk, d)
+    lr = labels.reshape(B, nc, chunk)
+
+    @jax.checkpoint  # recompute the (B, chunk, V) logits in backward
+    def one(args):
+        xc, lc = args  # (B, chunk, d), (B, chunk)
+        logits = (xc @ w).astype(F32)
+        logits = logical(logits, ("batch", None, "vocab"))
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, jnp.maximum(lc, 0)[..., None], axis=-1
+        )[..., 0]
+        mask = (lc >= 0).astype(F32)
+        return ((lse - gold) * mask).sum(), mask.sum()
+
+    nll, cnt = jax.lax.map(one, (jnp.moveaxis(xr, 1, 0), jnp.moveaxis(lr, 1, 0)))
+    return nll.sum() / jnp.maximum(cnt.sum(), 1.0)
+
+
+# --------------------------------------------------------------------------- #
+# Public API: train / prefill / decode
+# --------------------------------------------------------------------------- #
+
+
+def train_loss(params, cfg: ModelConfig, batch) -> tuple:
+    """batch: {tokens|embeds|frames+tokens, labels, [positions]} → (loss, metrics)."""
+    labels = batch["labels"]
+    if cfg.family == "vlm":
+        x = batch["embeds"]
+        positions = batch.get("positions")
+        if positions is None:
+            S = x.shape[1]
+            positions = jnp.broadcast_to(
+                jnp.arange(S, dtype=jnp.int32), (x.shape[0], S)
+            )
+            positions = jnp.broadcast_to(positions[:, None, :], (x.shape[0], 3, S))
+    else:
+        tokens = batch["tokens"]
+        x = params["embed"][tokens]
+        S = tokens.shape[1]
+        positions = batch.get(
+            "positions",
+            jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), tokens.shape),
+        )
+    x = logical(x, ("batch", "seq", "embed"))
+    angles = _angles_for(cfg, positions)
+
+    if cfg.family == "encdec":
+        enc_out = _encode(params, cfg, batch["frames"])
+        x, _, aux = _whisper_decoder(params, cfg, x, angles, enc_out)
+    else:
+        x, _, aux = _backbone(params, cfg, x, angles)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    loss = lm_loss(params, cfg, x, labels)
+    total = loss + 0.01 * aux
+    return total, {"loss": loss, "aux_loss": aux}
+
+
+def prefill(params, cfg: ModelConfig, batch) -> tuple:
+    """Full-sequence forward returning (last_logits, cache).
+
+    Cache layout matches :func:`init_cache_specs`; attention caches hold the
+    prefill keys/values (length = prompt length), SSM/RG-LRU caches hold the
+    final recurrent state + conv tail.
+    """
+    if cfg.family == "vlm":
+        x = batch["embeds"]
+        B, S = x.shape[0], x.shape[1]
+        positions = batch.get("positions")
+        if positions is None:
+            positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+            positions = jnp.broadcast_to(positions[:, None, :], (B, 3, S))
+    else:
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        x = params["embed"][tokens]
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    x = logical(x, ("batch", "seq", "embed"))
+    angles = _angles_for(cfg, positions)
+    enc_out = None
+    if cfg.family == "encdec":
+        enc_out = _encode(params, cfg, batch["frames"])
+        x, caches, _ = _whisper_decoder(params, cfg, x, angles, enc_out, True)
+    else:
+        x, caches, _ = _backbone(params, cfg, x, angles, collect_cache=True)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    xl, w = _unembed(params, cfg, x[:, -1:])
+    logits = (xl @ w).astype(F32)
+    cur_len = jnp.full((B,), S, jnp.int32)
+    cache = {"layers": caches, "cur_len": cur_len}
+    if enc_out is not None:
+        cache["enc"] = enc_out
+    return logits[:, 0], cache
+
+
+def _layer_param_list(params, cfg: ModelConfig):
+    """Unstack scanned layer params into a per-layer list (decode path)."""
+    kinds = cfg.layer_kinds
+    pattern = cfg.pattern if cfg.pattern else (kinds[0],)
+    plen = len(pattern)
+    n_super = cfg.n_layers // plen
+    out = []
+    if "layers" in params and n_super > 0:
+        for s in range(n_super):
+            for i, kind in enumerate(pattern):
+                lp = jax.tree.map(lambda a: a[s], params["layers"][f"b{i}_{kind}"])
+                out.append((kind, lp))
+    else:
+        out.extend(zip(kinds, params.get("layers_unrolled", [])))
+    for lp, kind in zip(params.get("rem_layers", []), kinds[n_super * plen :]):
+        out.append((kind, lp))
+    return out
+
+
+def init_cache_specs(cfg: ModelConfig, batch: int, max_len: int, dtype) -> dict:
+    """ShapeDtypeStructs of the decode cache (the decode dry-run input)."""
+    hd, Hkv = cfg.hd, cfg.n_kv
+    layers = []
+    for kind in cfg.layer_kinds:
+        if kind == "attn":
+            L = min(cfg.window, max_len) if (cfg.pattern and cfg.window) else max_len
+            if cfg.kv_quant_int8 and not (cfg.pattern and cfg.window):
+                layers.append(
+                    (
+                        jax.ShapeDtypeStruct((batch, L, Hkv, hd), jnp.int8),
+                        jax.ShapeDtypeStruct((batch, L, Hkv, hd), jnp.int8),
+                        jax.ShapeDtypeStruct((batch, L, Hkv), F32),  # k scale
+                        jax.ShapeDtypeStruct((batch, L, Hkv), F32),  # v scale
+                    )
+                )
+                continue
+            layers.append(
+                (
+                    jax.ShapeDtypeStruct((batch, L, Hkv, hd), dtype),
+                    jax.ShapeDtypeStruct((batch, L, Hkv, hd), dtype),
+                )
+            )
+        elif kind == "ssm":
+            layers.append(
+                (
+                    jax.ShapeDtypeStruct(
+                        (batch, cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state), F32
+                    ),
+                    jax.ShapeDtypeStruct(
+                        (batch, cfg.conv_width - 1, cfg.d_inner + 2 * cfg.ssm_state),
+                        dtype,
+                    ),
+                )
+            )
+        elif kind == "rglru":
+            W = cfg.lru_width or cfg.d_model
+            layers.append(
+                (
+                    jax.ShapeDtypeStruct((batch, W), F32),
+                    jax.ShapeDtypeStruct((batch, cfg.conv_width - 1, W), dtype),
+                )
+            )
+    cache = {
+        "layers": layers,
+        "cur_len": jax.ShapeDtypeStruct((batch,), jnp.int32),
+    }
+    if cfg.family == "encdec":
+        cache["enc"] = jax.ShapeDtypeStruct((batch, cfg.enc_seq, cfg.d_model), dtype)
+    return cache
+
+
+def pad_cache(cfg: ModelConfig, cache: dict, max_len: int) -> dict:
+    """Pad prefill attention caches (length = prompt) out to ``max_len``."""
+
+    def pad_layer(kind, lc):
+        if kind == "attn" and lc is not None:
+            k, v = lc
+            S = k.shape[1]
+            if (not (cfg.pattern and cfg.window)) and S < max_len:
+                pad = ((0, 0), (0, max_len - S), (0, 0), (0, 0))
+                return (jnp.pad(k, pad), jnp.pad(v, pad))
+            if cfg.pattern and cfg.window:
+                W = min(cfg.window, max_len)
+                if S > W:  # keep last window, rolled so slot = pos mod W
+                    k, v = k[:, -W:], v[:, -W:]
+                    shift = S % W
+                    k = jnp.roll(k, shift, axis=1)
+                    v = jnp.roll(v, shift, axis=1)
+                elif S < W:
+                    # place tokens at slots 0..S-1 (cur_len = S < W)
+                    pad = ((0, 0), (0, W - S), (0, 0), (0, 0))
+                    k, v = jnp.pad(k, pad), jnp.pad(v, pad)
+                return (k, v)
+        return lc
+
+    out = {
+        "layers": [
+            pad_layer(kind, lc)
+            for kind, lc in zip(cfg.layer_kinds, cache["layers"])
+        ],
+        "cur_len": cache["cur_len"],
+    }
+    if "enc" in cache:
+        out["enc"] = cache["enc"]
+    return out
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype) -> dict:
+    """Zero-initialised decode cache (smoke tests / serving cold start)."""
+    specs = init_cache_specs(cfg, batch, max_len, dtype)
+    return jax.tree.map(
+        lambda s: jnp.zeros(s.shape, s.dtype)
+        if isinstance(s, jax.ShapeDtypeStruct)
+        else s,
+        specs,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct),
+    )
+
+
+def decode_step(params, cfg: ModelConfig, cache, tokens) -> tuple:
+    """One token step.  tokens (B, 1) int32 (or embeds (B,1,d) for vlm).
+
+    Returns (logits (B, V), new_cache).
+    """
+    cur_len = cache["cur_len"]
+    B = cur_len.shape[0]
+    if cfg.family == "vlm":
+        x = tokens  # (B, 1, d) stub embeddings
+        pos = jnp.broadcast_to(cur_len[:, None, None], (B, 3, 1)).astype(jnp.int32)
+    else:
+        x = params["embed"][tokens]
+        pos = cur_len[:, None].astype(jnp.int32)
+    angles = _angles_for(cfg, pos)
+
+    layer_params = _layer_param_list(params, cfg)
+    layer_caches = cache["layers"]
+    enc_out = cache.get("enc")
+    if cfg.family == "encdec":
+        xattn = [
+            jax.tree.map(lambda a: a[i], params["xattn"]) for i in range(cfg.n_layers)
+        ]
+
+    new_caches = []
+    for li, ((kind, lp), lc) in enumerate(zip(layer_params, layer_caches)):
+        if kind == "attn":
+            window = cfg.window if cfg.pattern else 0
+            if window:
+                # rolling local cache: absolute slot = cur_len mod window
+                k_cache, v_cache = lc
+                Wn = k_cache.shape[1]
+                q, k_new, v_new = _decode_qkv(lp, cfg, x, angles)
+                slot = cur_len % Wn
+                bidx = jnp.arange(B)
+                k_cache = k_cache.at[bidx, slot].set(k_new[:, 0])
+                v_cache = v_cache.at[bidx, slot].set(v_new[:, 0])
+                n_valid = jnp.minimum(cur_len + 1, Wn)
+                o = decode_attention(q, k_cache, v_cache, n_valid[:, None])
+                x = x + o.reshape(B, 1, -1) @ lp["wo"]
+                h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+                x = x + apply_dense_mlp(lp["mlp"], cfg, h)
+                new_caches.append((k_cache, v_cache))
+            else:
+                x, kv = apply_attn_layer_decode(lp, cfg, x, angles, lc, cur_len)
+                new_caches.append(kv)
+        elif kind == "ssm":
+            s, conv = lc
+            x, (s, conv) = apply_ssm_layer(lp, cfg, x, state=s, conv_state=conv)
+            new_caches.append((s, conv))
+        elif kind == "rglru":
+            h, conv = lc
+            x, (h, conv) = apply_rglru_layer(lp, cfg, x, state=h, conv_state=conv)
+            new_caches.append((h, conv))
+        if enc_out is not None:
+            x = _apply_xattn(xattn[li], cfg, x, _enc_kv(xattn[li], cfg, enc_out))
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    xl, w = _unembed(params, cfg, x)
+    logits = (xl @ w).astype(F32)[:, 0]
+    logits = logical(logits, ("batch", "vocab"))
+    new_cache = {"layers": new_caches, "cur_len": cur_len + 1}
+    if enc_out is not None:
+        new_cache["enc"] = enc_out
+    return logits, new_cache
+
+
+def _decode_qkv(lp, cfg, x, angles):
+    from repro.models.blocks import _qkv
+
+    return _qkv(lp, cfg, x, angles)

@@ -1,0 +1,193 @@
+"""Mamba-2 (SSD, state-space duality) block — arXiv:2405.21060.
+
+Chunked SSD forward: within chunks the recurrence is computed as a masked
+quadratic form (MXU-friendly), across chunks a ``lax.scan`` carries the
+(H, P, N) state.  Decode is the O(1) recurrent step — this is why
+``long_500k`` runs for this family (no KV cache; the context lives in the
+state).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+from repro.models.layers import F32, dense_init, rms_norm, split_keys
+
+
+def init_ssm_layer(key, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    din, H, N, cw = cfg.d_inner, cfg.ssm_heads, cfg.ssm_state, cfg.conv_width
+    ks = split_keys(key, 4)
+    d_in_proj = 2 * din + 2 * N + H  # z, x, B, C, dt  (ngroups = 1)
+    conv_ch = din + 2 * N  # conv over (x, B, C)
+    return {
+        "ln1": jnp.ones((d,), dtype),
+        "in_proj": dense_init(ks[0], (d, d_in_proj), dtype),
+        "conv_w": dense_init(ks[1], (cw, conv_ch), dtype, scale=0.5),
+        "A_log": jnp.zeros((H,), F32),  # A = -exp(A_log) = -1
+        "D": jnp.ones((H,), F32),
+        "dt_bias": jnp.zeros((H,), F32),
+        "gnorm": jnp.ones((din,), dtype),
+        "out_proj": dense_init(ks[2], (din, d), dtype),
+    }
+
+
+def _causal_depthwise_conv(x, w, state=None):
+    """x (B, S, C), w (cw, C) — causal depthwise conv.
+
+    If ``state`` (B, cw-1, C) is given, runs one decode step (S == 1) and
+    returns (y, new_state).
+    """
+    cw = w.shape[0]
+    if state is not None:
+        window = jnp.concatenate([state, x], axis=1)  # (B, cw, C)
+        y = jnp.einsum("bwc,wc->bc", window.astype(F32), w.astype(F32))
+        return y[:, None, :].astype(x.dtype), window[:, 1:]
+    B, S, C = x.shape
+    xp = jnp.pad(x, ((0, 0), (cw - 1, 0), (0, 0)))
+    windows = jnp.stack([xp[:, i : i + S] for i in range(cw)], axis=-1)  # (B,S,C,cw)
+    return jnp.einsum("bscw,wc->bsc", windows.astype(F32), w.astype(F32)).astype(
+        x.dtype
+    ), None
+
+
+def _segsum(dA):
+    """dA (..., Q) → L (..., Q, Q): L[i, j] = Σ_{j < t ≤ i} dA_t (−inf above diag)."""
+    Q = dA.shape[-1]
+    cs = jnp.cumsum(dA, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]  # (..., i, j): sum over (j, i]
+    i = jnp.arange(Q)
+    mask = i[:, None] >= i[None, :]
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_forward(xs, dt, A, Bmat, Cmat, chunk):
+    """Chunked SSD.
+
+    xs (B,S,H,P); dt (B,S,H) post-softplus; A (H,) negative; Bmat/Cmat
+    (B,S,N) (single group, broadcast over heads).  Returns y (B,S,H,P) and
+    the final state (B,H,P,N).
+    """
+    Bb, S0, H, P = xs.shape
+    N = Bmat.shape[-1]
+    Q = min(chunk, S0)
+    S = -(-S0 // Q) * Q
+    if S != S0:
+        # dt = 0 on padding → decay 1, no state contribution; outputs sliced
+        pad = ((0, 0), (0, S - S0))
+        xs = jnp.pad(xs, pad + ((0, 0), (0, 0)))
+        dt = jnp.pad(dt, pad + ((0, 0),))
+        Bmat = jnp.pad(Bmat, pad + ((0, 0),))
+        Cmat = jnp.pad(Cmat, pad + ((0, 0),))
+    nc = S // Q
+    xs = xs.reshape(Bb, nc, Q, H, P)
+    dt = dt.reshape(Bb, nc, Q, H)
+    Bm = Bmat.reshape(Bb, nc, Q, N)
+    Cm = Cmat.reshape(Bb, nc, Q, N)
+
+    dA = dt * A  # (B,nc,Q,H)
+    dA = jnp.moveaxis(dA, -1, 2)  # (B,nc,H,Q)
+    L = jnp.exp(_segsum(dA))  # (B,nc,H,Q,Q)
+
+    # intra-chunk (quadratic, MXU):  Y_intra = (L ∘ C Bᵀ) (dt·X)
+    CB = jnp.einsum("bnqs,bnks->bnqk", Cm, Bm, preferred_element_type=F32)  # (B,nc,Q,Q)
+    dtx = xs * dt[..., None]  # (B,nc,Q,H,P)
+    y_intra = jnp.einsum(
+        "bnqk,bnhqk,bnkhp->bnqhp", CB, L, dtx, preferred_element_type=F32
+    )
+
+    # per-chunk outgoing state:  S_c = Σ_j exp(cumΔ_last − cumΔ_j) dt_j B_j x_jᵀ
+    cum = jnp.cumsum(dA, axis=-1)  # (B,nc,H,Q)
+    decay_to_end = jnp.exp(cum[..., -1:] - cum)  # (B,nc,H,Q)
+    S_local = jnp.einsum(
+        "bnhq,bnqm,bnqhp->bnhpm",
+        decay_to_end,
+        Bm,
+        dtx,
+        preferred_element_type=F32,
+    )  # (B,nc,H,P,N)
+    chunk_decay = jnp.exp(cum[..., -1])  # (B,nc,H)
+
+    # inter-chunk: scan carrying the running state
+    def step(carry, inp):
+        s_prev = carry  # (B,H,P,N)
+        s_loc, cdecay, c_in, dA_c = inp
+        # contribution of the incoming state to this chunk's outputs
+        decay_in = jnp.exp(jnp.cumsum(dA_c, axis=-1))  # (B,H,Q)
+        y_in = jnp.einsum(
+            "bqn,bhpn,bhq->bqhp", c_in, s_prev, decay_in, preferred_element_type=F32
+        )
+        s_new = s_prev * cdecay[..., None, None] + s_loc
+        return s_new, y_in
+
+    init = jnp.zeros((Bb, H, P, N), F32)
+    xs_scan = (
+        jnp.moveaxis(S_local, 1, 0),
+        jnp.moveaxis(chunk_decay, 1, 0),
+        jnp.moveaxis(Cm, 1, 0),
+        jnp.moveaxis(dA, 1, 0),
+    )
+    s_final, y_inter = jax.lax.scan(step, init, xs_scan)
+    y_inter = jnp.moveaxis(y_inter, 0, 1)  # (B,nc,Q,H,P) after moveaxis
+    y = (y_intra + y_inter).reshape(Bb, S, H, P)
+    return y[:, :S0], s_final
+
+
+def apply_ssm_layer(p, cfg: ModelConfig, x, *, state=None, conv_state=None):
+    """Train/prefill when ``state is None``; otherwise one decode step.
+
+    Returns (y, (ssd_state, conv_state)).
+    """
+    B, S, d = x.shape
+    din, H, N, Pd = cfg.d_inner, cfg.ssm_heads, cfg.ssm_state, cfg.ssm_headdim
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    zxbcdt = h @ p["in_proj"]  # (B,S, 2*din + 2N + H)
+    z, xbc, dt = jnp.split(zxbcdt, [din, 2 * din + 2 * N], axis=-1)
+    decode = state is not None
+    cw = cfg.conv_width
+    if not decode:
+        # conv tail (pre-activation) so decode can continue after prefill
+        tail = jnp.pad(xbc, ((0, 0), (max(cw - 1 - S, 0), 0), (0, 0)))[:, -(cw - 1) :]
+        xbc, _ = _causal_depthwise_conv(xbc, p["conv_w"], None)
+        new_conv = tail
+    else:
+        xbc, new_conv = _causal_depthwise_conv(xbc, p["conv_w"], conv_state)
+    xbc = jax.nn.silu(xbc)
+    xs, Bm, Cm = jnp.split(xbc, [din, din + N], axis=-1)
+    dt = jax.nn.softplus(dt.astype(F32) + p["dt_bias"])  # (B,S,H)
+    A = -jnp.exp(p["A_log"])  # (H,)
+    xs = xs.reshape(B, S, H, Pd)
+
+    if not decode:
+        y, s_final = ssd_forward(xs.astype(F32), dt, A, Bm.astype(F32), Cm.astype(F32), cfg.ssm_chunk)
+    else:
+        # recurrent step: h' = h·exp(dt A) + dt·B xᵀ ; y = C·h' + D x
+        dA = jnp.exp(dt[:, 0] * A)  # (B,H)
+        dbx = jnp.einsum(
+            "bn,bhp,bh->bhpn", Bm[:, 0].astype(F32), xs[:, 0].astype(F32), dt[:, 0]
+        )
+        s_final = state * dA[..., None, None] + dbx
+        y = jnp.einsum("bn,bhpn->bhp", Cm[:, 0].astype(F32), s_final)[:, None]
+    y = y + xs.astype(F32) * p["D"][None, None, :, None]
+    y = y.reshape(B, S, din).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = rms_norm(y, p["gnorm"], cfg.norm_eps)
+    return x + y @ p["out_proj"], (s_final, new_conv)
+
+
+def ssd_reference(xs, dt, A, Bmat, Cmat):
+    """O(S·N·P) sequential oracle for tests: plain recurrence."""
+    Bb, S, H, P = xs.shape
+    N = Bmat.shape[-1]
+    s = jnp.zeros((Bb, H, P, N), F32)
+    ys = []
+    for t in range(S):
+        dA = jnp.exp(dt[:, t] * A)  # (B,H)
+        s = s * dA[..., None, None] + jnp.einsum(
+            "bn,bhp,bh->bhpn", Bmat[:, t], xs[:, t], dt[:, t]
+        )
+        ys.append(jnp.einsum("bn,bhpn->bhp", Cmat[:, t], s))
+    return jnp.stack(ys, axis=1), s

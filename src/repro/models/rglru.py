@@ -1,0 +1,102 @@
+"""RecurrentGemma / Griffin recurrent block (RG-LRU) — arXiv:2402.19427.
+
+Block: two d→W projections; branch 1 gates (GeLU), branch 2 goes through a
+width-4 causal depthwise conv then the RG-LRU linear recurrence:
+
+    r_t = σ(W_r x_t + b_r)          (recurrence gate)
+    i_t = σ(W_i x_t + b_i)          (input gate)
+    a_t = exp(c · r_t · log σ(Λ))   (c = 8)
+    h_t = a_t ⊙ h_{t−1} + √(1 − a_t²) ⊙ (i_t ⊙ x_t)
+
+The sequence form uses ``jax.lax.associative_scan`` on the affine maps
+(h → a·h + b compose associatively), giving O(log S) depth — the TPU-native
+realisation of a linear recurrence.  Decode is the O(1) step.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import F32, dense_init, rms_norm, split_keys
+from repro.models.mamba2 import _causal_depthwise_conv
+
+_C = 8.0
+
+
+def init_rglru_layer(key, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    W = cfg.lru_width or d
+    ks = split_keys(key, 8)
+    return {
+        "ln1": jnp.ones((d,), dtype),
+        "w_gate": dense_init(ks[0], (d, W), dtype),  # GeLU branch
+        "w_x": dense_init(ks[1], (d, W), dtype),  # recurrent branch
+        "conv_w": dense_init(ks[2], (cfg.conv_width, W), dtype, scale=0.5),
+        "w_r": dense_init(ks[3], (W, W), dtype),
+        "b_r": jnp.zeros((W,), F32),
+        "w_i": dense_init(ks[4], (W, W), dtype),
+        "b_i": jnp.zeros((W,), F32),
+        "lam": jnp.full((W,), 2.0, F32),  # Λ: σ(2) ≈ 0.88 decay
+        "w_out_proj": dense_init(ks[5], (W, d), dtype),
+        "ln2": jnp.ones((d,), dtype),
+        "mlp": {
+            "wg": dense_init(ks[6], (d, cfg.d_ff), dtype),
+            "wu": dense_init(ks[7], (d, cfg.d_ff), dtype),
+            "wd": dense_init(split_keys(ks[5], 2)[1], (cfg.d_ff, d), dtype),
+        },
+    }
+
+
+def _rglru_scan(x, a_log):
+    """h_t = a_t h_{t−1} + b_t via associative scan.  x=(a, b): (B,S,W) f32."""
+
+    def op(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    a = jnp.exp(a_log)
+    b = x
+    aa, bb = jax.lax.associative_scan(op, (a, b), axis=1)
+    return bb  # h_t (initial state 0)
+
+
+def apply_rglru_layer(p, cfg: ModelConfig, x, *, state=None, conv_state=None):
+    """Train/prefill when ``state is None``; otherwise one decode step.
+
+    state: (h (B,W) f32).  Returns (y, (h, conv_state)).
+    """
+    B, S, d = x.shape
+    h0 = rms_norm(x, p["ln1"], cfg.norm_eps)
+    gate = jax.nn.gelu(h0 @ p["w_gate"])  # (B,S,W)
+    xr = h0 @ p["w_x"]
+    cw = cfg.conv_width
+    if state is None:
+        tail = jnp.pad(xr, ((0, 0), (max(cw - 1 - S, 0), 0), (0, 0)))[:, -(cw - 1) :]
+        xr, _ = _causal_depthwise_conv(xr, p["conv_w"], None)
+        new_conv = tail
+    else:
+        xr, new_conv = _causal_depthwise_conv(xr, p["conv_w"], conv_state)
+
+    xf = xr.astype(F32)
+    r = jax.nn.sigmoid(xf @ p["w_r"].astype(F32) + p["b_r"])
+    i = jax.nn.sigmoid(xf @ p["w_i"].astype(F32) + p["b_i"])
+    log_a = _C * r * jax.nn.log_sigmoid(p["lam"])  # (B,S,W), ≤ 0
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-9))
+    gated_in = beta * (i * xf)
+
+    if state is None:
+        h = _rglru_scan(gated_in, log_a)  # (B,S,W)
+        new_state = h[:, -1]
+    else:
+        h = jnp.exp(log_a[:, 0]) * state + gated_in[:, 0]
+        new_state = h
+        h = h[:, None]
+    y = (h.astype(x.dtype) * gate) @ p["w_out_proj"]
+    x = x + y
+    hm = rms_norm(x, p["ln2"], cfg.norm_eps)
+    m = p["mlp"]
+    y2 = (jax.nn.gelu(hm @ m["wg"]) * (hm @ m["wu"])) @ m["wd"]
+    return x + y2, (new_state, new_conv)

@@ -1,0 +1,214 @@
+"""Optimizers (from scratch — no optax in this container).
+
+AdamW and Adafactor over arbitrary pytrees, plus LR schedules including the
+WSD (warmup-stable-decay) schedule MiniCPM trains with [arXiv:2404.06395].
+States are pytrees mirroring the parameters, so they inherit parameter
+sharding under pjit (ZeRO by construction).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+F32 = jnp.float32
+
+
+# --------------------------------------------------------------------------- #
+# Schedules
+# --------------------------------------------------------------------------- #
+
+
+def linear_warmup_cosine(peak_lr, warmup, total, final_frac=0.1):
+    def f(step):
+        step = step.astype(F32)
+        warm = peak_lr * step / max(warmup, 1)
+        prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(np.pi * prog))
+        return jnp.where(step < warmup, warm, peak_lr * cos)
+
+    return f
+
+
+def wsd(peak_lr, warmup, stable, decay, final_frac=0.01):
+    """Warmup-Stable-Decay (MiniCPM): flat plateau, fast exponential tail."""
+
+    def f(step):
+        step = step.astype(F32)
+        warm = peak_lr * step / max(warmup, 1)
+        in_decay = jnp.clip((step - warmup - stable) / max(decay, 1), 0.0, 1.0)
+        dec = peak_lr * jnp.exp(jnp.log(final_frac) * in_decay)
+        return jnp.where(
+            step < warmup, warm, jnp.where(step < warmup + stable, peak_lr, dec)
+        )
+
+    return f
+
+
+def constant(lr):
+    return lambda step: jnp.asarray(lr, F32)
+
+
+# --------------------------------------------------------------------------- #
+# Gradient utilities
+# --------------------------------------------------------------------------- #
+
+
+def global_norm(tree):
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(g.astype(F32))) for g in jax.tree.leaves(tree))
+    )
+
+
+def clip_by_global_norm(tree, max_norm):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(F32) * scale).astype(g.dtype), tree), norm
+
+
+# --------------------------------------------------------------------------- #
+# AdamW
+# --------------------------------------------------------------------------- #
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    schedule: Callable
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+    def init(self, params):
+        zeros = lambda p: jnp.zeros(p.shape, F32)
+        return {
+            "m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def update(self, grads, state, params):
+        step = state["step"] + 1
+        grads, gnorm = clip_by_global_norm(grads, self.clip_norm)
+        lr = self.schedule(step)
+        b1, b2 = self.b1, self.b2
+        m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(F32), state["m"], grads)
+        v = jax.tree.map(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(F32)), state["v"], grads
+        )
+        bc1 = 1 - b1**step.astype(F32)
+        bc2 = 1 - b2**step.astype(F32)
+
+        def upd(p, m, v):
+            u = (m / bc1) / (jnp.sqrt(v / bc2) + self.eps)
+            wd = self.weight_decay * p.astype(F32) if p.ndim >= 2 else 0.0
+            return (p.astype(F32) - lr * (u + wd)).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, m, v)
+        return new_params, {"m": m, "v": v, "step": step}, {"lr": lr, "grad_norm": gnorm}
+
+
+# --------------------------------------------------------------------------- #
+# Mixed precision wrapper (§Perf): bf16 working params + f32 master copy
+# --------------------------------------------------------------------------- #
+
+
+@dataclasses.dataclass(frozen=True)
+class MixedPrecision:
+    """Store working params in bf16, master + moments in f32.
+
+    Gradients then flow (and reduce-scatter) in bf16 — half the gradient
+    collective bytes — and no full-matrix f32 temps appear at the FSDP
+    gather boundary (the cast lives on the stored copy, not per-use).
+    """
+
+    inner: object  # AdamW / Adafactor
+    compute_dtype: object = jnp.bfloat16
+
+    def init(self, params):
+        master = jax.tree.map(
+            lambda p: p.astype(F32) if jnp.issubdtype(p.dtype, jnp.floating) else p,
+            params,
+        )
+        return {"master": master, "inner": self.inner.init(master)}
+
+    def update(self, grads, state, params):
+        del params  # the bf16 working copy is derived, not the source of truth
+        new_master, inner_state, metrics = self.inner.update(
+            grads, state["inner"], state["master"]
+        )
+        new_params = jax.tree.map(
+            lambda p: p.astype(self.compute_dtype)
+            if jnp.issubdtype(p.dtype, jnp.floating)
+            else p,
+            new_master,
+        )
+        return new_params, {"master": new_master, "inner": inner_state}, metrics
+
+
+# --------------------------------------------------------------------------- #
+# Adafactor (factored second moment — memory-lean option for ≥100B params)
+# --------------------------------------------------------------------------- #
+
+
+@dataclasses.dataclass(frozen=True)
+class Adafactor:
+    schedule: Callable
+    decay: float = 0.99
+    eps: float = 1e-30
+    clip_norm: float = 1.0
+    weight_decay: float = 0.0
+
+    def init(self, params):
+        def factored(p):
+            if p.ndim >= 2:
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], F32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], F32),
+                }
+            return {"v": jnp.zeros(p.shape, F32)}
+
+        return {
+            "f": jax.tree.map(factored, params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def update(self, grads, state, params):
+        step = state["step"] + 1
+        grads, gnorm = clip_by_global_norm(grads, self.clip_norm)
+        lr = self.schedule(step)
+        d = self.decay
+
+        def upd(p, g, f):
+            g = g.astype(F32)
+            if p.ndim >= 2:
+                vr = d * f["vr"] + (1 - d) * jnp.mean(jnp.square(g), axis=-1)
+                vc = d * f["vc"] + (1 - d) * jnp.mean(jnp.square(g), axis=-2)
+                denom = jnp.sqrt(
+                    vr[..., None]
+                    * vc[..., None, :]
+                    / jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True)[..., None], self.eps)
+                    + self.eps
+                )
+                u = g / denom
+                nf = {"vr": vr, "vc": vc}
+            else:
+                v = d * f["v"] + (1 - d) * jnp.square(g)
+                u = g / (jnp.sqrt(v) + 1e-8)
+                nf = {"v": v}
+            wd = self.weight_decay * p.astype(F32) if p.ndim >= 2 else 0.0
+            return (p.astype(F32) - lr * (u + wd)).astype(p.dtype), nf
+
+        is_fac = lambda x: isinstance(x, dict) and ("vr" in x or "v" in x)
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = jax.tree.leaves(grads)
+        flat_f = jax.tree.flatten(state["f"], is_leaf=is_fac)[0]
+        out = [upd(p, g, f) for p, g, f in zip(flat_p, flat_g, flat_f)]
+        new_params = tdef.unflatten([o[0] for o in out])
+        new_f = tdef.unflatten([o[1] for o in out])
+        return new_params, {"f": new_f, "step": step}, {"lr": lr, "grad_norm": gnorm}

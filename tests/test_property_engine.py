@@ -1,0 +1,88 @@
+"""Hypothesis property tests on system invariants."""
+
+import numpy as np
+from hypothesis import HealthCheck, given, settings
+from hypothesis import strategies as st
+
+from repro.core.engine import make_schedule
+from repro.core.semiring import INT_INF, MIN_PLUS, PLUS_TIMES
+from repro.graphs.formats import CSRGraph, build_stripe_schedule
+from repro.graphs.generators import make_graph
+from repro.graphs.partition import balanced_blocks, equal_blocks
+from repro.algorithms import pagerank, sssp
+
+SETTINGS = dict(
+    deadline=None,
+    max_examples=20,
+    suppress_health_check=[HealthCheck.too_slow],
+)
+
+
+@st.composite
+def random_graph(draw):
+    n = draw(st.integers(min_value=4, max_value=120))
+    m = draw(st.integers(min_value=1, max_value=5 * n))
+    seed = draw(st.integers(min_value=0, max_value=2**31 - 1))
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, n, m)
+    dst = rng.integers(0, n, m)
+    w = rng.integers(1, 64, m).astype(np.int32)
+    return CSRGraph.from_edges(n, src, dst, w, name=f"h{seed}")
+
+
+@given(random_graph(), st.integers(1, 6), st.integers(1, 64))
+@settings(**SETTINGS)
+def test_stripe_schedule_covers_every_edge_once(g, P, delta):
+    """Padding never duplicates or drops edges: Σ real cells == nnz."""
+    bounds = balanced_blocks(g, P)
+    sched = build_stripe_schedule(g, bounds, delta, pad_val=INT_INF)
+    real = int((sched.dst_local < sched.delta).sum())
+    assert real == g.nnz
+    # every row appears exactly once across (step, worker) cells
+    rows = sched.rows[sched.rows < g.n]
+    assert len(np.unique(rows)) == rows.size == g.n
+
+
+@given(random_graph(), st.integers(1, 4), st.integers(1, 32))
+@settings(**SETTINGS)
+def test_sssp_fixed_point_delta_invariant(g, P, delta):
+    """SSSP distances are δ-independent (monotone min-plus fixed point)."""
+    r_sync = sssp(g, P=P, mode="sync", host_loop=True)
+    r_del = sssp(g, P=P, mode="delayed", delta=delta, min_chunk=8)
+    assert (r_sync.x == r_del.x).all()
+
+
+@given(random_graph(), st.integers(1, 4))
+@settings(**SETTINGS)
+def test_sssp_triangle_inequality(g, P):
+    """d[v] ≤ d[u] + w(u, v) for every edge at the fixed point."""
+    r = sssp(g, P=P, mode="async", min_chunk=8)
+    d = r.x.astype(np.int64)
+    dst_of = np.repeat(np.arange(g.n), np.diff(g.indptr))
+    lhs = d[dst_of]
+    rhs = d[g.indices] + g.values
+    ok = lhs <= np.minimum(rhs, INT_INF)
+    assert ok.all()
+
+
+@given(random_graph(), st.integers(1, 4), st.integers(1, 32))
+@settings(**SETTINGS)
+def test_pagerank_mass_and_positivity(g, P, delta):
+    gpr = g.with_values(
+        (0.85 / np.maximum(g.out_degree[g.indices], 1)).astype(np.float32)
+    )
+    r = pagerank(gpr, P=P, mode="delayed", delta=delta, min_chunk=8, max_rounds=200)
+    assert (r.x >= 0).all()
+    # dangling leakage only reduces mass: 0 < Σx ≤ 1 + tol
+    assert 0 < r.x.sum() <= 1.0 + 1e-3
+
+
+@given(st.integers(2, 64), st.integers(1, 6))
+@settings(**SETTINGS)
+def test_balanced_blocks_cover(n, P):
+    rng = np.random.default_rng(n * 31 + P)
+    src = rng.integers(0, n, 4 * n)
+    dst = rng.integers(0, n, 4 * n)
+    g = CSRGraph.from_edges(n, src, dst)
+    b = balanced_blocks(g, P)
+    assert b[0] == 0 and b[-1] == n and (np.diff(b) >= 0).all()
