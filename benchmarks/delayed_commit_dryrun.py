@@ -14,12 +14,17 @@ synchronous-DP baseline (grads all-reduced over the pod axis every step).
 Run (needs ~3 compiles at 512 host devices)::
 
     PYTHONPATH=src python -m benchmarks.delayed_commit_dryrun
+
+With fewer than 512 devices (CI runs 8 fake ones) the sweep drops to smoke
+mode automatically: reduced config, small shape, a (2, D/4, 2) mesh — same
+HLO structure, CPU-sized compiles.
 """
 
 import os
 
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
 
+import argparse
 import json
 from functools import partial
 from pathlib import Path
@@ -27,8 +32,9 @@ from pathlib import Path
 import jax
 from jax.sharding import PartitionSpec as P
 
-from repro.configs import get_config
-from repro.configs.shapes import SHAPES
+from repro.configs import get_config, get_reduced
+from repro.configs.shapes import SHAPES, ShapeSpec
+from repro.dist.compat import make_mesh, set_mesh
 from repro.dist.delayed_commit import (
     DelayedCommitConfig,
     DelayedCommitState,
@@ -43,13 +49,23 @@ from repro.launch.specs import batch_specs
 from repro.train.optimizer import AdamW, constant
 
 RESULTS = Path(__file__).resolve().parents[1] / "results"
-ICI_BW = 50e9
 
 
-def lower_phase(phase: str, compress: str):
-    cfg = get_config("granite-8b")
-    shape = SHAPES["train_4k"]
-    mesh = make_production_mesh(multi_pod=True)
+def smoke_cell():
+    """(cfg, shape, mesh) for hosts too small for the production mesh."""
+    n_dev = len(jax.devices())
+    assert n_dev >= 4 and n_dev % 4 == 0, f"smoke mesh needs 4k devices, got {n_dev}"
+    mesh = make_mesh((2, n_dev // 4, 2), ("pod", "data", "model"))
+    return get_reduced("granite-8b"), ShapeSpec("train_smoke", "train", 128, 8), mesh
+
+
+def lower_phase(phase: str, compress: str, smoke: bool):
+    if smoke:
+        cfg, shape, mesh = smoke_cell()
+    else:
+        cfg = get_config("granite-8b")
+        shape = SHAPES["train_4k"]
+        mesh = make_production_mesh(multi_pod=True)
     rules = rules_for(cfg, mesh, "train")
     cc = DelayedCommitConfig(n_pods=2, delta=4, compress=compress)
     opt = AdamW(schedule=constant(3e-4))
@@ -61,18 +77,16 @@ def lower_phase(phase: str, compress: str):
         k: jax.ShapeDtypeStruct((2, v.shape[0] // 2) + v.shape[1:], v.dtype)
         for k, v in specs.items()
     }
-    pod_shards = {k: P(*(("pod",) + tuple(s))) for k, s in shards.items()}
     # drop "pod" from the inner batch axis mapping
-    fixed = {}
+    pod_shards = {}
     for k, s in shards.items():
         inner = tuple(
             tuple(a for a in ax if a != "pod") if isinstance(ax, tuple) else ax
             for ax in s
         )
-        fixed[k] = P("pod", *inner)
-    pod_shards = fixed
+        pod_shards[k] = P("pod", *inner)
 
-    with use_rules(rules), jax.set_mesh(mesh):
+    with use_rules(rules), set_mesh(mesh):
         state_sds = jax.eval_shape(partial(init_delayed_state, cfg, opt, cc), key)
         pspecs = tree_param_specs(state_sds.global_params, rules, mesh)
         podspecs = pod_prefix_specs(pspecs)
@@ -100,10 +114,16 @@ def lower_phase(phase: str, compress: str):
     }
 
 
-def main():
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config + small mesh (auto when <512 devices)")
+    args = ap.parse_args(argv)
+    smoke = args.smoke or len(jax.devices()) < 512
+
     rows = {}
     for phase, compress in [("local", "none"), ("commit", "none"), ("commit", "int8")]:
-        r = lower_phase(phase, compress)
+        r = lower_phase(phase, compress, smoke)
         rows[f"{phase}_{compress}"] = r
         print(
             f"{phase:7s} {compress:5s}: coll={r['collective_bytes']/2**30:.2f} GiB "
@@ -120,7 +140,8 @@ def main():
         i8b = local + commit_i8 / d
         table.append({"delta": d, "f32_gib": f32b / 2**30, "int8_gib": i8b / 2**30})
         print(f"{d:4d} {f32b/2**30:12.2f} {i8b/2**30:12.2f}")
-    out = {"phases": rows, "amortised": table}
+    out = {"smoke": smoke, "phases": rows, "amortised": table}
+    RESULTS.mkdir(parents=True, exist_ok=True)
     (RESULTS / "delayed_commit_dryrun.json").write_text(json.dumps(out, indent=1))
     return out
 

@@ -1,51 +1,59 @@
 """Dry-run roofline of the paper's own engine on the production mesh.
 
-Lowers one delayed-async PageRank round (P = 256 workers = the single-pod
-mesh "data"×"model" axes flattened... here: the "data" axis at 16 workers ×
-16-way replicated, and a full 256-worker variant) for δ ∈ {128, 1024, B} on
-a kron graph, and counts the flush all-gather bytes — the TPU realisation of
+Lowers one delayed-async PageRank round (P = 256 schedule workers, sharded
+over however many devices the host exposes — 256-wide on the production
+mesh, 8-wide on the CI smoke run) for sync / delayed / async schedules on a
+kron graph, and counts the flush all-gather bytes — the TPU realisation of
 the paper's Table-I flush counts.
 
-    PYTHONPATH=src python -m benchmarks.engine_dryrun
+    PYTHONPATH=src python -m benchmarks.engine_dryrun [--scale 19]
 """
 
 import os
 
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
 
+import argparse
 import json
 from pathlib import Path
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core.engine import make_schedule
 from repro.core.semiring import PLUS_TIMES
+from repro.dist.compat import make_mesh
 from repro.dist.engine_sharded import input_specs_for_engine, sharded_round_fn
 from repro.graphs.generators import make_graph
 from repro.launch.dryrun import collective_stats
 
 RESULTS = Path(__file__).resolve().parents[1] / "results"
 ICI_BW = 50e9
+P = 256  # schedule workers (a multiple of every mesh width we run on)
 
 
-def main():
-    g = make_graph("kron", scale=19, efactor=8, kind="pagerank")
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=int, default=19, help="kron graph scale")
+    args = ap.parse_args(argv)
+
+    g = make_graph("kron", scale=args.scale, efactor=8, kind="pagerank")
     n = g.n
     tele = np.float32(0.15 / n)
-    P = 256
-    mesh = jax.make_mesh(
-        (P,), ("data",), axis_types=(jax.sharding.AxisType.Auto,)
-    )
+    # largest power-of-two mesh width the host supports (always divides P)
+    n_dev = len(jax.devices())
+    width = 1
+    while width * 2 <= min(P, n_dev):
+        width *= 2
+    mesh = make_mesh((width,), ("data",), devices=jax.devices()[:width])
     rows = []
     for mode, delta in [("async", None), ("delayed", 512), ("sync", None)]:
         sched = make_schedule(g, P, delta, PLUS_TIMES, mode=mode)
         rnd = sharded_round_fn(
             sched, PLUS_TIMES, lambda o, r, w: tele + r, mesh, axis="data"
         )
-        with jax.set_mesh(mesh):
-            compiled = jax.jit(rnd).lower(*input_specs_for_engine(sched, PLUS_TIMES)).compile()
+        specs = input_specs_for_engine(sched, PLUS_TIMES)
+        compiled = jax.jit(rnd).lower(*specs).compile()
         coll = collective_stats(compiled.as_text())
         flush_bytes = sched.S * P * sched.delta * 4  # analytic per round
         rows.append(
@@ -53,6 +61,7 @@ def main():
                 "mode": mode,
                 "delta": sched.delta,
                 "commits_per_round": sched.S,
+                "mesh_width": width,
                 "hlo_collective_bytes": coll["total_bytes"],
                 "analytic_flush_bytes": flush_bytes,
                 "flush_time_ms": flush_bytes / (P * ICI_BW) * 1e3
@@ -64,6 +73,7 @@ def main():
             f"HLO coll={coll['total_bytes']/2**20:8.2f} MiB "
             f"flush-term≈{rows[-1]['flush_time_ms']:.3f} ms/round"
         )
+    RESULTS.mkdir(parents=True, exist_ok=True)
     (RESULTS / "engine_dryrun.json").write_text(json.dumps(rows, indent=1))
     return rows
 

@@ -1,0 +1,27 @@
+"""Multi-pod distribution layer: logical-axis sharding rules, delayed
+gradient commit (the paper's δ-buffering at training scale), and shard_map
+execution of the graph engine."""
+
+from repro.dist.delayed_commit import (
+    DelayedCommitConfig,
+    DelayedCommitState,
+    init_delayed_state,
+    make_delayed_commit_step,
+    pod_prefix_specs,
+)
+from repro.dist.engine_sharded import input_specs_for_engine, sharded_round_fn
+from repro.dist.sharding import Rules, logical, tree_param_specs, use_rules
+
+__all__ = [
+    "DelayedCommitConfig",
+    "DelayedCommitState",
+    "Rules",
+    "init_delayed_state",
+    "input_specs_for_engine",
+    "logical",
+    "make_delayed_commit_step",
+    "pod_prefix_specs",
+    "sharded_round_fn",
+    "tree_param_specs",
+    "use_rules",
+]

@@ -1,0 +1,212 @@
+"""Delayed gradient commit: the paper's δ-buffering at training scale.
+
+Each of ``n_pods`` pods holds a *local* parameter view ``global + delta_p``
+and runs ordinary optimizer steps against it, accumulating everything it has
+not yet published into ``delta_p`` — the training analogue of the engine's
+thread-local buffer.  Every ``delta`` steps the pods flush: per-pod deltas
+are (optionally wire-compressed and) averaged across the pod axis — the one
+DCN collective — added to the replicated global store, and each pod's buffer
+keeps only its compression residual (error feedback; exactly zero when
+``compress="none"``), so pods resynchronize to the fresh global view.
+
+Correspondence with the graph engine (``repro.core.engine``): the engine's
+commit step publishes δ rows per worker to the frontier; here a commit
+publishes one averaged parameter delta per pod to the global params.  δ=1
+with identical pod batches is bit-equivalent to the plain synchronous step
+(``make_train_step``), mirroring how the engine's ``S == 1`` schedule
+recovers Jacobi.
+
+Local-update semantics: each pod applies its optimizer to its *local* params,
+so δ=1 with different pod shards is mean-of-local-optimizer-steps, which
+differs from optimizer-on-mean-gradients by the optimizer's nonlinearity.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+__all__ = [
+    "DelayedCommitConfig",
+    "DelayedCommitState",
+    "init_delayed_state",
+    "make_delayed_commit_step",
+    "pod_prefix_specs",
+]
+
+F32 = jnp.float32
+
+
+@dataclasses.dataclass(frozen=True)
+class DelayedCommitConfig:
+    """δ-commit hyperparameters.
+
+    ``compress`` ∈ {"none", "int8", "topk"} is applied per pod to the flushed
+    delta (wire compression over DCN); ``topk_frac`` is the kept fraction for
+    "topk".
+    """
+
+    n_pods: int = 2
+    delta: int = 1
+    compress: str = "none"
+    topk_frac: float = 0.1
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class DelayedCommitState:
+    global_params: dict  # replicated committed store
+    local_delta: dict  # (n_pods, *param) uncommitted per-pod buffers
+    opt_state: dict  # per-pod optimizer state (pod-stacked leaves)
+    step: jnp.ndarray
+
+
+def _pod_stack(leaf, n_pods: int):
+    if getattr(leaf, "ndim", 0) == 0:
+        return leaf  # shared scalars (e.g. the optimizer step counter)
+    return jnp.broadcast_to(leaf, (n_pods,) + leaf.shape)
+
+
+def _pod_axes(tree):
+    """vmap in/out axes for a pod-stacked state tree: 0 on arrays, None on
+    shared scalars."""
+    return jax.tree.map(lambda l: 0 if getattr(l, "ndim", 0) else None, tree)
+
+
+def init_delayed_state(
+    cfg: ModelConfig, optimizer, cc: DelayedCommitConfig, key
+) -> DelayedCommitState:
+    from repro.train.train_step import init_train_state  # avoid import cycle
+
+    base = init_train_state(cfg, optimizer, key)
+    return DelayedCommitState(
+        global_params=base.params,
+        local_delta=jax.tree.map(
+            lambda p: jnp.zeros((cc.n_pods,) + p.shape, p.dtype), base.params
+        ),
+        opt_state=jax.tree.map(lambda l: _pod_stack(l, cc.n_pods), base.opt_state),
+        step=jnp.zeros((), jnp.int32),
+    )
+
+
+def pod_prefix_specs(specs):
+    """Prepend the ``pod`` mesh axis to every PartitionSpec in ``specs``."""
+    return jax.tree.map(
+        lambda s: P(*(("pod",) + tuple(s))),
+        specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def _compress_pod_deltas(tree, cc: DelayedCommitConfig):
+    """Per-pod wire compression of delta leaves shaped (n_pods, *param)."""
+    if cc.compress == "none":
+        return tree
+    if cc.compress == "int8":
+
+        def int8(d):
+            flat = d.reshape(d.shape[0], -1)
+            scale = jnp.maximum(jnp.abs(flat).max(axis=1), 1e-12) / 127.0
+            q = jnp.clip(jnp.round(flat / scale[:, None]), -127, 127)
+            return (q * scale[:, None]).reshape(d.shape)
+
+        return jax.tree.map(int8, tree)
+    if cc.compress == "topk":
+
+        def topk(d):
+            flat = d.reshape(d.shape[0], -1)
+            k = max(1, int(round(flat.shape[1] * cc.topk_frac)))
+            thresh = jax.lax.top_k(jnp.abs(flat), k)[0][:, -1:]
+            return jnp.where(jnp.abs(flat) >= thresh, flat, 0.0).reshape(d.shape)
+
+        return jax.tree.map(topk, tree)
+    raise ValueError(f"unknown compress mode {cc.compress!r}")
+
+
+def make_delayed_commit_step(
+    cfg: ModelConfig,
+    optimizer,
+    cc: DelayedCommitConfig,
+    phase: str | None = None,
+    param_specs=None,
+):
+    """Returns jit-able ``(state, pod_batch) -> (state, metrics)``.
+
+    ``pod_batch`` leaves carry a leading ``n_pods`` axis.  ``phase`` lowers a
+    single phase for HLO analysis: "local" (buffered step, no flush) or
+    "commit" (flush every step); ``None`` is the real schedule — flush when
+    ``(step + 1) % delta == 0``.  ``param_specs`` pins the global store (and,
+    pod-prefixed, the per-pod buffers) to the parameter sharding.
+    """
+    from repro.models import train_loss  # avoid import cycle
+    from repro.train.train_step import cast_tree
+
+    compute_dtype = jnp.dtype(cfg.dtype)
+
+    def loss_fn(params, batch):
+        return train_loss(cast_tree(params, compute_dtype), cfg, batch)
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+    pod_specs = pod_prefix_specs(param_specs) if param_specs is not None else None
+
+    def constrain(tree, specs):
+        if specs is None:
+            return tree
+        return jax.tree.map(
+            lambda x, s: jax.lax.with_sharding_constraint(x, s), tree, specs
+        )
+
+    def commit(gp, dl):
+        committed = _compress_pod_deltas(dl, cc)
+        avg = jax.tree.map(lambda c: c.mean(axis=0), committed)
+        new_gp = jax.tree.map(jnp.add, gp, avg)
+        residual = jax.tree.map(jnp.subtract, dl, committed)
+        return new_gp, residual
+
+    def step(state: DelayedCommitState, pod_batch):
+        gp = state.global_params
+
+        def local_fn(delta_p, opt_p, batch_p):
+            params_p = jax.tree.map(jnp.add, gp, delta_p)
+            (loss, lmetrics), grads = grad_fn(params_p, batch_p)
+            new_params, new_opt, ometrics = optimizer.update(grads, opt_p, params_p)
+            new_delta = jax.tree.map(jnp.subtract, new_params, gp)
+            return new_delta, new_opt, loss, dict(lmetrics, **ometrics)
+
+        opt_axes = _pod_axes(state.opt_state)
+        new_dl, new_opt, losses, pod_metrics = jax.vmap(
+            local_fn,
+            in_axes=(0, opt_axes, 0),
+            out_axes=(0, opt_axes, 0, 0),
+        )(state.local_delta, state.opt_state, pod_batch)
+        new_dl = constrain(new_dl, pod_specs)
+
+        if phase == "local":
+            new_gp, committed = gp, jnp.zeros((), F32)
+        elif phase == "commit":
+            new_gp, new_dl = commit(gp, new_dl)
+            committed = jnp.ones((), F32)
+        else:
+            pred = (state.step + 1) % cc.delta == 0
+            new_gp, new_dl = jax.lax.cond(
+                pred, commit, lambda g, d: (g, d), gp, new_dl
+            )
+            committed = pred.astype(F32)
+        new_gp = constrain(new_gp, param_specs)
+
+        metrics = jax.tree.map(lambda m: m.mean(axis=0), pod_metrics)
+        metrics = dict(metrics, total_loss=losses.mean(), committed=committed)
+        new_state = DelayedCommitState(
+            global_params=new_gp,
+            local_delta=new_dl,
+            opt_state=new_opt,
+            step=state.step + 1,
+        )
+        return new_state, metrics
+
+    return step

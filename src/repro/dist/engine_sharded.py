@@ -1,0 +1,96 @@
+"""shard_map execution of the delayed-async engine over a worker mesh axis.
+
+``sharded_round_fn`` distributes the ``P`` schedule workers over a mesh axis:
+each device runs the chunk-SpMV + row update for its worker shard against the
+replicated frontier, then the per-chunk results are all-gathered (the flush
+collective) and published with *exactly* the scatter the single-device
+``round_fn`` executes — same update list, same order — so the sharded round
+is bit-identical to the reference, dump slot included.
+
+The schedule arrays are function arguments (not closure constants) so the
+worker axis can be sharded by ``shard_map`` in_specs and the whole round is
+AOT-lowerable from ``input_specs_for_engine``.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core.engine import DeviceSchedule
+from repro.core.semiring import Semiring
+from repro.dist.compat import mesh_axis_sizes, shard_map
+
+__all__ = ["input_specs_for_engine", "sharded_round_fn"]
+
+
+def sharded_round_fn(
+    sched: DeviceSchedule,
+    semiring: Semiring,
+    row_update,
+    mesh,
+    axis: str = "data",
+) -> Callable:
+    """Return jit-able ``(x_ext, src, val, dst_local, rows) -> x_ext``.
+
+    One full round (``S`` commit steps) with the worker dimension of the
+    schedule sharded over mesh ``axis``; ``x_ext`` stays replicated.  Requires
+    ``sched.P`` divisible by the axis size (workers per device is static).
+    """
+    axis_size = mesh_axis_sizes(mesh)[axis]
+    if sched.P % axis_size != 0:
+        raise ValueError(f"P={sched.P} not divisible by |{axis}|={axis_size}")
+    delta = sched.delta
+
+    def body(x_ext, src, val, dst_local, rows):
+        P_loc = src.shape[1]
+
+        def commit_step(s, x):
+            src_s = jax.lax.dynamic_index_in_dim(src, s, 0, keepdims=False)
+            val_s = jax.lax.dynamic_index_in_dim(val, s, 0, keepdims=False)
+            dst_s = jax.lax.dynamic_index_in_dim(dst_local, s, 0, keepdims=False)
+            rows_s = jax.lax.dynamic_index_in_dim(rows, s, 0, keepdims=False)
+
+            gathered = x[src_s]  # (P_loc, M) — committed frontier reads
+            contrib = semiring.mul(gathered, val_s)
+            seg = dst_s + (jnp.arange(P_loc, dtype=jnp.int32) * (delta + 1))[:, None]
+            reduced = semiring.segment_reduce(
+                contrib.reshape(-1), seg.reshape(-1), P_loc * (delta + 1)
+            ).reshape(P_loc, delta + 1)[:, :delta]
+            old = x[rows_s]
+            new = row_update(old, reduced, rows_s)
+            # Flush: gather every worker's chunk, publish with the reference
+            # engine's scatter (same updates, same order → bit-identical).
+            new_full = jax.lax.all_gather(new, axis, axis=0, tiled=True)
+            rows_full = jax.lax.all_gather(rows_s, axis, axis=0, tiled=True)
+            return x.at[rows_full.reshape(-1)].set(
+                new_full.reshape(-1).astype(x.dtype),
+                mode="drop",
+                unique_indices=False,
+            )
+
+        return jax.lax.fori_loop(0, sched.S, commit_step, x_ext)
+
+    sched_spec = P(None, axis, None)
+    return shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(P(None), sched_spec, sched_spec, sched_spec, sched_spec),
+        out_specs=P(None),
+        check_vma=False,
+    )
+
+
+def input_specs_for_engine(sched: DeviceSchedule, semiring: Semiring) -> tuple:
+    """ShapeDtypeStructs matching ``sharded_round_fn``'s signature (AOT path)."""
+    SDS = jax.ShapeDtypeStruct
+    return (
+        SDS((sched.n_slots,), semiring.dtype),
+        SDS(sched.src.shape, jnp.int32),
+        SDS(sched.val.shape, sched.val.dtype),
+        SDS(sched.dst_local.shape, jnp.int32),
+        SDS(sched.rows.shape, jnp.int32),
+    )

@@ -1,0 +1,216 @@
+"""Logical-axis sharding rules (DESIGN.md §7).
+
+Model code annotates activations with *logical* axis names
+(:func:`logical`) and never mentions mesh axes; a :class:`Rules` table maps
+logical names to physical mesh axes (``pod`` / ``data`` / ``model``) per
+deployment.  :func:`tree_param_specs` resolves a parameter pytree to
+``PartitionSpec``s by parameter name — FSDP over ``data`` on the d_model
+dimension, tensor parallel over ``model`` on heads / ff / vocab / experts —
+dropping any axis that does not divide the dimension, so the same rules apply
+to every arch in the registry and to reduced CPU configs alike.
+
+Outside a mesh context (unit tests, single-device smoke runs) every
+annotation is a no-op, so model code is mesh-free by default.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.dist.compat import current_mesh, mesh_axis_sizes
+
+__all__ = ["Rules", "current_rules", "logical", "tree_param_specs", "use_rules"]
+
+_active = threading.local()
+
+
+@dataclasses.dataclass(frozen=True)
+class Rules:
+    """Logical-axis → mesh-axis mapping.
+
+    Values are a mesh axis name, a tuple of names (the dim is sharded over
+    their product, e.g. batch over ``("pod", "data")``), or ``None``
+    (replicated).
+    """
+
+    mapping: dict
+
+    @classmethod
+    def default(cls, shard_cache_heads: bool = False, seq_axis=None) -> "Rules":
+        """The production mapping (DESIGN.md §7).
+
+        ``seq_axis="model"`` turns on Megatron-style sequence parallelism for
+        the residual stream; ``shard_cache_heads`` moves the decode kv cache
+        from sequence-sharded to head-sharded (when heads divide the model
+        axis).
+        """
+        return cls(
+            mapping={
+                # activations
+                "batch": ("pod", "data"),
+                "seq": seq_axis,
+                "embed": None,
+                "vocab": "model",
+                # parameters
+                "embed_fsdp": "data",
+                "heads": "model",
+                "ff": "model",
+                "experts": "model",
+                # decode cache
+                "cache_batch": ("pod", "data"),
+                "kv_heads": "model" if shard_cache_heads else None,
+                "cache_seq": None if shard_cache_heads else "model",
+            }
+        )
+
+    def to_dict(self) -> dict:
+        return dict(self.mapping)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "Rules":
+        return cls(mapping=dict(d))
+
+    def physical(self, logical_axes) -> tuple:
+        """Resolve logical names to raw mesh-axis entries (no mesh filtering)."""
+        return tuple(
+            self.mapping.get(a) if isinstance(a, str) else a for a in logical_axes
+        )
+
+    def spec(self, logical_axes, mesh, shape) -> P:
+        """PartitionSpec for ``shape`` under ``mesh``.
+
+        Axes absent from the mesh, axes whose size does not divide the
+        dimension, and axes already consumed by an earlier dimension are
+        dropped (replicated) — the same leniency jit demands of argument
+        shardings.
+        """
+        sizes = mesh_axis_sizes(mesh)
+        used: set = set()
+        out = []
+        for dim, entry in zip(shape, self.physical(logical_axes)):
+            axes = entry if isinstance(entry, tuple) else (entry,)
+            axes = tuple(
+                a for a in axes if a is not None and a in sizes and a not in used
+            )
+            total = 1
+            for a in axes:
+                total *= sizes[a]
+            if not axes or dim % total != 0:
+                out.append(None)
+                continue
+            used.update(axes)
+            out.append(axes if len(axes) > 1 else axes[0])
+        return P(*out)
+
+
+@contextlib.contextmanager
+def use_rules(rules: Rules):
+    """Activate ``rules`` for :func:`logical` annotations under this scope."""
+    prev = getattr(_active, "rules", None)
+    _active.rules = rules
+    try:
+        yield rules
+    finally:
+        _active.rules = prev
+
+
+def current_rules() -> Rules | None:
+    return getattr(_active, "rules", None)
+
+
+def logical(x, axes):
+    """Constrain ``x`` to the sharding its logical ``axes`` resolve to.
+
+    A no-op (returns ``x`` itself) when no rules or no mesh are active, so
+    model code runs unmodified on a single device.
+    """
+    rules = current_rules()
+    mesh = current_mesh()
+    if rules is None or mesh is None:
+        return x
+    spec = rules.spec(axes, mesh, x.shape)
+    if all(s is None for s in spec):
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+# --------------------------------------------------------------------------- #
+# Parameter specs by name
+# --------------------------------------------------------------------------- #
+
+# Logical axes of each named parameter's *trailing* dims; leading dims (layer
+# stacks) are padded with None.  Unknown names stay replicated.
+_PARAM_AXES = {
+    # embeddings / unembedding
+    "embed": ("vocab", "embed_fsdp"),
+    "w_out": ("embed_fsdp", "vocab"),
+    # attention projections (column-, column-, column-, row-parallel)
+    "wq": ("embed_fsdp", "heads"),
+    "wk": ("embed_fsdp", "heads"),
+    "wv": ("embed_fsdp", "heads"),
+    "wo": ("heads", "embed_fsdp"),
+    "xq": ("embed_fsdp", "heads"),
+    "xk": ("embed_fsdp", "heads"),
+    "xv": ("embed_fsdp", "heads"),
+    "xo": ("heads", "embed_fsdp"),
+    # dense MLP
+    "wg": ("embed_fsdp", "ff"),
+    "wu": ("embed_fsdp", "ff"),
+    "wd": ("ff", "embed_fsdp"),
+    # mamba2 / rglru
+    "in_proj": ("embed_fsdp", "heads"),
+    "out_proj": ("heads", "embed_fsdp"),
+    "w_gate": ("embed_fsdp", "heads"),
+    "w_x": ("embed_fsdp", "heads"),
+    "w_r": ("embed_fsdp", "heads"),
+    "w_i": ("embed_fsdp", "heads"),
+    "w_out_proj": ("heads", "embed_fsdp"),
+}
+
+# Inside a "moe" subtree the 3-D expert weights gain a leading experts dim
+# and FSDP moves to the middle (matching the shard_map EP in_specs).
+_MOE_AXES = {
+    "router": (None, None),
+    "wg": ("experts", "embed_fsdp", None),
+    "wu": ("experts", "embed_fsdp", None),
+    "wd": ("experts", None, "embed_fsdp"),
+}
+
+
+def _path_keys(path) -> list:
+    keys = []
+    for entry in path:
+        name = getattr(entry, "key", None)
+        if name is None:
+            name = getattr(entry, "name", None)
+        if name is None and hasattr(entry, "idx"):
+            name = entry.idx
+        keys.append(name)
+    return keys
+
+
+def tree_param_specs(params, rules: Rules, mesh) -> dict:
+    """PartitionSpec pytree mirroring ``params`` (arrays or ShapeDtypeStructs).
+
+    Resolution is by leaf name through ``rules`` with divisibility checked
+    against the mesh, so the result is directly usable as jit in/out
+    shardings for any config in the registry.
+    """
+
+    def spec_for(path, leaf):
+        keys = _path_keys(path)
+        name = next((k for k in reversed(keys) if isinstance(k, str)), None)
+        table = _MOE_AXES if "moe" in keys else _PARAM_AXES
+        axes = table.get(name, _PARAM_AXES.get(name)) if name else None
+        shape = tuple(leaf.shape)
+        if axes is None or len(axes) > len(shape):
+            return P(*([None] * len(shape)))
+        pad = (None,) * (len(shape) - len(axes))
+        return rules.spec(pad + tuple(axes), mesh, shape)
+
+    return jax.tree_util.tree_map_with_path(spec_for, params)

@@ -12,9 +12,11 @@ them.  Cells that already have a result are skipped (incremental resume).
 
 # The dry-run (and ONLY the dry-run) needs 512 placeholder devices; jax locks
 # the device count on first init, so this must precede every other import.
+# setdefault, not assignment: callers (CI smoke-bench, tests) may have pinned
+# a smaller device count already.
 import os
 
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
 
 import argparse
 import json
@@ -31,6 +33,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import ALIASES, all_arch_ids, get_config
 from repro.configs.shapes import SHAPES, applicable_shapes
+from repro.dist.compat import cost_analysis, set_mesh
 from repro.dist.sharding import Rules, tree_param_specs, use_rules
 from repro.launch.mesh import make_production_mesh
 from repro.launch.specs import input_specs
@@ -162,7 +165,7 @@ def build_cell(arch: str, shape_name: str, multi_pod: bool, kv_quant: bool = Fal
     )
 
     t0 = time.time()
-    with use_rules(rules), jax.set_mesh(mesh):
+    with use_rules(rules), set_mesh(mesh):
         if kind == "train":
             from repro.train.optimizer import MixedPrecision
 
@@ -194,7 +197,6 @@ def build_cell(arch: str, shape_name: str, multi_pod: bool, kv_quant: bool = Fal
             pspecs = tree_param_specs(params_sds, rules, mesh)
             params_sh = named(mesh, pspecs)
             if kind == "prefill":
-                fn = partial(prefill, cfg=cfg)
                 jitted = jax.jit(
                     lambda params, batch: prefill(params, cfg, batch),
                     in_shardings=(params_sh,) + arg_sh,
@@ -214,7 +216,7 @@ def build_cell(arch: str, shape_name: str, multi_pod: bool, kv_quant: bool = Fal
         t_compile = time.time() - t0
 
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
+    cost = cost_analysis(compiled)
     hlo = compiled.as_text()
     coll = collective_stats(hlo)
 

@@ -12,6 +12,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.dist.compat import current_mesh, shard_map
 from repro.dist.sharding import logical
 from repro.models.config import ModelConfig
 from repro.models.layers import (
@@ -208,10 +209,7 @@ def moe_capacity(cfg: ModelConfig, n_tokens: int) -> int:
 
 
 def _current_mesh_info():
-    mesh = jax.sharding.get_abstract_mesh()
-    if mesh is None or not mesh.axis_names:
-        return None
-    return mesh
+    return current_mesh()
 
 
 def apply_moe_mlp(p, cfg: ModelConfig, x):
@@ -420,7 +418,7 @@ def _moe_shardmap(p, cfg: ModelConfig, x, mesh):
         return y.reshape(b, s, d), lb
 
     seq_spec = "model" if a2a_path else None
-    return jax.shard_map(
+    return shard_map(
         body,
         mesh=mesh,
         in_specs=(

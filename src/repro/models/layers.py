@@ -21,6 +21,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.dist.compat import shard_map
+
 F32 = jnp.float32
 
 # --------------------------------------------------------------------------- #
@@ -326,7 +328,7 @@ def seq_parallel_decode_attention(
         in_specs += [sc_spec, sc_spec]
         out_specs += [sc_spec, sc_spec]
         args += list(scales)
-    res = jax.shard_map(
+    res = shard_map(
         body,
         mesh=mesh,
         in_specs=tuple(in_specs),
