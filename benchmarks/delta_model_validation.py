@@ -19,20 +19,23 @@ from benchmarks.common import (
     load_graph,
     record,
 )
-from repro.algorithms import pagerank
 from repro.core.delta_model import fit_delta_model
+from repro.solve import Solver, pagerank_problem
 
 
 def run(P: int = DEFAULT_P) -> list:
     rows = []
     for gname in GRAPHS:
         g = load_graph(gname)
-        sync = pagerank(g, P=P, mode="sync")
-        asyn = pagerank(g, P=P, mode="async", min_chunk=MIN_CHUNK)
+        solver = Solver(
+            g, pagerank_problem(), n_workers=P, backend="host", min_chunk=MIN_CHUNK
+        )
+        sync = solver.solve(delta="sync")
+        asyn = solver.solve(delta="async")
         model = fit_delta_model(g, P, sync.rounds, asyn.rounds, delta_min=MIN_CHUNK)
         errs = []
         for d in DELTAS:
-            meas = pagerank(g, P=P, mode="delayed", delta=d, min_chunk=MIN_CHUNK)
+            meas = solver.solve(delta=d)
             pred = model.rounds(d)
             errs.append(abs(pred - meas.rounds) / max(meas.rounds, 1))
             rows.append(

@@ -8,8 +8,8 @@ the δ* minimizing the modeled TPU total time.
 from __future__ import annotations
 
 from benchmarks.common import DELTAS, MIN_CHUNK, emit, load_graph, record
-from repro.algorithms import pagerank
 from repro.core.delta_model import fit_delta_model
+from repro.solve import Solver, pagerank_problem
 
 
 def run(graphs=("kron", "web"), Ps=(4, 8, 16, 32)) -> list:
@@ -17,8 +17,11 @@ def run(graphs=("kron", "web"), Ps=(4, 8, 16, 32)) -> list:
     for gname in graphs:
         g = load_graph(gname)
         for P in Ps:
-            sync = pagerank(g, P=P, mode="sync")
-            asyn = pagerank(g, P=P, mode="async", min_chunk=MIN_CHUNK)
+            solver = Solver(
+                g, pagerank_problem(), n_workers=P, backend="host", min_chunk=MIN_CHUNK
+            )
+            sync = solver.solve(delta="sync")
+            asyn = solver.solve(delta="async")
             model = fit_delta_model(g, P, sync.rounds, asyn.rounds, delta_min=MIN_CHUNK)
             best = model.best_delta(DELTAS + [model.B])
             rows.append(

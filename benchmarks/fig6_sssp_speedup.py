@@ -2,6 +2,10 @@
 
 Paper finding: fewer updates per round than PR → buffering helps less; Road
 and Web should show no benefit.
+
+One ``Solver`` per graph serves the sweep from its schedule cache; wall
+times come from ``EngineResult.total_time_s`` (compile cost excluded), so
+the sync baseline and the δ points compare like with like.
 """
 
 from __future__ import annotations
@@ -15,22 +19,25 @@ from benchmarks.common import (
     load_graph,
     record,
 )
-from repro.algorithms import sssp
 from repro.core.delta_model import fit_delta_model
+from repro.solve import Solver, sssp_problem
 
 
 def run(P: int = DEFAULT_P) -> list:
     rows = []
     for gname in GRAPHS:
         g = load_graph(gname, kind="sssp")
-        sync = sssp(g, P=P, mode="sync")
-        t_sync = sync.rounds * sync.avg_round_time_s
-        asyn = sssp(g, P=P, mode="async", min_chunk=MIN_CHUNK)
+        solver = Solver(
+            g, sssp_problem(), n_workers=P, backend="host", min_chunk=MIN_CHUNK
+        )
+        sync = solver.solve(delta="sync")
+        t_sync = sync.total_time_s
+        asyn = solver.solve(delta="async")
         model = fit_delta_model(g, P, sync.rounds, asyn.rounds, delta_min=MIN_CHUNK)
         m_sync = model.total_time_s(model.B)
 
         def add(label, res, d):
-            t = res.rounds * res.avg_round_time_s
+            t = res.total_time_s
             m = model.total_time_s(d)
             rows.append(
                 {
@@ -44,12 +51,12 @@ def run(P: int = DEFAULT_P) -> list:
             emit(
                 f"fig6/{gname}/{label}",
                 t * 1e6,
-                f"wallx={t_sync/t:.3f};modelx={m_sync/m:.3f};rounds={res.rounds}",
+                f"wallx={t_sync / t:.3f};modelx={m_sync / m:.3f};rounds={res.rounds}",
             )
 
         add("async", asyn, model.delta_min)
         for d in DELTAS:
-            r = sssp(g, P=P, mode="delayed", delta=d, min_chunk=MIN_CHUNK)
+            r = solver.solve(delta=d)
             add(f"delayed{d}", r, d)
     record("fig6_sssp_speedup", rows)
     return rows

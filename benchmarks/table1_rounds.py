@@ -3,20 +3,23 @@
 from __future__ import annotations
 
 from benchmarks.common import DEFAULT_P, GRAPHS, MIN_CHUNK, emit, load_graph, record
-from repro.algorithms import pagerank
+from repro.solve import Solver, pagerank_problem
 
 
 def run(deltas=(256,)) -> list:
     rows = []
     for gname in GRAPHS:
         g = load_graph(gname)
-        for mode, delta in [("sync", None), ("async", None)] + [
-            ("delayed", d) for d in deltas
-        ]:
-            r = pagerank(
-                g, P=DEFAULT_P, mode=mode, delta=delta, min_chunk=MIN_CHUNK
-            )
-            label = mode if mode != "delayed" else f"delayed{delta}"
+        solver = Solver(
+            g,
+            pagerank_problem(),
+            n_workers=DEFAULT_P,
+            backend="host",
+            min_chunk=MIN_CHUNK,
+        )
+        for delta in ["sync", "async", *deltas]:
+            r = solver.solve(delta=delta)
+            label = delta if isinstance(delta, str) else f"delayed{delta}"
             rows.append(
                 {
                     "graph": gname,

@@ -1,40 +1,80 @@
-"""Quickstart: the paper's three execution disciplines on one graph.
+"""Quickstart: one Solver, the paper's three execution disciplines + auto-δ.
 
 Runs PageRank on a synthetic scale-free graph under synchronous (Jacobi),
 asynchronous (finest-δ block Gauss–Seidel), and delayed-asynchronous
-(hybrid δ) schedules, and prints the paper's core trade-off: rounds to
-convergence vs commit (flush) traffic.
+(hybrid δ) schedules — all through one `Solver`, which caches the stripe
+schedule and the compiled loop per δ — then lets `delta="auto"` pick δ* from
+the analytic cost model, and shows the warm-cache replay cost.
 
-    PYTHONPATH=src python examples/quickstart.py
+    PYTHONPATH=src python examples/quickstart.py [--scale 13]
 """
+
+import argparse
 
 import numpy as np
 
-from repro.algorithms import pagerank
 from repro.graphs.generators import make_graph
+from repro.solve import Solver, pagerank_problem
 
 
-def main():
-    g = make_graph("twitter", scale=13, efactor=8, kind="pagerank")
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=int, default=13)
+    ap.add_argument("--workers", type=int, default=16)
+    args = ap.parse_args(argv)
+
+    g = make_graph("twitter", scale=args.scale, efactor=8, kind="pagerank")
     print(f"graph: {g.stats()}\n")
-    print(f"{'mode':12s} {'δ':>6s} {'rounds':>7s} {'flushes':>8s} "
-          f"{'flush MiB':>10s} {'total s':>9s}")
+    solver = Solver(
+        g, pagerank_problem(), n_workers=args.workers, backend="host", min_chunk=16
+    )
+
+    print(
+        f"{'schedule':14s} {'δ':>6s} {'rounds':>7s} {'flushes':>8s} "
+        f"{'flush MiB':>10s} {'total s':>9s}"
+    )
     results = {}
-    for mode, delta in [("sync", None), ("delayed", 1024), ("delayed", 256),
-                        ("async", None)]:
-        r = pagerank(g, P=16, mode=mode, delta=delta, min_chunk=16)
-        label = mode if delta is None else f"{mode}"
-        key = f"{mode}{delta or ''}"
-        results[key] = r
-        total = r.rounds * r.avg_round_time_s
-        print(f"{label:12s} {r.delta:6d} {r.rounds:7d} {r.flushes:8d} "
-              f"{r.flush_bytes/2**20:10.2f} {total:9.4f}")
-    # all modes converge to the same fixed point
+    for label, delta in [
+        ("sync", "sync"),
+        ("delayed", 1024),
+        ("delayed", 256),
+        ("async", "async"),
+    ]:
+        r = solver.solve(delta=delta)
+        results[f"{label}{delta}"] = r
+        print(
+            f"{label:14s} {r.delta:6d} {r.rounds:7d} {r.flushes:8d} "
+            f"{r.flush_bytes / 2**20:10.2f} {r.total_time_s:9.4f}"
+        )
+
+    # δ="auto" probes sync/async round counts (reusing the cached schedules
+    # above) and asks the TPU cost model for δ*.
+    r_auto = solver.solve(delta="auto")
+    print(
+        f"{'auto':14s} {r_auto.delta:6d} {r_auto.rounds:7d} {r_auto.flushes:8d} "
+        f"{r_auto.flush_bytes / 2**20:10.2f} {r_auto.total_time_s:9.4f}"
+    )
+
+    # all schedules converge to the same fixed point
     xs = [r.x for r in results.values()]
     drift = max(np.abs(a - xs[0]).max() for a in xs[1:])
     print(f"\nmax fixed-point drift across schedules: {drift:.2e}")
-    print("async converges in fewer rounds; delayed-δ keeps most of that "
-          "while cutting flushes by the buffer factor — the paper's hybrid.")
+
+    # warm cache: a second query on the same (graph, problem, δ) rebuilds and
+    # retraces nothing — this is what serving-scale batching rides on.
+    before = dict(solver.stats)
+    r2 = solver.solve(delta=256)
+    assert solver.stats["schedule_builds"] == before["schedule_builds"]
+    assert solver.stats["traces"] == before["traces"]
+    print(
+        f"warm replay at δ=256: {r2.total_time_s:.4f} s "
+        f"(schedule builds {solver.stats['schedule_builds']}, "
+        f"compiles {solver.stats['compiles']} — unchanged)"
+    )
+    print(
+        "async converges in fewer rounds; delayed-δ keeps most of that while "
+        "cutting flushes by the buffer factor — the paper's hybrid."
+    )
 
 
 if __name__ == "__main__":

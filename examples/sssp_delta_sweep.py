@@ -2,31 +2,57 @@
 
 Sweeps the delay parameter on two topologies with opposite behaviour
 (paper Fig 6): a scale-free graph that tolerates delay, and a huge-diameter
-road grid where delaying updates slows information transfer.  Then asks the
-δ-model (fit from two probes) to pick δ* and compares.
+road grid where delaying updates slows information transfer.  One `Solver`
+per graph serves the whole sweep from its schedule cache; `delta="auto"`
+fits the δ-model from two probes and picks δ*.  Ends with multi-source SSSP
+answered as a single batched lowering.
 
-    PYTHONPATH=src python examples/sssp_delta_sweep.py
+    PYTHONPATH=src python examples/sssp_delta_sweep.py [--scale 12]
 """
 
-from repro.algorithms import sssp
-from repro.core.delta_model import fit_delta_model
+import argparse
+
+import numpy as np
+
 from repro.graphs.generators import make_graph
+from repro.solve import Solver, multi_source_x0, sssp_problem
 
 
-def main():
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=int, default=12)
+    ap.add_argument("--workers", type=int, default=16)
+    args = ap.parse_args(argv)
+
     for name in ("twitter", "road"):
-        g = make_graph(name, scale=12, efactor=8, kind="sssp")
-        sync = sssp(g, P=16, mode="sync")
-        asyn = sssp(g, P=16, mode="async", min_chunk=16)
+        g = make_graph(name, scale=args.scale, efactor=8, kind="sssp")
+        solver = Solver(
+            g, sssp_problem(), n_workers=args.workers, backend="host", min_chunk=16
+        )
+        sync = solver.solve(delta="sync")
+        asyn = solver.solve(delta="async")
         print(f"\n{name}: sync={sync.rounds} rounds, async={asyn.rounds} rounds")
         print(f"{'δ':>6s} {'rounds':>7s} {'flushes/round':>14s}")
         for d in (64, 256, 1024, 4096):
-            r = sssp(g, P=16, mode="delayed", delta=d, min_chunk=16)
+            r = solver.solve(delta=d)
             print(f"{d:6d} {r.rounds:7d} {r.flushes / r.rounds:14.1f}")
-        model = fit_delta_model(g, 16, sync.rounds, asyn.rounds, delta_min=16)
-        print(f"δ-model: locality={model.locality:.2f} → δ* = {model.best_delta()}"
-              f"  (modeled TPU time {model.total_time_s(model.best_delta())*1e3:.2f} ms"
-              f" vs async {model.total_time_s(model.delta_min)*1e3:.2f} ms)")
+
+        # the probes reuse the sync/async schedules already in the cache
+        delta_star = solver.resolve_delta("auto")
+        model = solver.delta_model
+        print(
+            f"δ-model: locality={model.locality:.2f} → δ* = {delta_star}"
+            f"  (modeled TPU time {model.total_time_s(delta_star) * 1e3:.2f} ms"
+            f" vs async {model.total_time_s(model.delta_min) * 1e3:.2f} ms)"
+        )
+
+        # multi-source SSSP: Q sources, one schedule, one compiled loop
+        sources = np.arange(4) * (g.n // 4)
+        batch = solver.solve_batch(multi_source_x0(g, sources), delta=delta_star)
+        print(
+            f"batched {batch.Q}-source SSSP @ δ*: {batch.rounds} rounds, "
+            f"per-query convergence {batch.rounds_per_query.tolist()}"
+        )
 
 
 if __name__ == "__main__":

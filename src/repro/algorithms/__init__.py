@@ -1,6 +1,18 @@
-from repro.algorithms.pagerank import pagerank
-from repro.algorithms.sssp import sssp
-from repro.algorithms.cc import connected_components
-from repro.algorithms.jacobi import jacobi_solve
+# Back-compat algorithm wrappers over the unified repro.solve API.
+# New code should use repro.solve.Solver with the *_problem factories.
+from repro.algorithms.cc import cc_problem, connected_components
+from repro.algorithms.jacobi import jacobi_graph, jacobi_problem, jacobi_solve
+from repro.algorithms.pagerank import pagerank, pagerank_problem
+from repro.algorithms.sssp import sssp, sssp_problem
 
-__all__ = ["pagerank", "sssp", "connected_components", "jacobi_solve"]
+__all__ = [
+    "pagerank",
+    "pagerank_problem",
+    "sssp",
+    "sssp_problem",
+    "connected_components",
+    "cc_problem",
+    "jacobi_solve",
+    "jacobi_graph",
+    "jacobi_problem",
+]

@@ -3,40 +3,41 @@
 min-plus semiring with all-zero edge weights: the reduction is simply
 ``min over in-neighbour labels``; ``row_update`` keeps the vertex's own label
 in the running min.  Converges when no label changes (same criterion family
-as SSSP).  Intended for symmetric graphs.
+as SSSP — the two share one kernel pair in :mod:`repro.solve.problem`).
+Intended for symmetric graphs.
+
+The problem spec lives in :func:`repro.solve.cc_problem` (its
+``edge_values`` hook zeroes the weights, so callers pass the graph as-is);
+this wrapper is back-compat sugar over :class:`repro.solve.Solver`.
 """
 
 from __future__ import annotations
 
-import jax.numpy as jnp
-import numpy as np
-
-from repro.core.engine import EngineResult, make_schedule, run_host, run_jit
-from repro.core.semiring import MIN_PLUS
+from repro.core.engine import MIN_CHUNK, EngineResult
 from repro.graphs.formats import CSRGraph
+from repro.solve import Solver, cc_problem, resolve_legacy_args
 
-__all__ = ["connected_components"]
+__all__ = ["connected_components", "cc_problem"]
 
 
 def connected_components(
     graph: CSRGraph,
     P: int = 8,
-    mode: str = "delayed",
-    delta: int | None = None,
+    mode: str | None = None,
+    delta=None,
     max_rounds: int = 10_000,
-    host_loop: bool = True,
+    host_loop: bool | None = None,
     min_chunk: int | None = None,
+    backend: str | None = None,
 ) -> EngineResult:
-    zero_w = graph.with_values(np.zeros(graph.nnz, dtype=np.int32), name=graph.name)
-    kwargs = {} if min_chunk is None else {"min_chunk": min_chunk}
-    sched = make_schedule(zero_w, P, delta, MIN_PLUS, mode=mode, **kwargs)
-
-    def row_update(old, reduced, rows):
-        return jnp.minimum(old, reduced)
-
-    def residual(x_prev, x_new):
-        return jnp.sum((x_prev != x_new).astype(jnp.float32))
-
-    x0 = np.arange(graph.n, dtype=np.int32)
-    runner = run_host if host_loop else run_jit
-    return runner(sched, MIN_PLUS, x0, row_update, residual, tol=0.5, max_rounds=max_rounds)
+    """Label propagation with ``P`` workers and commit period ``delta``."""
+    delta, backend = resolve_legacy_args(mode, delta, host_loop, backend)
+    solver = Solver(
+        graph,
+        cc_problem(max_rounds=max_rounds),
+        n_workers=P,
+        delta=delta,
+        backend=backend or "host",
+        min_chunk=MIN_CHUNK if min_chunk is None else min_chunk,
+    )
+    return solver.solve()

@@ -6,18 +6,36 @@ diagonally dominant ``A`` via the splitting ``x'_i = (b_i − Σ_{j≠i} A_ij x_
 / A_ii``).  δ interpolates Jacobi (sync) → Gauss-Seidel (async), which is the
 numerical-analysis view of the paper's hybrid (§II-A cites exactly this
 Jacobi/Gauss-Seidel contrast for PageRank).
+
+The problem spec lives in :func:`repro.solve.jacobi_problem`;
+:func:`jacobi_graph` builds the pull-formulation graph from the COO matrix,
+and this wrapper is back-compat sugar over :class:`repro.solve.Solver`.
 """
 
 from __future__ import annotations
 
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core.engine import EngineResult, make_schedule, run_host, run_jit
-from repro.core.semiring import PLUS_TIMES
+from repro.core.engine import MIN_CHUNK, EngineResult
 from repro.graphs.formats import CSRGraph
+from repro.solve import Solver, jacobi_problem, resolve_legacy_args
 
-__all__ = ["jacobi_solve"]
+__all__ = ["jacobi_solve", "jacobi_graph", "jacobi_problem"]
+
+
+def jacobi_graph(
+    n: int,
+    offdiag_rows: np.ndarray,
+    offdiag_cols: np.ndarray,
+    offdiag_vals: np.ndarray,
+    diag: np.ndarray,
+) -> CSRGraph:
+    """Pull formulation of the Jacobi splitting: edge ``(col -> row)`` with
+    value ``-A_ij / A_ii``."""
+    values = (-offdiag_vals / diag[offdiag_rows]).astype(np.float32)
+    return CSRGraph.from_edges(
+        n, src=offdiag_cols, dst=offdiag_rows, values=values, name="jacobi", dedup=False
+    )
 
 
 def jacobi_solve(
@@ -28,33 +46,23 @@ def jacobi_solve(
     diag: np.ndarray,
     b: np.ndarray,
     P: int = 8,
-    mode: str = "delayed",
-    delta: int | None = None,
+    mode: str | None = None,
+    delta=None,
     tol: float = 1e-6,
     max_rounds: int = 5000,
-    host_loop: bool = True,
+    host_loop: bool | None = None,
     min_chunk: int | None = None,
+    backend: str | None = None,
 ) -> EngineResult:
     """Solve ``A x = b``; A given as off-diagonal COO + diagonal vector."""
-    # Pull formulation: edge (col -> row) with value -A_ij / A_ii.
-    values = (-offdiag_vals / diag[offdiag_rows]).astype(np.float32)
-    graph = CSRGraph.from_edges(
-        n, src=offdiag_cols, dst=offdiag_rows, values=values, name="jacobi", dedup=False
+    delta, backend = resolve_legacy_args(mode, delta, host_loop, backend)
+    graph = jacobi_graph(n, offdiag_rows, offdiag_cols, offdiag_vals, diag)
+    solver = Solver(
+        graph,
+        jacobi_problem(diag, b, tol=tol, max_rounds=max_rounds),
+        n_workers=P,
+        delta=delta,
+        backend=backend or "host",
+        min_chunk=MIN_CHUNK if min_chunk is None else min_chunk,
     )
-    kwargs = {} if min_chunk is None else {"min_chunk": min_chunk}
-    sched = make_schedule(graph, P, delta, PLUS_TIMES, mode=mode, **kwargs)
-
-    # b / diag gathered per row; padded slot (row == n) contributes 0.
-    b_over_diag_ext = jnp.asarray(
-        np.concatenate([(b / diag).astype(np.float32), [0.0]])
-    )
-
-    def row_update(old, reduced, rows):
-        return b_over_diag_ext[rows] + reduced
-
-    def residual(x_prev, x_new):
-        return jnp.sum(jnp.abs(x_new - x_prev))
-
-    x0 = np.zeros(n, dtype=np.float32)
-    runner = run_host if host_loop else run_jit
-    return runner(sched, PLUS_TIMES, x0, row_update, residual, tol, max_rounds)
+    return solver.solve()

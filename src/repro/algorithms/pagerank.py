@@ -6,42 +6,42 @@ Edge values hold ``d / outdeg(v)`` (precomputed by the graph generators), so
 the semiring reduction yields the damped sum and ``row_update`` adds the
 teleport term.  Convergence follows the paper: total absolute score change
 across vertices ≤ 1e-4.
+
+The problem spec lives in :func:`repro.solve.pagerank_problem`; this wrapper
+is back-compat sugar over :class:`repro.solve.Solver`.  ``mode=`` and
+``host_loop=`` are deprecated — pass ``delta='sync'|'async'|'auto'|<int>``
+and ``backend='host'|'jit'|'sharded'`` instead.
 """
 
 from __future__ import annotations
 
-import jax.numpy as jnp
-import numpy as np
-
-from repro.core.engine import EngineResult, make_schedule, run_host, run_jit
-from repro.core.semiring import PLUS_TIMES
+from repro.core.engine import MIN_CHUNK, EngineResult
 from repro.graphs.formats import CSRGraph
+from repro.solve import Solver, pagerank_problem, resolve_legacy_args
 
-__all__ = ["pagerank"]
+__all__ = ["pagerank", "pagerank_problem"]
 
 
 def pagerank(
     graph: CSRGraph,
     P: int = 8,
-    mode: str = "delayed",
-    delta: int | None = None,
+    mode: str | None = None,
+    delta=None,
     damping: float = 0.85,
     tol: float = 1e-4,
     max_rounds: int = 1000,
-    host_loop: bool = True,
+    host_loop: bool | None = None,
     min_chunk: int | None = None,
+    backend: str | None = None,
 ) -> EngineResult:
-    """Run PageRank in ``mode`` ∈ {sync, async, delayed} with ``P`` workers."""
-    kwargs = {} if min_chunk is None else {"min_chunk": min_chunk}
-    sched = make_schedule(graph, P, delta, PLUS_TIMES, mode=mode, **kwargs)
-    teleport = np.float32((1.0 - damping) / graph.n)
-
-    def row_update(old, reduced, rows):
-        return teleport + reduced
-
-    def residual(x_prev, x_new):
-        return jnp.sum(jnp.abs(x_new - x_prev))
-
-    x0 = np.full(graph.n, 1.0 / graph.n, dtype=np.float32)
-    runner = run_host if host_loop else run_jit
-    return runner(sched, PLUS_TIMES, x0, row_update, residual, tol, max_rounds)
+    """Run PageRank with ``P`` workers and commit period ``delta``."""
+    delta, backend = resolve_legacy_args(mode, delta, host_loop, backend)
+    solver = Solver(
+        graph,
+        pagerank_problem(damping=damping, tol=tol, max_rounds=max_rounds),
+        n_workers=P,
+        delta=delta,
+        backend=backend or "host",
+        min_chunk=MIN_CHUNK if min_chunk is None else min_chunk,
+    )
+    return solver.solve()

@@ -5,42 +5,41 @@ min-plus pull relaxation with 32-bit integer distances (as in the paper):
 ``x'[u] = min(x[u], min_{v ∈ in(u)} x[v] + w(v, u))``
 
 Stopping criterion per the paper: no update generated in the last round.
+
+The problem spec lives in :func:`repro.solve.sssp_problem` (the min-label
+kernel is shared with connected components); this wrapper is back-compat
+sugar over :class:`repro.solve.Solver`.  For multi-source SSSP in one
+lowering, use ``solver.solve_batch(multi_source_x0(graph, sources))``.
 """
 
 from __future__ import annotations
 
-import jax.numpy as jnp
-import numpy as np
-
-from repro.core.engine import EngineResult, make_schedule, run_host, run_jit
-from repro.core.semiring import INT_INF, MIN_PLUS
+from repro.core.engine import MIN_CHUNK, EngineResult
 from repro.graphs.formats import CSRGraph
+from repro.solve import Solver, resolve_legacy_args, sssp_problem
 
-__all__ = ["sssp"]
+__all__ = ["sssp", "sssp_problem"]
 
 
 def sssp(
     graph: CSRGraph,
     source: int = 0,
     P: int = 8,
-    mode: str = "delayed",
-    delta: int | None = None,
+    mode: str | None = None,
+    delta=None,
     max_rounds: int = 10_000,
-    host_loop: bool = True,
+    host_loop: bool | None = None,
     min_chunk: int | None = None,
+    backend: str | None = None,
 ) -> EngineResult:
-    """Bellman-Ford from ``source`` in ``mode`` ∈ {sync, async, delayed}."""
-    kwargs = {} if min_chunk is None else {"min_chunk": min_chunk}
-    sched = make_schedule(graph, P, delta, MIN_PLUS, mode=mode, **kwargs)
-
-    def row_update(old, reduced, rows):
-        return jnp.minimum(old, reduced)
-
-    def residual(x_prev, x_new):
-        # number of vertices whose distance improved this round
-        return jnp.sum((x_prev != x_new).astype(jnp.float32))
-
-    x0 = np.full(graph.n, INT_INF, dtype=np.int32)
-    x0[source] = 0
-    runner = run_host if host_loop else run_jit
-    return runner(sched, MIN_PLUS, x0, row_update, residual, tol=0.5, max_rounds=max_rounds)
+    """Bellman-Ford from ``source`` with ``P`` workers and commit period δ."""
+    delta, backend = resolve_legacy_args(mode, delta, host_loop, backend)
+    solver = Solver(
+        graph,
+        sssp_problem(source=source, max_rounds=max_rounds),
+        n_workers=P,
+        delta=delta,
+        backend=backend or "host",
+        min_chunk=MIN_CHUNK if min_chunk is None else min_chunk,
+    )
+    return solver.solve()

@@ -6,7 +6,10 @@ from repro.core.engine import (
     DeviceSchedule,
     EngineResult,
     make_schedule,
+    make_solve_fn,
+    make_solve_fn_q,
     round_fn,
+    round_fn_q,
     run_host,
     run_jit,
 )
@@ -17,7 +20,10 @@ __all__ = [
     "DeviceSchedule",
     "EngineResult",
     "make_schedule",
+    "make_solve_fn",
+    "make_solve_fn_q",
     "round_fn",
+    "round_fn_q",
     "run_host",
     "run_jit",
     "INT_INF",

@@ -69,9 +69,8 @@ class DeltaModel:
     def round_cost_s(self, delta: int) -> float:
         hw = self.hw
         compute = 2.0 * self.edges / self.P / hw.peak_flops  # ⊕/⊗ per edge
-        memory = (
-            (2 * self.edges + 2 * self.P * self.B) * self.bytes_per_elem
-        ) / self.P / hw.hbm_bw
+        mem_bytes = (2 * self.edges + 2 * self.P * self.B) * self.bytes_per_elem
+        memory = mem_bytes / self.P / hw.hbm_bw
         flushes = -(-self.B // delta)
         commit = flushes * (
             hw.collective_latency_s + self.P * delta * self.bytes_per_elem / hw.ici_bw

@@ -36,6 +36,11 @@ __all__ = [
     "DeviceSchedule",
     "make_schedule",
     "round_fn",
+    "round_fn_q",
+    "make_solve_fn",
+    "make_solve_fn_q",
+    "host_loop",
+    "execute_solve_fn",
     "run_host",
     "run_jit",
     "MIN_CHUNK",
@@ -108,7 +113,9 @@ def make_schedule(
     )
 
 
-def _commit_step(s, x_ext, sched: DeviceSchedule, semiring: Semiring, row_update):
+def _commit_step(
+    s, x_ext, sched: DeviceSchedule, semiring: Semiring, row_update, q=None
+):
     """One commit step: chunk-SpMV for all workers + publish."""
     P, delta = sched.P, sched.delta
     src_s = jax.lax.dynamic_index_in_dim(sched.src, s, 0, keepdims=False)
@@ -124,7 +131,10 @@ def _commit_step(s, x_ext, sched: DeviceSchedule, semiring: Semiring, row_update
         contrib.reshape(-1), seg.reshape(-1), P * (delta + 1)
     ).reshape(P, delta + 1)[:, :delta]
     old = x_ext[rows_s]  # (P, delta)
-    new = row_update(old, reduced, rows_s)
+    if q is None:
+        new = row_update(old, reduced, rows_s)
+    else:
+        new = row_update(old, reduced, rows_s, q)
     # Publish: the flush.  Padding rows all point at the dump slot (index n).
     return x_ext.at[rows_s.reshape(-1)].set(
         new.reshape(-1).astype(x_ext.dtype), mode="drop", unique_indices=False
@@ -143,6 +153,76 @@ def round_fn(sched: DeviceSchedule, semiring: Semiring, row_update) -> Callable:
     return body
 
 
+def round_fn_q(sched: DeviceSchedule, semiring: Semiring, row_update) -> Callable:
+    """Return jit-able ``(x_ext, q) -> x_ext`` for query-parameterized problems.
+
+    ``q`` is a per-query pytree (e.g. a personalized-PageRank teleport vector)
+    threaded to ``row_update(old, reduced, rows, q)``.  Keeping ``q`` a formal
+    argument (rather than a closure constant) is what lets
+    :func:`repro.solve.batch.solve_batch` vmap one round function over a batch
+    of queries in a single lowering.
+    """
+
+    def body(x_ext, q):
+        step = partial(
+            _commit_step, sched=sched, semiring=semiring, row_update=row_update, q=q
+        )
+        return jax.lax.fori_loop(0, sched.S, step, x_ext)
+
+    return body
+
+
+def make_solve_fn_q(
+    sched: DeviceSchedule, semiring: Semiring, row_update, residual_fn
+) -> Callable:
+    """Fused device loop ``(x_ext, q, tol, max_rounds) -> carry``.
+
+    The returned function runs rounds until ``residual ≤ tol`` or
+    ``max_rounds``, entirely on device (``lax.while_loop``), and returns the
+    carry ``(x_ext, residual, rounds, converged)``.  ``tol``/``max_rounds``
+    are traced arguments, so changing them never retraces.
+    """
+    rnd = round_fn_q(sched, semiring, row_update)
+
+    def solve_loop(x_ext, q, tol, max_rounds):
+        def cond(carry):
+            _, _, rounds, converged = carry
+            return jnp.logical_and(rounds < max_rounds, jnp.logical_not(converged))
+
+        def body(carry):
+            x, _, rounds, _ = carry
+            x_new = rnd(x, q)
+            res = residual_fn(x[:-1], x_new[:-1]).astype(jnp.float32)
+            return x_new, res, rounds + 1, res <= tol
+
+        init = (
+            x_ext,
+            jnp.asarray(np.inf, jnp.float32),
+            jnp.asarray(0, jnp.int32),
+            jnp.asarray(False),
+        )
+        return jax.lax.while_loop(cond, body, init)
+
+    return solve_loop
+
+
+def make_solve_fn(
+    sched: DeviceSchedule, semiring: Semiring, row_update, residual_fn
+) -> Callable:
+    """``(x_ext, tol, max_rounds) -> carry``: query-free fused device loop."""
+    fn_q = make_solve_fn_q(
+        sched,
+        semiring,
+        lambda old, red, rows, q: row_update(old, red, rows),
+        residual_fn,
+    )
+
+    def solve_loop(x_ext, tol, max_rounds):
+        return fn_q(x_ext, jnp.zeros((), jnp.int32), tol, max_rounds)
+
+    return solve_loop
+
+
 @dataclasses.dataclass
 class EngineResult:
     x: np.ndarray  # (n,) converged vertex values
@@ -151,15 +231,58 @@ class EngineResult:
     flushes: int  # total commit collectives executed
     flush_bytes: int  # total bytes published to the global store
     residuals: list  # per-round convergence residuals
-    round_times_s: list  # host-measured wall time per round (jitted round)
+    round_times_s: list  # host-measured wall time per round, compile excluded
     delta: int
     P: int
+    compile_time_s: float = 0.0  # trace+compile cost paid by THIS run (0 = warm)
+    total_time_s: float = 0.0  # device execution wall time, compile excluded
 
     @property
     def avg_round_time_s(self) -> float:
-        # Skip round 0 (compile) when more rounds exist.
-        ts = self.round_times_s[1:] or self.round_times_s
-        return float(np.mean(ts)) if ts else 0.0
+        if self.round_times_s:
+            return float(np.mean(self.round_times_s))
+        return self.total_time_s / self.rounds if self.rounds else 0.0
+
+    @classmethod
+    def from_run(
+        cls,
+        sched: DeviceSchedule,
+        semiring: Semiring,
+        x_ext,
+        *,
+        rounds: int,
+        converged: bool,
+        residuals: list,
+        round_times_s: list,
+        compile_time_s: float = 0.0,
+        total_time_s: float | None = None,
+    ) -> "EngineResult":
+        """Single authority for counter/timing semantics across every runner.
+
+        ``flushes`` counts commit collectives actually executed — ``rounds·S``,
+        including the round that detected convergence.  Timings are normalized
+        so host-loop and fused-device runs compare like with like: compile cost
+        is reported separately in ``compile_time_s`` (never folded into a round
+        time), and ``total_time_s`` is post-compile execution wall time, so
+        ``rounds · avg_round_time_s ≈ total_time_s`` on both paths.
+        """
+        bytes_per = np.dtype(semiring.dtype).itemsize
+        flushes = rounds * sched.S
+        if total_time_s is None:
+            total_time_s = float(np.sum(round_times_s)) if round_times_s else 0.0
+        return cls(
+            x=np.asarray(x_ext[:-1]),
+            rounds=rounds,
+            converged=converged,
+            flushes=flushes,
+            flush_bytes=flushes * sched.P * sched.delta * bytes_per,
+            residuals=residuals,
+            round_times_s=round_times_s,
+            delta=sched.delta,
+            P=sched.P,
+            compile_time_s=compile_time_s,
+            total_time_s=total_time_s,
+        )
 
 
 def run_host(
@@ -175,11 +298,43 @@ def run_host(
 
     ``residual_fn(x_prev, x_new) -> scalar``; converged when ``residual ≤ tol``.
     Used by benchmarks (per-round times/residuals like the paper's Table I).
+    The round function is compiled ahead of the loop so every entry of
+    ``round_times_s`` is a post-compile measurement.
     """
     x_ext = jnp.concatenate(
         [jnp.asarray(x0, dtype=semiring.dtype), jnp.asarray([semiring.zero])]
     )
-    rnd = jax.jit(round_fn(sched, semiring, row_update))
+    t0 = time.perf_counter()
+    rnd = jax.jit(round_fn(sched, semiring, row_update)).lower(x_ext).compile()
+    compile_time_s = time.perf_counter() - t0
+    return host_loop(
+        rnd,
+        sched,
+        semiring,
+        x_ext,
+        residual_fn,
+        tol,
+        max_rounds,
+        compile_time_s=compile_time_s,
+    )
+
+
+def host_loop(
+    rnd: Callable,
+    sched: DeviceSchedule,
+    semiring: Semiring,
+    x_ext,
+    residual_fn: Callable,
+    tol: float,
+    max_rounds: int,
+    compile_time_s: float = 0.0,
+) -> EngineResult:
+    """The host-driven convergence loop over a compiled round ``x_ext -> x_ext``.
+
+    Shared by :func:`run_host` and every :class:`repro.solve.Solver` backend
+    that steps rounds from the host (host + sharded) — one copy of the
+    timing/stopping semantics.
+    """
     residuals, times = [], []
     converged = False
     rounds = 0
@@ -194,17 +349,51 @@ def run_host(
         if res <= tol:
             converged = True
             break
-    bytes_per = np.dtype(semiring.dtype).itemsize
-    return EngineResult(
-        x=np.asarray(x_ext[:-1]),
+    return EngineResult.from_run(
+        sched,
+        semiring,
+        x_ext,
         rounds=rounds,
         converged=converged,
-        flushes=rounds * sched.S,
-        flush_bytes=rounds * sched.S * sched.P * sched.delta * bytes_per,
         residuals=residuals,
         round_times_s=times,
-        delta=sched.delta,
-        P=sched.P,
+        compile_time_s=compile_time_s,
+    )
+
+
+def execute_solve_fn(
+    fn: Callable,
+    sched: DeviceSchedule,
+    semiring: Semiring,
+    x_ext,
+    q,
+    tol: float,
+    max_rounds: int,
+    compile_time_s: float = 0.0,
+) -> EngineResult:
+    """Run a compiled fused loop and normalize its result.
+
+    ``fn`` is a compiled :func:`make_solve_fn_q` (pass its ``q``) or
+    :func:`make_solve_fn` (pass ``q=None``).  Shared by :func:`run_jit` and
+    the Solver's jit backend — one copy of the execution/timing semantics.
+    """
+    tol_a = jnp.asarray(tol, jnp.float32)
+    mr_a = jnp.asarray(max_rounds, jnp.int32)
+    args = (x_ext, tol_a, mr_a) if q is None else (x_ext, q, tol_a, mr_a)
+    t0 = time.perf_counter()
+    x_out, res, rounds, converged = fn(*args)
+    x_out.block_until_ready()
+    total_time_s = time.perf_counter() - t0
+    return EngineResult.from_run(
+        sched,
+        semiring,
+        x_out,
+        rounds=int(rounds),
+        converged=bool(converged),
+        residuals=[float(res)],
+        round_times_s=[],
+        compile_time_s=compile_time_s,
+        total_time_s=total_time_s,
     )
 
 
@@ -218,35 +407,15 @@ def run_jit(
     max_rounds: int = 1000,
 ) -> EngineResult:
     """Fully fused device loop (``lax.while_loop``) — production path."""
-    rnd = round_fn(sched, semiring, row_update)
-
-    def cond(carry):
-        _, res, rounds, converged = carry
-        return jnp.logical_and(rounds < max_rounds, jnp.logical_not(converged))
-
-    def body(carry):
-        x_ext, _, rounds, _ = carry
-        x_new = rnd(x_ext)
-        res = residual_fn(x_ext[:-1], x_new[:-1]).astype(jnp.float32)
-        return x_new, res, rounds + 1, res <= tol
-
     x_ext = jnp.concatenate(
         [jnp.asarray(x0, dtype=semiring.dtype), jnp.asarray([semiring.zero])]
     )
-    init = (x_ext, jnp.asarray(np.inf, jnp.float32), jnp.asarray(0), jnp.asarray(False))
-    x_ext, res, rounds, converged = jax.jit(
-        lambda c: jax.lax.while_loop(cond, body, c)
-    )(init)
-    rounds = int(rounds)
-    bytes_per = np.dtype(semiring.dtype).itemsize
-    return EngineResult(
-        x=np.asarray(x_ext[:-1]),
-        rounds=rounds,
-        converged=bool(converged),
-        flushes=rounds * sched.S,
-        flush_bytes=rounds * sched.S * sched.P * sched.delta * bytes_per,
-        residuals=[float(res)],
-        round_times_s=[],
-        delta=sched.delta,
-        P=sched.P,
+    tol_a = jnp.asarray(tol, jnp.float32)
+    mr_a = jnp.asarray(max_rounds, jnp.int32)
+    jitted = jax.jit(make_solve_fn(sched, semiring, row_update, residual_fn))
+    t0 = time.perf_counter()
+    fn = jitted.lower(x_ext, tol_a, mr_a).compile()
+    compile_time_s = time.perf_counter() - t0
+    return execute_solve_fn(
+        fn, sched, semiring, x_ext, None, tol, max_rounds, compile_time_s=compile_time_s
     )

@@ -1,0 +1,37 @@
+# The unified Problem/Solver API — the single entry point everything routes
+# through: problem specs, backend selection, schedule+compile caching, and
+# batched multi-query solving.  See solve/README.md for the paper-term map.
+from repro.solve.batch import BatchResult, solve_batch
+from repro.solve.problem import (
+    Problem,
+    cc_problem,
+    count_changed_residual,
+    jacobi_problem,
+    l1_residual,
+    min_label_row_update,
+    multi_source_x0,
+    pagerank_problem,
+    ppr_problem,
+    ppr_teleport,
+    sssp_problem,
+)
+from repro.solve.solver import BACKENDS, Solver, resolve_legacy_args
+
+__all__ = [
+    "BACKENDS",
+    "BatchResult",
+    "Problem",
+    "Solver",
+    "cc_problem",
+    "count_changed_residual",
+    "jacobi_problem",
+    "l1_residual",
+    "min_label_row_update",
+    "multi_source_x0",
+    "pagerank_problem",
+    "ppr_problem",
+    "ppr_teleport",
+    "resolve_legacy_args",
+    "solve_batch",
+    "sssp_problem",
+]

@@ -1,0 +1,233 @@
+"""The :class:`Problem` spec — what an iterative graph computation *is*.
+
+A pull-style fixed point ``x'[u] = row_update(x[u], ⊕_{v∈in(u)} x[v] ⊗ A[v,u])``
+is fully described by a semiring, a row update, a residual (the convergence
+metric), an initial-state factory, and a tolerance.  Everything else — the
+commit period δ, the backend, schedule construction, compilation — is a
+*runtime* decision the :class:`repro.solve.Solver` makes.  The four public
+algorithms are one-line factories over this type.
+
+Query-parameterized problems (``takes_query=True``) thread an extra per-query
+pytree ``q`` into ``row_update`` — this is how personalized PageRank gets a
+per-seed teleport vector while sharing one compiled round function across the
+whole batch.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.semiring import INT_INF, MIN_PLUS, PLUS_TIMES, Semiring
+from repro.graphs.formats import CSRGraph
+
+__all__ = [
+    "Problem",
+    "min_label_row_update",
+    "count_changed_residual",
+    "l1_residual",
+    "pagerank_problem",
+    "ppr_problem",
+    "sssp_problem",
+    "cc_problem",
+    "jacobi_problem",
+    "multi_source_x0",
+    "ppr_teleport",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class Problem:
+    """Frozen spec of one iterative graph computation.
+
+    * ``semiring``        — ⊕/⊗ algebra (also fixes the state dtype).
+    * ``make_row_update`` — ``graph -> row_update``; the returned callable is
+      ``(old, reduced, rows) -> new`` (or ``(old, reduced, rows, q) -> new``
+      when ``takes_query``).  ``rows`` holds global row ids (dump slot = n).
+    * ``residual``        — ``(x_prev, x_new) -> scalar``; converged when
+      ``residual ≤ tol``.
+    * ``x0``              — ``graph -> (n,) ndarray`` initial state factory.
+    * ``edge_values``     — optional ``graph -> (nnz,) ndarray`` override used
+      when building the schedule (e.g. CC zeroes the weights so ⊗ is a no-op).
+    * ``default_query``   — optional ``graph -> q`` for query problems, used
+      when :meth:`Solver.solve` is called without an explicit ``q``.
+    """
+
+    name: str
+    semiring: Semiring
+    make_row_update: Callable
+    residual: Callable
+    x0: Callable
+    tol: float
+    max_rounds: int = 1000
+    edge_values: Callable | None = None
+    takes_query: bool = False
+    default_query: Callable | None = None
+
+    @property
+    def dtype(self) -> np.dtype:
+        return np.dtype(self.semiring.dtype)
+
+
+# --------------------------------------------------------------------------- #
+# Shared kernels (deduplicated from sssp.py / cc.py, which carried this pair
+# verbatim): min-plus label propagation converging when no vertex changed.
+# --------------------------------------------------------------------------- #
+def min_label_row_update(graph: CSRGraph):
+    """``min(old, ⊕-reduced)`` — the min-plus relaxation row update."""
+    del graph  # state-free: same update for every topology
+
+    def row_update(old, reduced, rows):
+        return jnp.minimum(old, reduced)
+
+    return row_update
+
+
+def count_changed_residual(x_prev, x_new):
+    """Number of vertices whose value changed this round (paper's stop rule)."""
+    return jnp.sum((x_prev != x_new).astype(jnp.float32))
+
+
+def l1_residual(x_prev, x_new):
+    """Total absolute change across vertices (PageRank/Jacobi stop rule)."""
+    return jnp.sum(jnp.abs(x_new - x_prev))
+
+
+# --------------------------------------------------------------------------- #
+# Problem factories — the whole public algorithm surface.
+# --------------------------------------------------------------------------- #
+def pagerank_problem(
+    damping: float = 0.85, tol: float = 1e-4, max_rounds: int = 1000
+) -> Problem:
+    """PageRank (paper §IV-A): edge values must hold ``d / outdeg(src)``."""
+
+    def make_row_update(graph):
+        teleport = np.float32((1.0 - damping) / graph.n)
+
+        def row_update(old, reduced, rows):
+            return teleport + reduced
+
+        return row_update
+
+    return Problem(
+        name="pagerank",
+        semiring=PLUS_TIMES,
+        make_row_update=make_row_update,
+        residual=l1_residual,
+        x0=lambda g: np.full(g.n, 1.0 / g.n, dtype=np.float32),
+        tol=tol,
+        max_rounds=max_rounds,
+    )
+
+
+def ppr_teleport(graph: CSRGraph, seeds, damping: float = 0.85) -> np.ndarray:
+    """(Q, n) teleport vectors ``(1-d)·e_seed`` for :func:`ppr_problem`."""
+    seeds = np.atleast_1d(np.asarray(seeds, dtype=np.int64))
+    t = np.zeros((seeds.shape[0], graph.n), dtype=np.float32)
+    t[np.arange(seeds.shape[0]), seeds] = np.float32(1.0 - damping)
+    return t
+
+
+def ppr_problem(
+    damping: float = 0.85, tol: float = 1e-4, max_rounds: int = 1000
+) -> Problem:
+    """Personalized PageRank: the teleport vector is a *query parameter*.
+
+    ``q`` is a dense (n,) teleport vector (see :func:`ppr_teleport` for the
+    single-seed form).  With the uniform vector ``(1-d)/n`` this is exactly
+    :func:`pagerank_problem` — bit-identical — which is the parity test.
+    Indexing ``q[rows]`` relies on jax's clipping gather for the dump rows
+    (``rows == n``): whatever they read is written to the write-only dump slot.
+    """
+
+    def make_row_update(graph):
+        def row_update(old, reduced, rows, q):
+            return q[rows] + reduced
+
+        return row_update
+
+    return Problem(
+        name="ppr",
+        semiring=PLUS_TIMES,
+        make_row_update=make_row_update,
+        residual=l1_residual,
+        x0=lambda g: np.full(g.n, 1.0 / g.n, dtype=np.float32),
+        tol=tol,
+        max_rounds=max_rounds,
+        takes_query=True,
+        default_query=lambda g: np.full(g.n, (1.0 - damping) / g.n, dtype=np.float32),
+    )
+
+
+def multi_source_x0(graph: CSRGraph, sources) -> np.ndarray:
+    """(Q, n) SSSP initial states, one per source — feed to ``solve_batch``."""
+    sources = np.atleast_1d(np.asarray(sources, dtype=np.int64))
+    x0 = np.full((sources.shape[0], graph.n), INT_INF, dtype=np.int32)
+    x0[np.arange(sources.shape[0]), sources] = 0
+    return x0
+
+
+def sssp_problem(source: int = 0, max_rounds: int = 10_000) -> Problem:
+    """Bellman-Ford SSSP (paper §IV-D): int32 min-plus relaxation."""
+
+    def x0(graph):
+        x = np.full(graph.n, INT_INF, dtype=np.int32)
+        x[source] = 0
+        return x
+
+    return Problem(
+        name="sssp",
+        semiring=MIN_PLUS,
+        make_row_update=min_label_row_update,
+        residual=count_changed_residual,
+        x0=x0,
+        tol=0.5,  # "no vertex updated last round"
+        max_rounds=max_rounds,
+    )
+
+
+def cc_problem(max_rounds: int = 10_000) -> Problem:
+    """Connected components via min-label propagation (symmetric graphs)."""
+    return Problem(
+        name="cc",
+        semiring=MIN_PLUS,
+        make_row_update=min_label_row_update,
+        residual=count_changed_residual,
+        x0=lambda g: np.arange(g.n, dtype=np.int32),
+        tol=0.5,
+        max_rounds=max_rounds,
+        edge_values=lambda g: np.zeros(g.nnz, dtype=np.int32),
+    )
+
+
+def jacobi_problem(
+    diag: np.ndarray, b: np.ndarray, tol: float = 1e-6, max_rounds: int = 5000
+) -> Problem:
+    """Jacobi/block-GS fixed point for ``A x = b``.
+
+    The graph must carry the pull splitting ``-A_ij / A_ii`` on edge
+    ``(j -> i)`` (see :func:`repro.algorithms.jacobi.jacobi_graph`).
+    """
+    b_over_diag = (np.asarray(b) / np.asarray(diag)).astype(np.float32)
+
+    def make_row_update(graph):
+        # b / diag gathered per row; padded slot (row == n) contributes 0.
+        ext = jnp.asarray(np.concatenate([b_over_diag, [np.float32(0.0)]]))
+
+        def row_update(old, reduced, rows):
+            return ext[rows] + reduced
+
+        return row_update
+
+    return Problem(
+        name="jacobi",
+        semiring=PLUS_TIMES,
+        make_row_update=make_row_update,
+        residual=l1_residual,
+        x0=lambda g: np.zeros(g.n, dtype=np.float32),
+        tol=tol,
+        max_rounds=max_rounds,
+    )

@@ -1,0 +1,406 @@
+"""The :class:`Solver` — one entry point over every backend and δ.
+
+A solver binds ``(graph, problem, n_workers)`` and owns two caches:
+
+* **schedule cache** — :class:`DeviceSchedule` per resolved δ, so repeated
+  queries never rebuild stripes;
+* **compile cache**  — AOT-compiled round / fused-loop executables per
+  ``(backend, δ)``, so repeated queries never retrace.
+
+``delta`` accepts the paper's three disciplines by name (``"sync"``,
+``"async"``), an explicit integer (``"delayed"``), or ``"auto"``, which probes
+the sync/async round counts and asks the analytic δ cost model
+(:mod:`repro.core.delta_model`) for δ*.  ``backend`` selects host-driven
+rounds (instrumented, per-round residuals), the fused ``lax.while_loop``
+device path, or the ``shard_map`` multi-device engine from
+:mod:`repro.dist.engine_sharded`.
+"""
+
+from __future__ import annotations
+
+import math
+import time
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.delta_model import fit_delta_model
+from repro.core.engine import (
+    MIN_CHUNK,
+    DeviceSchedule,
+    EngineResult,
+    execute_solve_fn,
+    host_loop,
+    make_schedule,
+    make_solve_fn_q,
+    round_fn_q,
+)
+from repro.graphs.formats import CSRGraph
+from repro.graphs.partition import balanced_blocks
+from repro.solve.problem import Problem
+
+__all__ = ["Solver", "BACKENDS", "resolve_legacy_args"]
+
+BACKENDS = ("host", "jit", "sharded")
+
+_NO_QUERY = np.zeros((), dtype=np.int32)  # dummy q for query-free problems
+
+
+def resolve_legacy_args(mode, delta, host_loop, backend):
+    """Map the deprecated ``(mode, host_loop)`` surface onto ``(delta, backend)``.
+
+    The old API scattered the paper's one tunable across ``mode`` + ``delta``
+    and named the execution path with a boolean.  New code passes
+    ``delta ∈ {"sync", "async", "auto", int}`` and
+    ``backend ∈ {"host", "jit", "sharded"}`` directly.
+    """
+    if mode is not None:
+        warnings.warn(
+            "mode= is deprecated; pass delta='sync' | 'async' | 'auto' | <int>",
+            DeprecationWarning,
+            stacklevel=3,
+        )
+        if mode == "sync":
+            delta = "sync"
+        elif mode == "async":
+            delta = "async"
+        elif mode == "delayed":
+            if delta is None:
+                raise ValueError("delayed mode needs δ")
+        else:
+            raise ValueError(f"unknown mode {mode!r}")
+    if host_loop is not None:
+        warnings.warn(
+            "host_loop= is deprecated; pass backend='host' | 'jit' | 'sharded'",
+            DeprecationWarning,
+            stacklevel=3,
+        )
+        if backend is None:
+            backend = "host" if host_loop else "jit"
+    if delta is None:
+        delta = "auto"
+    return delta, backend
+
+
+class Solver:
+    """Reusable solver for one ``(graph, problem)`` pair.
+
+    ``solve()`` answers a query; ``delta=`` / ``backend=`` per call override
+    the construction defaults.  All schedules and compiled executables are
+    cached on the instance — a second ``solve()`` with the same ``(δ, backend)``
+    performs zero schedule builds and zero retraces (see ``stats``).
+    """
+
+    def __init__(
+        self,
+        graph: CSRGraph,
+        problem: Problem,
+        n_workers: int = 8,
+        delta="auto",
+        backend: str = "jit",
+        min_chunk: int = MIN_CHUNK,
+        mesh=None,
+        mesh_axis: str = "data",
+        tol: float | None = None,
+        max_rounds: int | None = None,
+    ):
+        if backend not in BACKENDS:
+            raise ValueError(f"backend must be one of {BACKENDS}, got {backend!r}")
+        self._check_delta(delta)
+        self.graph = graph
+        self.problem = problem
+        self.n_workers = n_workers
+        self.default_delta = delta
+        self.default_backend = backend
+        self.min_chunk = min_chunk
+        self.mesh_axis = mesh_axis
+        self.tol = problem.tol if tol is None else tol
+        self.max_rounds = problem.max_rounds if max_rounds is None else max_rounds
+        self.delta_model = None  # set by the first δ="auto" probe
+
+        self._mesh = mesh
+        sr = problem.semiring
+        self._sched_graph = (
+            graph.with_values(problem.edge_values(graph))
+            if problem.edge_values is not None
+            else graph
+        )
+        self._row_update = problem.make_row_update(graph)
+        if problem.takes_query:
+            self._row_update_q = self._row_update
+        else:
+            base = self._row_update
+
+            def _row_update_q(old, reduced, rows, q):
+                return base(old, reduced, rows)
+
+            self._row_update_q = _row_update_q
+        self._zero_ext = jnp.asarray([sr.zero]).astype(sr.dtype)
+        self._bounds = None
+        self._auto_delta = None
+        self._schedules: dict[int, DeviceSchedule] = {}
+        self._compiled: dict[tuple, object] = {}
+        self._last_compile_s = 0.0
+        self.stats = {
+            "solves": 0,
+            "schedule_builds": 0,
+            "traces": 0,
+            "compiles": 0,
+            "compile_time_s": 0.0,
+        }
+
+    # ------------------------------------------------------------------ #
+    # δ resolution + schedule cache
+    # ------------------------------------------------------------------ #
+    @property
+    def block_size(self) -> int:
+        """Max worker block size B — the sync δ and the upper clamp."""
+        if self._bounds is None:
+            self._bounds = balanced_blocks(self._sched_graph, self.n_workers)
+        return int(np.diff(self._bounds).max())
+
+    @staticmethod
+    def _check_delta(delta):
+        if isinstance(delta, str) and delta not in ("sync", "async", "auto"):
+            raise ValueError(
+                f"delta must be 'sync', 'async', 'auto', or an int, got {delta!r}"
+            )
+
+    def resolve_delta(self, delta=None) -> int:
+        """Normalize ``delta ∈ {None, 'sync', 'async', 'auto', int}`` to rows."""
+        if delta is None:
+            delta = self.default_delta
+        self._check_delta(delta)
+        B = self.block_size
+        if delta == "sync":
+            return B
+        if delta == "async":
+            return min(self.min_chunk, B)
+        if delta == "auto":
+            if self._auto_delta is None:
+                self._auto_delta = self._probe_auto_delta()
+            return self._auto_delta
+        return int(min(max(int(delta), 1), B))
+
+    def _probe_auto_delta(self) -> int:
+        """Fit the δ cost model from two measured probes (sync + finest δ)."""
+        r_sync = self.solve(delta="sync", backend="host")
+        r_async = self.solve(delta="async", backend="host")
+        self.delta_model = fit_delta_model(
+            self._sched_graph,
+            self.n_workers,
+            r_sync.rounds,
+            r_async.rounds,
+            delta_min=min(self.min_chunk, self.block_size),
+            bytes_per_elem=np.dtype(self.problem.semiring.dtype).itemsize,
+        )
+        return min(self.delta_model.best_delta(), self.block_size)
+
+    def schedule(self, delta=None) -> DeviceSchedule:
+        """The cached device schedule for ``delta`` (build on first use)."""
+        delta_eff = self.resolve_delta(delta)
+        sched = self._schedules.get(delta_eff)
+        if sched is None:
+            sched = make_schedule(
+                self._sched_graph,
+                self.n_workers,
+                delta_eff,
+                self.problem.semiring,
+                mode="delayed",
+                min_chunk=self.min_chunk,
+            )
+            self._schedules[delta_eff] = sched
+            self.stats["schedule_builds"] += 1
+        return sched
+
+    # ------------------------------------------------------------------ #
+    # compile cache
+    # ------------------------------------------------------------------ #
+    def _traced(self, fn):
+        """Wrap ``fn`` so executions of its *trace* are counted in stats."""
+
+        def wrapped(*args):
+            self.stats["traces"] += 1
+            return fn(*args)
+
+        return wrapped
+
+    def compile_cached(self, key: tuple, fn, *args):
+        """AOT-lower + compile ``fn`` for ``args``' shapes, once per ``key``."""
+        cached = self._compiled.get(key)
+        if cached is not None:
+            self._last_compile_s = 0.0
+            return cached
+        t0 = time.perf_counter()
+        cached = jax.jit(self._traced(fn)).lower(*args).compile()
+        self._last_compile_s = time.perf_counter() - t0
+        self._compiled[key] = cached
+        self.stats["compiles"] += 1
+        self.stats["compile_time_s"] += self._last_compile_s
+        return cached
+
+    # ------------------------------------------------------------------ #
+    # inputs
+    # ------------------------------------------------------------------ #
+    def _x_ext(self, x0):
+        sr = self.problem.semiring
+        if x0 is None:
+            x0 = self.problem.x0(self.graph)
+        x0 = jnp.asarray(x0, dtype=sr.dtype)
+        if x0.shape != (self.graph.n,):
+            raise ValueError(f"x0 must have shape ({self.graph.n},), got {x0.shape}")
+        return jnp.concatenate([x0, self._zero_ext])
+
+    def resolve_query(self, q):
+        """Normalize the per-query parameter pytree (dummy for query-free)."""
+        if not self.problem.takes_query:
+            if q is not None:
+                raise ValueError(f"problem {self.problem.name!r} takes no query")
+            return jnp.asarray(_NO_QUERY)
+        if q is None:
+            if self.problem.default_query is None:
+                raise ValueError(f"problem {self.problem.name!r} needs q=")
+            q = self.problem.default_query(self.graph)
+        return jax.tree_util.tree_map(jnp.asarray, q)
+
+    # ------------------------------------------------------------------ #
+    # solve
+    # ------------------------------------------------------------------ #
+    def solve(
+        self,
+        x0=None,
+        *,
+        q=None,
+        delta=None,
+        backend: str | None = None,
+        tol: float | None = None,
+        max_rounds: int | None = None,
+    ) -> EngineResult:
+        """Run to convergence; returns the engine's instrumented result."""
+        backend = backend or self.default_backend
+        if backend not in BACKENDS:
+            raise ValueError(f"backend must be one of {BACKENDS}, got {backend!r}")
+        tol = self.tol if tol is None else tol
+        max_rounds = self.max_rounds if max_rounds is None else max_rounds
+        sched = self.schedule(delta)
+        x_ext = self._x_ext(x0)
+        q = self.resolve_query(q)
+        self.stats["solves"] += 1
+        if backend == "jit":
+            return self._solve_jit(sched, x_ext, q, tol, max_rounds)
+        if backend == "host":
+            return self._solve_host(sched, x_ext, q, tol, max_rounds)
+        return self._solve_sharded(sched, x_ext, q, tol, max_rounds)
+
+    def _solve_jit(self, sched, x_ext, q, tol, max_rounds) -> EngineResult:
+        sr = self.problem.semiring
+        fn = self.compile_cached(
+            ("jit", sched.delta),
+            make_solve_fn_q(sched, sr, self._row_update_q, self.problem.residual),
+            x_ext,
+            q,
+            jnp.asarray(tol, jnp.float32),
+            jnp.asarray(max_rounds, jnp.int32),
+        )
+        return execute_solve_fn(
+            fn,
+            sched,
+            sr,
+            x_ext,
+            q,
+            tol,
+            max_rounds,
+            compile_time_s=self._last_compile_s,
+        )
+
+    def _solve_host(self, sched, x_ext, q, tol, max_rounds) -> EngineResult:
+        rnd = self._compiled_round(sched, x_ext, q, "host")
+        return self._host_loop(sched, rnd, x_ext, tol, max_rounds)
+
+    def _solve_sharded(self, sched, x_ext, q, tol, max_rounds) -> EngineResult:
+        rnd = self._compiled_round(sched, x_ext, q, "sharded")
+        return self._host_loop(sched, rnd, x_ext, tol, max_rounds)
+
+    def _compiled_round(self, sched, x_ext, q, backend):
+        """Cached compiled one-round ``x_ext -> x_ext`` for host/sharded."""
+        if backend == "host":
+            rnd = self.compile_cached(
+                ("host", sched.delta),
+                round_fn_q(sched, self.problem.semiring, self._row_update_q),
+                x_ext,
+                q,
+            )
+            return lambda x: rnd(x, q)
+        if backend != "sharded":
+            raise ValueError(f"round backend must be 'host' or 'sharded': {backend!r}")
+        if self.problem.takes_query:
+            raise NotImplementedError(
+                "backend='sharded' supports query-free problems only "
+                "(sharded_round_fn has a fixed argument surface)"
+            )
+        from repro.dist.engine_sharded import sharded_round_fn
+
+        mesh = self._default_mesh()
+        fn = sharded_round_fn(
+            sched, self.problem.semiring, self._row_update, mesh, axis=self.mesh_axis
+        )
+        compiled = self.compile_cached(
+            ("sharded", sched.delta),
+            fn,
+            x_ext,
+            sched.src,
+            sched.val,
+            sched.dst_local,
+            sched.rows,
+        )
+        return lambda x: compiled(x, sched.src, sched.val, sched.dst_local, sched.rows)
+
+    def _host_loop(self, sched, rnd, x_ext, tol, max_rounds) -> EngineResult:
+        return host_loop(
+            rnd,
+            sched,
+            self.problem.semiring,
+            x_ext,
+            self.problem.residual,
+            tol,
+            max_rounds,
+            compile_time_s=self._last_compile_s,
+        )
+
+    def solve_batch(self, x0_batch, *, q=None, delta=None, tol=None, max_rounds=None):
+        """Batched multi-query solve — see :func:`repro.solve.batch.solve_batch`."""
+        from repro.solve.batch import solve_batch
+
+        return solve_batch(
+            self, x0_batch, q=q, delta=delta, tol=tol, max_rounds=max_rounds
+        )
+
+    # ------------------------------------------------------------------ #
+    # sharded plumbing + introspection
+    # ------------------------------------------------------------------ #
+    def _default_mesh(self):
+        if self._mesh is None:
+            from repro.dist.compat import AxisType, make_mesh
+
+            ndev = len(jax.devices())
+            size = math.gcd(self.n_workers, ndev)
+            self._mesh = make_mesh(
+                (size,),
+                (self.mesh_axis,),
+                axis_types=(AxisType.Auto,),
+                devices=jax.devices()[:size],
+            )
+        return self._mesh
+
+    def round_callable(self, delta=None, backend: str = "host", q=None):
+        """The cached compiled one-round ``x_ext -> x_ext`` (tests/benchmarks).
+
+        ``backend`` is ``"host"`` (the single-device jitted round — also what
+        the jit backend's fused loop iterates) or ``"sharded"``.
+        """
+        sched = self.schedule(delta)
+        return self._compiled_round(
+            sched, self._x_ext(None), self.resolve_query(q), backend
+        )

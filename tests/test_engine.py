@@ -1,6 +1,5 @@
-"""Engine behaviour: mode semantics, fixed-point identity, paper invariants."""
+"""Engine behaviour: schedule semantics, fixed-point identity, paper invariants."""
 
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
@@ -32,7 +31,7 @@ def bellman_ford_oracle(g, src=0):
 class TestModes:
     def test_sync_equals_jacobi_numpy(self):
         """S == 1 schedule must be exact Jacobi."""
-        r = pagerank(GRAPH, P=4, mode="sync")
+        r = pagerank(GRAPH, P=4, delta="sync")
         n = GRAPH.n
         x = np.full(n, 1.0 / n, dtype=np.float64)
         tele = 0.15 / n
@@ -48,56 +47,53 @@ class TestModes:
 
     def test_async_p1_equals_sequential_gs(self):
         """P=1, finest chunk == sequential (chunked) Gauss-Seidel."""
-        r = pagerank(GRAPH, P=1, mode="async", min_chunk=8)
+        r = pagerank(GRAPH, P=1, delta="async", min_chunk=8)
         n = GRAPH.n
         x = np.full(n, 1.0 / n, dtype=np.float64)
         tele = 0.15 / n
         for _ in range(r.rounds):
             for c0 in range(0, n, 8):
                 rows = np.arange(c0, min(c0 + 8, n))
+                e = []
                 for u in rows:  # chunk reads pre-chunk state: emulate exactly
-                    pass
-                e = [
-                    (x[GRAPH.indices[GRAPH.indptr[u]:GRAPH.indptr[u + 1]]]
-                     * GRAPH.values[GRAPH.indptr[u]:GRAPH.indptr[u + 1]]).sum()
-                    for u in rows
-                ]
+                    lo, hi = GRAPH.indptr[u], GRAPH.indptr[u + 1]
+                    e.append((x[GRAPH.indices[lo:hi]] * GRAPH.values[lo:hi]).sum())
                 x[rows] = tele + np.asarray(e)
         assert np.abs(r.x - x).max() < 1e-5
 
     @pytest.mark.parametrize("delta", [32, 128, 512])
     def test_fixed_point_independent_of_delta(self, delta):
         """Every δ converges to the same PageRank vector (same fixed point)."""
-        ref = pagerank(GRAPH, P=4, mode="sync")
-        r = pagerank(GRAPH, P=4, mode="delayed", delta=delta, min_chunk=16)
+        ref = pagerank(GRAPH, P=4, delta="sync")
+        r = pagerank(GRAPH, P=4, delta=delta, min_chunk=16)
         assert np.abs(ref.x - r.x).max() < 5e-5
 
     def test_flush_accounting(self):
         sched = make_schedule(GRAPH, 4, 100, PLUS_TIMES, mode="delayed")
-        r = pagerank(GRAPH, P=4, mode="delayed", delta=100)
+        r = pagerank(GRAPH, P=4, delta=100)
         assert r.flushes == r.rounds * sched.S
         assert r.flush_bytes == r.flushes * sched.P * sched.delta * 4
 
     def test_sync_single_flush_per_round(self):
-        r = pagerank(GRAPH, P=4, mode="sync")
+        r = pagerank(GRAPH, P=4, delta="sync")
         assert r.flushes == r.rounds
 
 
 class TestSSSP:
-    @pytest.mark.parametrize("mode,delta", [("sync", None), ("async", None), ("delayed", 64)])
-    def test_distances_exact(self, mode, delta):
+    @pytest.mark.parametrize("delta", ["sync", "async", 64])
+    def test_distances_exact(self, delta):
         oracle = bellman_ford_oracle(GRAPH_S)
-        r = sssp(GRAPH_S, P=4, mode=mode, delta=delta, min_chunk=16)
+        r = sssp(GRAPH_S, P=4, delta=delta, min_chunk=16)
         assert (r.x.astype(np.int64) == oracle).all()
 
     def test_async_no_more_rounds_than_vertices(self):
-        r = sssp(GRAPH_S, P=4, mode="async", min_chunk=16)
+        r = sssp(GRAPH_S, P=4, delta="async", min_chunk=16)
         assert r.converged and r.rounds <= GRAPH_S.n
 
 
 class TestCC:
     def test_grid_single_component(self):
-        r = connected_components(GRAPH_U, P=4, mode="delayed", delta=64, min_chunk=16)
+        r = connected_components(GRAPH_U, P=4, delta=64, min_chunk=16)
         assert len(np.unique(r.x)) == 1
 
     def test_two_components(self):
@@ -106,7 +102,7 @@ class TestCC:
         src = np.array([0, 1, 2, 3, 4, 5])
         dst = np.array([1, 0, 3, 2, 5, 4])
         g = CSRGraph.from_edges(6, src, dst, np.zeros(6, np.int32))
-        r = connected_components(g, P=2, mode="async", min_chunk=2)
+        r = connected_components(g, P=2, delta="async", min_chunk=2)
         assert len(np.unique(r.x)) == 3
 
 
@@ -118,8 +114,9 @@ class TestJacobiSolver:
         vals = rng.normal(size=rows.shape[0]).astype(np.float32) * 0.1
         diag = np.full(n, 4.0, np.float32)
         b = rng.normal(size=n).astype(np.float32)
-        r = jacobi_solve(n, rows, cols, vals, diag, b, P=4, mode="delayed",
-                         delta=32, min_chunk=8, tol=1e-6)
+        r = jacobi_solve(
+            n, rows, cols, vals, diag, b, P=4, delta=32, min_chunk=8, tol=1e-6
+        )
         A = np.zeros((n, n), np.float64)
         np.add.at(A, (rows, cols), vals)  # duplicates accumulate
         np.fill_diagonal(A, diag)
@@ -133,8 +130,9 @@ class TestJacobiSolver:
         vals = rng.normal(size=rows.shape[0]).astype(np.float32) * 0.15
         diag = np.full(n, 4.0, np.float32)
         b = rng.normal(size=n).astype(np.float32)
-        rs = jacobi_solve(n, rows, cols, vals, diag, b, P=4, mode="sync", tol=1e-6)
-        ra = jacobi_solve(n, rows, cols, vals, diag, b, P=4, mode="async",
-                          min_chunk=8, tol=1e-6)
+        rs = jacobi_solve(n, rows, cols, vals, diag, b, P=4, delta="sync", tol=1e-6)
+        ra = jacobi_solve(
+            n, rows, cols, vals, diag, b, P=4, delta="async", min_chunk=8, tol=1e-6
+        )
         # classic Stein–Rosenberg territory: GS ≤ Jacobi rounds for this class
         assert ra.rounds <= rs.rounds

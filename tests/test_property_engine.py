@@ -50,8 +50,8 @@ def test_stripe_schedule_covers_every_edge_once(g, P, delta):
 @settings(**SETTINGS)
 def test_sssp_fixed_point_delta_invariant(g, P, delta):
     """SSSP distances are δ-independent (monotone min-plus fixed point)."""
-    r_sync = sssp(g, P=P, mode="sync", host_loop=True)
-    r_del = sssp(g, P=P, mode="delayed", delta=delta, min_chunk=8)
+    r_sync = sssp(g, P=P, delta="sync", backend="host")
+    r_del = sssp(g, P=P, delta=delta, min_chunk=8)
     assert (r_sync.x == r_del.x).all()
 
 
@@ -59,7 +59,7 @@ def test_sssp_fixed_point_delta_invariant(g, P, delta):
 @settings(**SETTINGS)
 def test_sssp_triangle_inequality(g, P):
     """d[v] ≤ d[u] + w(u, v) for every edge at the fixed point."""
-    r = sssp(g, P=P, mode="async", min_chunk=8)
+    r = sssp(g, P=P, delta="async", min_chunk=8)
     d = r.x.astype(np.int64)
     dst_of = np.repeat(np.arange(g.n), np.diff(g.indptr))
     lhs = d[dst_of]
@@ -74,7 +74,7 @@ def test_pagerank_mass_and_positivity(g, P, delta):
     gpr = g.with_values(
         (0.85 / np.maximum(g.out_degree[g.indices], 1)).astype(np.float32)
     )
-    r = pagerank(gpr, P=P, mode="delayed", delta=delta, min_chunk=8, max_rounds=200)
+    r = pagerank(gpr, P=P, delta=delta, min_chunk=8, max_rounds=200)
     assert (r.x >= 0).all()
     # dangling leakage only reduces mass: 0 < Σx ≤ 1 + tol
     assert 0 < r.x.sum() <= 1.0 + 1e-3

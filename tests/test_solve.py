@@ -1,0 +1,281 @@
+"""repro.solve: Problem/Solver API — backend parity, caches, batching, compat.
+
+Acceptance-criteria coverage for the unified API:
+
+* host / jit / sharded backends are bit-identical (per round and at the
+  fixed point) for the same ``Problem`` on the same graph;
+* a second ``solve()`` on the same ``(graph, P, δ)`` performs zero schedule
+  builds and zero retraces (trace-count assertions);
+* ``solve_batch(Q=1)`` is bit-identical to the unbatched path, and each
+  query of a multi-query batch matches its unbatched reference;
+* the deprecated ``mode=`` / ``host_loop=`` surface warns but still works.
+"""
+
+import numpy as np
+import pytest
+
+from repro.algorithms import connected_components, pagerank, sssp
+from repro.graphs.generators import make_graph
+from repro.solve import (
+    Solver,
+    cc_problem,
+    multi_source_x0,
+    pagerank_problem,
+    ppr_problem,
+    ppr_teleport,
+    solve_batch,
+    sssp_problem,
+)
+
+GRAPH_PR = make_graph("twitter", scale=9, efactor=8, kind="pagerank")
+GRAPH_S = make_graph("kron", scale=8, efactor=8, kind="sssp")
+
+
+class TestBackendParity:
+    @pytest.mark.parametrize(
+        "problem,graph",
+        [(pagerank_problem(), GRAPH_PR), (sssp_problem(), GRAPH_S)],
+        ids=["pagerank", "sssp"],
+    )
+    def test_fixed_point_bit_identical(self, problem, graph):
+        solver = Solver(graph, problem, n_workers=4, delta=64, min_chunk=16)
+        r_host = solver.solve(backend="host")
+        r_jit = solver.solve(backend="jit")
+        r_shard = solver.solve(backend="sharded")
+        assert r_host.rounds == r_jit.rounds == r_shard.rounds
+        np.testing.assert_array_equal(r_host.x, r_jit.x)
+        np.testing.assert_array_equal(r_host.x, r_shard.x)
+
+    def test_per_round_bit_identical(self):
+        solver = Solver(
+            GRAPH_PR, pagerank_problem(), n_workers=4, delta=64, min_chunk=16
+        )
+        rnd_host = solver.round_callable(backend="host")
+        rnd_shard = solver.round_callable(backend="sharded")
+        x_h = x_s = solver._x_ext(None)
+        for _ in range(3):
+            x_h, x_s = rnd_host(x_h), rnd_shard(x_s)
+            np.testing.assert_array_equal(np.asarray(x_h), np.asarray(x_s))
+
+    def test_counter_parity_host_vs_jit(self):
+        """Normalized EngineResult semantics: both runners report the same
+        rounds/flush accounting, and compile cost never pollutes exec time."""
+        solver = Solver(
+            GRAPH_PR, pagerank_problem(), n_workers=4, delta=64, min_chunk=16
+        )
+        r_host = solver.solve(backend="host")
+        r_jit = solver.solve(backend="jit")
+        assert r_host.rounds == r_jit.rounds
+        assert r_host.flushes == r_jit.flushes
+        assert r_host.flush_bytes == r_jit.flush_bytes
+        for r in (r_host, r_jit):
+            assert r.total_time_s > 0
+            assert r.avg_round_time_s > 0
+            assert abs(r.avg_round_time_s * r.rounds - r.total_time_s) < 1e-6
+
+
+class TestSolverCache:
+    def test_second_solve_zero_builds_zero_retraces(self):
+        solver = Solver(
+            GRAPH_PR, pagerank_problem(), n_workers=4, delta=128, backend="jit"
+        )
+        r1 = solver.solve()
+        snap = dict(solver.stats)
+        assert snap["schedule_builds"] == 1 and snap["traces"] == 1
+        r2 = solver.solve()
+        assert solver.stats["schedule_builds"] == snap["schedule_builds"]
+        assert solver.stats["traces"] == snap["traces"]
+        assert solver.stats["compiles"] == snap["compiles"]
+        assert r2.compile_time_s == 0.0 and r1.compile_time_s > 0.0
+        np.testing.assert_array_equal(r1.x, r2.x)
+
+    def test_cache_is_per_delta_and_backend(self):
+        solver = Solver(
+            GRAPH_PR, pagerank_problem(), n_workers=4, delta=128, min_chunk=16
+        )
+        solver.solve(backend="jit")
+        builds = solver.stats["schedule_builds"]
+        solver.solve(backend="host")  # same schedule, new executable
+        assert solver.stats["schedule_builds"] == builds
+        assert solver.stats["compiles"] == 2
+        solver.solve(delta=32, backend="jit")  # new schedule + executable
+        assert solver.stats["schedule_builds"] == builds + 1
+        snap = dict(solver.stats)
+        solver.solve(delta=32, backend="jit")
+        assert solver.stats == snap | {"solves": snap["solves"] + 1}
+
+    def test_batch_cache_keyed_by_shape(self):
+        solver = Solver(GRAPH_S, sssp_problem(), n_workers=4, delta=32, min_chunk=8)
+        x0 = multi_source_x0(GRAPH_S, [0, 1])
+        solve_batch(solver, x0)
+        snap = dict(solver.stats)
+        solve_batch(solver, multi_source_x0(GRAPH_S, [5, 9]))
+        assert solver.stats["traces"] == snap["traces"]
+        assert solver.stats["compiles"] == snap["compiles"]
+
+    def test_auto_delta_probes_then_caches(self):
+        solver = Solver(
+            GRAPH_PR,
+            pagerank_problem(),
+            n_workers=4,
+            delta="auto",
+            backend="jit",
+            min_chunk=16,
+        )
+        r = solver.solve()
+        delta_star = solver.resolve_delta("auto")
+        assert 1 <= delta_star <= solver.block_size
+        assert solver.delta_model is not None
+        # δ* is memoized: resolving again runs no further probes
+        solves = solver.stats["solves"]
+        assert solver.resolve_delta("auto") == delta_star
+        assert solver.stats["solves"] == solves
+        ref = solver.solve(delta="sync")
+        assert np.abs(r.x - ref.x).max() < 5e-5
+
+
+class TestBatch:
+    def test_q1_bit_identical_to_unbatched(self):
+        solver = Solver(GRAPH_S, sssp_problem(), n_workers=4, delta=32, min_chunk=8)
+        r = solver.solve(backend="jit")
+        b = solve_batch(solver, multi_source_x0(GRAPH_S, [0]))
+        assert b.rounds == r.rounds and b.Q == 1
+        np.testing.assert_array_equal(b.x[0], r.x)
+
+    def test_q1_bit_identical_float(self):
+        solver = Solver(
+            GRAPH_PR, pagerank_problem(), n_workers=4, delta=64, min_chunk=16
+        )
+        r = solver.solve(backend="jit")
+        x0 = np.full((1, GRAPH_PR.n), 1.0 / GRAPH_PR.n, np.float32)
+        b = solve_batch(solver, x0)
+        np.testing.assert_array_equal(b.x[0], r.x)
+
+    def test_multi_source_each_query_exact(self):
+        sources = [0, 7, 33]
+        solver = Solver(GRAPH_S, sssp_problem(), n_workers=4, delta=32, min_chunk=8)
+        batch = solve_batch(solver, multi_source_x0(GRAPH_S, sources))
+        assert batch.converged.all()
+        assert batch.rounds == batch.rounds_per_query.max()
+        for i, s in enumerate(sources):
+            ref = Solver(
+                GRAPH_S, sssp_problem(source=s), n_workers=4, delta=32, min_chunk=8
+            ).solve(backend="jit")
+            # min-plus is idempotent: extra rounds past convergence are no-ops
+            np.testing.assert_array_equal(batch.x[i], ref.x)
+            assert batch.rounds_per_query[i] == ref.rounds
+
+    def test_ppr_uniform_equals_pagerank_bit_identical(self):
+        r_pr = Solver(
+            GRAPH_PR, pagerank_problem(), n_workers=4, delta=64, min_chunk=16
+        ).solve(backend="jit")
+        solver = Solver(GRAPH_PR, ppr_problem(), n_workers=4, delta=64, min_chunk=16)
+        r_ppr = solver.solve(backend="jit")  # default query = uniform teleport
+        np.testing.assert_array_equal(r_pr.x, r_ppr.x)
+
+    def test_ppr_batch_seeds(self):
+        solver = Solver(GRAPH_PR, ppr_problem(), n_workers=4, delta=64, min_chunk=16)
+        seeds = [3, 11]
+        q = ppr_teleport(GRAPH_PR, seeds)
+        x0 = np.tile(np.full(GRAPH_PR.n, 1.0 / GRAPH_PR.n, np.float32), (2, 1))
+        batch = solve_batch(solver, x0, q=q)
+        assert batch.converged.all()
+        # localized teleport: each seed dominates its own ranking
+        assert not np.array_equal(batch.x[0], batch.x[1])
+        for i, s in enumerate(seeds):
+            assert batch.x[i].argmax() == s
+            # query i matches its unbatched reference run for the same rounds
+            ref = solver.solve(q=q[i], max_rounds=batch.rounds, tol=0.0)
+            np.testing.assert_array_equal(batch.x[i], ref.x)
+
+    def test_batch_flush_accounting(self):
+        solver = Solver(GRAPH_S, sssp_problem(), n_workers=4, delta=32, min_chunk=8)
+        sched = solver.schedule()
+        b = solve_batch(solver, multi_source_x0(GRAPH_S, [0, 1]))
+        assert b.flushes == b.rounds * sched.S
+        assert b.flush_bytes == b.flushes * sched.P * sched.delta * 4 * b.Q
+
+
+class TestProblemSpecs:
+    def test_cc_edge_values_hook(self):
+        """cc_problem zeroes weights internally — callers pass the graph as-is."""
+        g = make_graph("road", scale=8, kind="unit")
+        solver = Solver(g, cc_problem(), n_workers=4, delta=64, min_chunk=16)
+        r = solver.solve(backend="jit")
+        assert len(np.unique(r.x)) == 1
+
+    def test_query_validation(self):
+        solver = Solver(GRAPH_S, sssp_problem(), n_workers=4, delta=32)
+        with pytest.raises(ValueError, match="takes no query"):
+            solver.solve(q=np.zeros(GRAPH_S.n))
+        with pytest.raises(ValueError, match="x0 must have shape"):
+            solver.solve(np.zeros(3, np.int32))
+
+    def test_sharded_rejects_query_problems(self):
+        solver = Solver(GRAPH_PR, ppr_problem(), n_workers=4, delta=64)
+        with pytest.raises(NotImplementedError):
+            solver.solve(backend="sharded")
+
+
+class TestLegacySurface:
+    def test_mode_warns_and_matches_new_api(self):
+        with pytest.warns(DeprecationWarning, match="mode= is deprecated"):
+            r_old = pagerank(GRAPH_PR, P=4, mode="delayed", delta=64, min_chunk=16)
+        r_new = Solver(
+            GRAPH_PR,
+            pagerank_problem(),
+            n_workers=4,
+            delta=64,
+            backend="host",
+            min_chunk=16,
+        ).solve()
+        np.testing.assert_array_equal(r_old.x, r_new.x)
+        assert r_old.rounds == r_new.rounds
+
+    def test_host_loop_warns(self):
+        with pytest.warns(DeprecationWarning, match="host_loop= is deprecated"):
+            sssp(GRAPH_S, P=4, delta=32, host_loop=False, min_chunk=8)
+
+    def test_new_style_no_warning(self):
+        import warnings
+
+        with warnings.catch_warnings():
+            warnings.simplefilter("error", DeprecationWarning)
+            connected_components(
+                make_graph("road", scale=8, kind="unit"),
+                P=4,
+                delta=64,
+                backend="jit",
+                min_chunk=16,
+            )
+
+    def test_delayed_mode_still_requires_delta(self):
+        with pytest.warns(DeprecationWarning):
+            with pytest.raises(ValueError, match="needs δ"):
+                pagerank(GRAPH_PR, P=4, mode="delayed")
+
+
+class TestServeGraphDriver:
+    def test_end_to_end_batched_service(self):
+        from repro.launch.serve_graph import main
+
+        argv = "--graph kron --scale 8 --queries 2 --repeats 2 --delta 32"
+        report = main(argv.split() + ["--algo", "both"])
+        for algo in ("sssp", "ppr"):
+            lat = report["latency_s"][algo]
+            stats = report["stats"][algo]
+            assert len(lat) == 2
+            # warm batch reuses the cold batch's schedule and executable
+            assert stats["schedule_builds"] == 1
+            assert stats["compiles"] == 1
+
+    def test_service_pads_short_batches(self):
+        from repro.launch.serve_graph import GraphService
+
+        service = GraphService(GRAPH_S, n_workers=4, delta=32, batch_size=4)
+        d = service.sssp([0])
+        assert d.shape == (1, GRAPH_S.n)
+        ref = Solver(GRAPH_S, sssp_problem(), n_workers=4, delta=32).solve(
+            backend="jit"
+        )
+        np.testing.assert_array_equal(d[0], ref.x)

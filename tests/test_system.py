@@ -25,36 +25,36 @@ class TestPaperThesis:
         self.g = make_graph("twitter", scale=11, efactor=8, kind="pagerank")
 
     def test_same_answer_different_schedule(self):
-        rs = pagerank(self.g, P=8, mode="sync")
-        ra = pagerank(self.g, P=8, mode="async", min_chunk=16)
-        rd = pagerank(self.g, P=8, mode="delayed", delta=256, min_chunk=16)
+        rs = pagerank(self.g, P=8, delta="sync")
+        ra = pagerank(self.g, P=8, delta="async", min_chunk=16)
+        rd = pagerank(self.g, P=8, delta=256, min_chunk=16)
         assert np.abs(rs.x - ra.x).max() < 5e-5
         assert np.abs(rs.x - rd.x).max() < 5e-5
 
     def test_async_fewer_rounds_on_diffuse_graph(self):
         """Paper Table I direction: sharing sooner converges in fewer rounds."""
-        rs = pagerank(self.g, P=8, mode="sync")
-        ra = pagerank(self.g, P=8, mode="async", min_chunk=16)
+        rs = pagerank(self.g, P=8, delta="sync")
+        ra = pagerank(self.g, P=8, delta="async", min_chunk=16)
         assert ra.rounds < rs.rounds
 
     def test_delta_interpolates_rounds(self):
         """Hybrid rounds sit between sync and async (freshness monotonicity)."""
-        rs = pagerank(self.g, P=8, mode="sync")
-        ra = pagerank(self.g, P=8, mode="async", min_chunk=16)
-        rd = pagerank(self.g, P=8, mode="delayed", delta=512, min_chunk=16)
+        rs = pagerank(self.g, P=8, delta="sync")
+        ra = pagerank(self.g, P=8, delta="async", min_chunk=16)
+        rd = pagerank(self.g, P=8, delta=512, min_chunk=16)
         assert ra.rounds <= rd.rounds <= rs.rounds
 
     def test_delta_reduces_flushes_vs_async(self):
         """The hybrid's whole point: fewer commit collectives than async."""
-        ra = pagerank(self.g, P=8, mode="async", min_chunk=16)
-        rd = pagerank(self.g, P=8, mode="delayed", delta=512, min_chunk=16)
+        ra = pagerank(self.g, P=8, delta="async", min_chunk=16)
+        rd = pagerank(self.g, P=8, delta=512, min_chunk=16)
         assert rd.flushes / rd.rounds < (ra.flushes / ra.rounds) / 4
 
     def test_sssp_all_modes_exact(self):
         g = make_graph("twitter", scale=10, efactor=8, kind="sssp")
-        rs = sssp(g, P=8, mode="sync")
-        ra = sssp(g, P=8, mode="async", min_chunk=16)
-        rd = sssp(g, P=8, mode="delayed", delta=128, min_chunk=16)
+        rs = sssp(g, P=8, delta="sync")
+        ra = sssp(g, P=8, delta="async", min_chunk=16)
+        rd = sssp(g, P=8, delta=128, min_chunk=16)
         assert (rs.x == ra.x).all() and (rs.x == rd.x).all()
 
 
