@@ -66,6 +66,7 @@ class DeviceSchedule:
     rows: jnp.ndarray  # (S, P, delta) int32
     edges: int
     padding_overhead: float
+    block_bounds: np.ndarray | None = None  # (P + 1,) int64 host-side bounds
 
     @property
     def n_slots(self) -> int:
@@ -79,14 +80,26 @@ def make_schedule(
     semiring: Semiring,
     mode: str = "delayed",
     min_chunk: int = MIN_CHUNK,
+    bounds: np.ndarray | None = None,
 ) -> DeviceSchedule:
     """Build the device schedule for ``mode`` ∈ {sync, async, delayed}.
 
     * ``sync``    → δ = max block size (one commit per round).
     * ``async``   → δ = ``min_chunk`` (finest vectorizable commit).
     * ``delayed`` → δ as given (the paper's tunable).
+
+    ``bounds`` overrides the default :func:`balanced_blocks` partition (any
+    contiguous (P + 1,) bounds, e.g. from
+    :func:`repro.graphs.partition.make_partition`).
     """
-    bounds = balanced_blocks(graph, P)
+    if bounds is None:
+        bounds = balanced_blocks(graph, P)
+    else:
+        bounds = np.asarray(bounds, dtype=np.int64)
+        if bounds.shape != (P + 1,):
+            raise ValueError(f"bounds must have shape ({P + 1},), got {bounds.shape}")
+        if bounds[0] != 0 or bounds[-1] != graph.n or (np.diff(bounds) < 0).any():
+            raise ValueError("bounds must cover [0, n] with monotone cuts")
     B = int(np.diff(bounds).max())
     if mode == "sync":
         delta_eff = B
@@ -110,6 +123,7 @@ def make_schedule(
         rows=jnp.asarray(host.rows),
         edges=host.edges,
         padding_overhead=host.padding_overhead,
+        block_bounds=np.asarray(host.block_bounds),
     )
 
 

@@ -9,19 +9,34 @@ from repro.dist.delayed_commit import (
     make_delayed_commit_step,
     pod_prefix_specs,
 )
-from repro.dist.engine_sharded import input_specs_for_engine, sharded_round_fn
+from repro.dist.engine_sharded import (
+    FrontierPlan,
+    frontier_plan_args,
+    frontier_round_ext_fn,
+    frontier_sharded_round_fn,
+    input_specs_for_engine,
+    make_frontier_plan,
+    sharded_round_fn,
+    sharded_round_fn_q,
+)
 from repro.dist.sharding import Rules, logical, tree_param_specs, use_rules
 
 __all__ = [
     "DelayedCommitConfig",
     "DelayedCommitState",
+    "FrontierPlan",
     "Rules",
+    "frontier_plan_args",
+    "frontier_round_ext_fn",
+    "frontier_sharded_round_fn",
     "init_delayed_state",
     "input_specs_for_engine",
     "logical",
     "make_delayed_commit_step",
+    "make_frontier_plan",
     "pod_prefix_specs",
     "sharded_round_fn",
+    "sharded_round_fn_q",
     "tree_param_specs",
     "use_rules",
 ]

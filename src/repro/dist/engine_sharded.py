@@ -1,11 +1,23 @@
 """shard_map execution of the delayed-async engine over a worker mesh axis.
 
-``sharded_round_fn`` distributes the ``P`` schedule workers over a mesh axis:
-each device runs the chunk-SpMV + row update for its worker shard against the
-replicated frontier, then the per-chunk results are all-gathered (the flush
-collective) and published with *exactly* the scatter the single-device
-``round_fn`` executes — same update list, same order — so the sharded round
-is bit-identical to the reference, dump slot included.
+Two distribution disciplines, both bit-identical per round to the
+single-device ``round_fn`` (same update list, same order, dump slot included
+for the replicated path / owned frontier for the sharded one):
+
+* **replicated frontier** (``sharded_round_fn`` / ``sharded_round_fn_q``) —
+  every device holds the whole frontier ``x_ext``; each commit all-gathers
+  every worker's chunk (O(P·δ) wire per commit) and publishes with exactly
+  the reference scatter.  Exactness-first; bounded by one device's memory.
+
+* **sharded frontier with halo exchange** (``frontier_sharded_round_fn``) —
+  owner-computes: each device keeps only its owned vertex block plus halo
+  copies of the remote vertices its workers read (:class:`FrontierPlan`,
+  built on the cut/halo sets of :class:`repro.graphs.partition.Partition`).
+  Each commit publishes locally and all-gathers only the *boundary* entries
+  other shards need (O(D·H) wire per commit, H = max boundary rows per
+  commit step).  The halo copy of a vertex always holds its owner's last
+  committed value — exactly what the replicated round reads — so rounds stay
+  bit-identical while the frontier spans devices.
 
 The schedule arrays are function arguments (not closure constants) so the
 worker axis can be sharded by ``shard_map`` in_specs and the whole round is
@@ -14,38 +26,51 @@ AOT-lowerable from ``input_specs_for_engine``.
 
 from __future__ import annotations
 
+import dataclasses
 from typing import Callable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.core.engine import DeviceSchedule
 from repro.core.semiring import Semiring
 from repro.dist.compat import mesh_axis_sizes, shard_map
 
-__all__ = ["input_specs_for_engine", "sharded_round_fn"]
+__all__ = [
+    "FrontierPlan",
+    "frontier_plan_args",
+    "frontier_round_ext_fn",
+    "frontier_sharded_round_fn",
+    "input_specs_for_engine",
+    "make_frontier_plan",
+    "sharded_round_fn",
+    "sharded_round_fn_q",
+]
 
 
-def sharded_round_fn(
+def sharded_round_fn_q(
     sched: DeviceSchedule,
     semiring: Semiring,
     row_update,
     mesh,
     axis: str = "data",
 ) -> Callable:
-    """Return jit-able ``(x_ext, src, val, dst_local, rows) -> x_ext``.
+    """Return jit-able ``(x_ext, src, val, dst_local, rows, q) -> x_ext``.
 
     One full round (``S`` commit steps) with the worker dimension of the
-    schedule sharded over mesh ``axis``; ``x_ext`` stays replicated.  Requires
-    ``sched.P`` divisible by the axis size (workers per device is static).
+    schedule sharded over mesh ``axis``; ``x_ext`` and the per-query params
+    ``q`` stay replicated.  ``row_update`` is the 4-arg query form
+    ``(old, reduced, rows, q) -> new``.  Requires ``sched.P`` divisible by the
+    axis size (workers per device is static).
     """
     axis_size = mesh_axis_sizes(mesh)[axis]
     if sched.P % axis_size != 0:
         raise ValueError(f"P={sched.P} not divisible by |{axis}|={axis_size}")
     delta = sched.delta
 
-    def body(x_ext, src, val, dst_local, rows):
+    def body(x_ext, src, val, dst_local, rows, q):
         P_loc = src.shape[1]
 
         def commit_step(s, x):
@@ -61,7 +86,7 @@ def sharded_round_fn(
                 contrib.reshape(-1), seg.reshape(-1), P_loc * (delta + 1)
             ).reshape(P_loc, delta + 1)[:, :delta]
             old = x[rows_s]
-            new = row_update(old, reduced, rows_s)
+            new = row_update(old, reduced, rows_s, q)
             # Flush: gather every worker's chunk, publish with the reference
             # engine's scatter (same updates, same order → bit-identical).
             new_full = jax.lax.all_gather(new, axis, axis=0, tiled=True)
@@ -78,10 +103,35 @@ def sharded_round_fn(
     return shard_map(
         body,
         mesh=mesh,
-        in_specs=(P(None), sched_spec, sched_spec, sched_spec, sched_spec),
+        in_specs=(P(None), sched_spec, sched_spec, sched_spec, sched_spec, P()),
         out_specs=P(None),
         check_vma=False,
     )
+
+
+def sharded_round_fn(
+    sched: DeviceSchedule,
+    semiring: Semiring,
+    row_update,
+    mesh,
+    axis: str = "data",
+) -> Callable:
+    """Query-free surface: ``(x_ext, src, val, dst_local, rows) -> x_ext``.
+
+    ``row_update`` is the 3-arg form ``(old, reduced, rows) -> new``.
+    """
+    fn_q = sharded_round_fn_q(
+        sched,
+        semiring,
+        lambda old, reduced, rows, q: row_update(old, reduced, rows),
+        mesh,
+        axis,
+    )
+
+    def fn(x_ext, src, val, dst_local, rows):
+        return fn_q(x_ext, src, val, dst_local, rows, jnp.zeros((), jnp.int32))
+
+    return fn
 
 
 def input_specs_for_engine(sched: DeviceSchedule, semiring: Semiring) -> tuple:
@@ -93,4 +143,285 @@ def input_specs_for_engine(sched: DeviceSchedule, semiring: Semiring) -> tuple:
         SDS(sched.val.shape, sched.val.dtype),
         SDS(sched.dst_local.shape, jnp.int32),
         SDS(sched.rows.shape, jnp.int32),
+    )
+
+
+# --------------------------------------------------------------------------- #
+# Frontier sharding: owner-computes layout + per-commit halo exchange
+# --------------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class FrontierPlan:
+    """Owner-computes layout + halo-exchange indices for one ``(sched, D)``.
+
+    Shard ``d`` (one of ``D`` mesh slots, ``P_loc = P / D`` schedule workers)
+    owns vertices ``[vertex_bounds[d], vertex_bounds[d+1])`` and keeps a local
+    frontier of length ``L``: owned block, then halo copies of the remote
+    vertices its workers read (sorted by global id), then a dump slot at
+    ``L - 1`` (absorbing schedule padding, exactly like slot ``n`` of the
+    replicated ``x_ext``).
+
+    Per commit step ``s``, shard ``d`` publishes its chunk locally and ships
+    the ``≤ H`` committed rows that appear in some other shard's halo
+    (``send_idx``); every shard scatters the all-gathered ``(D·H,)`` buffer
+    into its own halo slots (``recv_idx``; non-resident and padding entries
+    land in the dump slot).
+    """
+
+    D: int
+    P_loc: int
+    L: int
+    H: int
+    S: int
+    delta: int
+    n: int
+    vertex_bounds: np.ndarray  # (D + 1,) int64
+    halo_sizes: np.ndarray  # (D,) int64 — |halo_in| per shard
+    boundary_entries_per_round: int  # true (unpadded) halo rows shipped/round
+    src_loc: jnp.ndarray  # (S, P, M) int32 — per-shard local src indices
+    rows_loc: jnp.ndarray  # (S, P, delta) int32 — per-shard local row slots
+    send_idx: jnp.ndarray  # (S, D, H) int32 into the flat (P_loc·delta,) chunk
+    recv_idx: jnp.ndarray  # (S, D, D·H) int32 into the local frontier
+    gather_index: jnp.ndarray  # (D, L) int32 — global slot of each local slot
+    owned_flat: jnp.ndarray  # (n,) int32 — flat (D·L) slot owning each vertex
+
+    # ------------------------------------------------------------------ #
+    # Wire accounting (the replicated column is the engine's flush_bytes)
+    # ------------------------------------------------------------------ #
+    def halo_bytes_per_round(self, bytes_per_elem: int = 4) -> int:
+        """Bytes each shard receives per round from the halo all-gathers."""
+        return self.S * self.D * self.H * bytes_per_elem
+
+    def replicated_bytes_per_round(self, bytes_per_elem: int = 4) -> int:
+        """Same-round wire of the replicated flush (S · P · δ elements)."""
+        return self.S * self.D * self.P_loc * self.delta * bytes_per_elem
+
+    def scatter_x(self, x_ext) -> jnp.ndarray:
+        """Replicated ``(n + 1,)`` frontier → stacked ``(D, L)`` local view."""
+        return jnp.asarray(x_ext)[self.gather_index]
+
+    def gather_x(self, x_loc, dump=None):
+        """Stacked ``(D, L)`` local view → ``(n + 1,)`` global frontier."""
+        owned = jnp.reshape(x_loc, (-1,))[self.owned_flat]
+        if dump is None:
+            dump = jnp.reshape(x_loc, (-1,))[-1:]
+        return jnp.concatenate([owned, dump])
+
+
+def make_frontier_plan(sched: DeviceSchedule, n_shards: int) -> FrontierPlan:
+    """Build the owner-computes halo plan for ``sched`` over ``n_shards``.
+
+    Halo sets are derived from the schedule's own edge lists (the same cut
+    edges :meth:`repro.graphs.partition.Partition.from_bounds` reports, but
+    resolved against the padded stripe layout so padding conventions can
+    never drift): shard ``d``'s halo is every real source vertex its workers
+    gather that lies outside its owned range.
+    """
+    if sched.block_bounds is None:
+        raise ValueError("sched has no block_bounds (rebuild via make_schedule)")
+    src = np.asarray(sched.src)
+    dst_local = np.asarray(sched.dst_local)
+    rows = np.asarray(sched.rows)
+    bounds = np.asarray(sched.block_bounds, dtype=np.int64)
+    S, P_total, _ = src.shape
+    delta, n, D = sched.delta, sched.n, int(n_shards)
+    if P_total % D != 0:
+        raise ValueError(f"P={P_total} not divisible by D={D}")
+    P_loc = P_total // D
+    vb = bounds[::P_loc]
+    assert vb.shape == (D + 1,) and vb[-1] == n
+    owned = np.diff(vb)
+    real = dst_local < delta  # padding edges carry dst_local == delta
+
+    halo: list[np.ndarray] = []
+    for d in range(D):
+        ws = slice(d * P_loc, (d + 1) * P_loc)
+        s_d = src[:, ws, :].astype(np.int64)
+        remote = real[:, ws, :] & ((s_d < vb[d]) | (s_d >= vb[d + 1]))
+        halo.append(np.unique(s_d[remote]))
+    halo_sizes = np.array([h.size for h in halo], dtype=np.int64)
+    L = int((owned + halo_sizes).max()) + 1 if D else 1
+    dump = L - 1
+
+    src_loc = np.full(src.shape, dump, dtype=np.int32)
+    rows_loc = np.empty(rows.shape, dtype=np.int32)
+    for d in range(D):
+        ws = slice(d * P_loc, (d + 1) * P_loc)
+        s_d = src[:, ws, :].astype(np.int64)
+        r_d = real[:, ws, :]
+        own = r_d & (s_d >= vb[d]) & (s_d < vb[d + 1])
+        loc = np.full(s_d.shape, dump, dtype=np.int64)
+        loc[own] = s_d[own] - vb[d]
+        rem = r_d & ~own
+        if halo[d].size:
+            loc[rem] = owned[d] + np.searchsorted(halo[d], s_d[rem])
+        src_loc[:, ws, :] = loc
+        rr = rows[:, ws, :].astype(np.int64)
+        rows_loc[:, ws, :] = np.where(rr >= n, dump, rr - vb[d])
+
+    # Boundary traffic: per (step, shard), the committed rows some other
+    # shard keeps a halo copy of.  H pads to the worst (step, shard) cell.
+    boundary = (
+        np.unique(np.concatenate(halo)) if halo_sizes.sum() else np.zeros(0, np.int64)
+    )
+    chunks = [
+        [
+            rows[s, d * P_loc : (d + 1) * P_loc, :].reshape(-1).astype(np.int64)
+            for d in range(D)
+        ]
+        for s in range(S)
+    ]
+    send_pos = [
+        [np.nonzero((c < n) & np.isin(c, boundary))[0] for c in chunks[s]]
+        for s in range(S)
+    ]
+    counts = np.array([[p.size for p in row] for row in send_pos], dtype=np.int64)
+    H = max(1, int(counts.max())) if counts.size else 1
+
+    send_idx = np.zeros((S, D, H), dtype=np.int32)
+    recv_idx = np.full((S, D, D * H), dump, dtype=np.int32)
+    for s in range(S):
+        for d in range(D):
+            pos = send_pos[s][d]
+            send_idx[s, d, : pos.size] = pos
+            gv = chunks[s][d][pos]  # global vertices shipped by shard d
+            for e in range(D):
+                he = halo[e]
+                if e == d or he.size == 0 or gv.size == 0:
+                    continue
+                ins = np.minimum(np.searchsorted(he, gv), he.size - 1)
+                hit = he[ins] == gv
+                recv_idx[s, e, d * H + np.nonzero(hit)[0]] = owned[e] + ins[hit]
+
+    gather_index = np.full((D, L), n, dtype=np.int32)  # unused slots → dump
+    owned_flat = np.zeros(n, dtype=np.int32)
+    for d in range(D):
+        gather_index[d, : owned[d]] = np.arange(vb[d], vb[d + 1])
+        gather_index[d, owned[d] : owned[d] + halo[d].size] = halo[d]
+        owned_flat[vb[d] : vb[d + 1]] = d * L + np.arange(owned[d])
+
+    return FrontierPlan(
+        D=D,
+        P_loc=P_loc,
+        L=L,
+        H=H,
+        S=S,
+        delta=delta,
+        n=n,
+        vertex_bounds=vb,
+        halo_sizes=halo_sizes,
+        boundary_entries_per_round=int(counts.sum()),
+        src_loc=jnp.asarray(src_loc),
+        rows_loc=jnp.asarray(rows_loc),
+        send_idx=jnp.asarray(send_idx),
+        recv_idx=jnp.asarray(recv_idx),
+        gather_index=jnp.asarray(gather_index),
+        owned_flat=jnp.asarray(owned_flat),
+    )
+
+
+def frontier_sharded_round_fn(
+    sched: DeviceSchedule,
+    plan: FrontierPlan,
+    semiring: Semiring,
+    row_update,
+    mesh,
+    axis: str = "data",
+) -> Callable:
+    """Owner-computes round over the sharded frontier ``(D, L)``.
+
+    Returns jit-able
+    ``(x_loc, src_loc, val, dst_local, rows, rows_loc, send_idx, recv_idx, q)
+    -> x_loc`` where ``x_loc`` is the stacked per-shard frontier and
+    ``row_update`` is the 4-arg query form.  Each commit step publishes the
+    shard's own chunk locally, then all-gathers only the ``(D, H)`` boundary
+    entries — O(boundary) wire instead of the replicated O(P·δ).
+    """
+    axis_size = mesh_axis_sizes(mesh)[axis]
+    if axis_size != plan.D:
+        raise ValueError(f"plan built for D={plan.D}, mesh axis |{axis}|={axis_size}")
+    delta, S = sched.delta, sched.S
+
+    def body(x, src_loc, val, dst_local, rows_g, rows_loc, send_idx, recv_idx, q):
+        # Per-shard blocks: x (1, L); schedule cells (S, P_loc, ·);
+        # send (S, 1, H); recv (S, 1, D·H).
+        P_loc = src_loc.shape[1]
+
+        def commit_step(s, xv):
+            src_s = jax.lax.dynamic_index_in_dim(src_loc, s, 0, keepdims=False)
+            val_s = jax.lax.dynamic_index_in_dim(val, s, 0, keepdims=False)
+            dst_s = jax.lax.dynamic_index_in_dim(dst_local, s, 0, keepdims=False)
+            rg_s = jax.lax.dynamic_index_in_dim(rows_g, s, 0, keepdims=False)
+            rl_s = jax.lax.dynamic_index_in_dim(rows_loc, s, 0, keepdims=False)
+            snd_s = jax.lax.dynamic_index_in_dim(send_idx, s, 0, keepdims=False)[0]
+            rcv_s = jax.lax.dynamic_index_in_dim(recv_idx, s, 0, keepdims=False)[0]
+
+            gathered = xv[src_s]  # (P_loc, M) — owned + halo reads, all local
+            contrib = semiring.mul(gathered, val_s)
+            seg = dst_s + (jnp.arange(P_loc, dtype=jnp.int32) * (delta + 1))[:, None]
+            reduced = semiring.segment_reduce(
+                contrib.reshape(-1), seg.reshape(-1), P_loc * (delta + 1)
+            ).reshape(P_loc, delta + 1)[:, :delta]
+            old = xv[rl_s]
+            new = row_update(old, reduced, rg_s, q)
+            newv = new.reshape(-1).astype(xv.dtype)
+            # Owner-computes publish: only this shard writes its owned rows.
+            xv = xv.at[rl_s.reshape(-1)].set(newv, mode="drop", unique_indices=False)
+            # Halo exchange: ship only the boundary entries of this commit.
+            buf = jax.lax.all_gather(newv[snd_s], axis, axis=0, tiled=True)
+            return xv.at[rcv_s].set(
+                buf.astype(xv.dtype), mode="drop", unique_indices=False
+            )
+
+        return jax.lax.fori_loop(0, S, commit_step, x[0])[None]
+
+    cell = P(None, axis, None)
+    return shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(P(axis, None), cell, cell, cell, cell, cell, cell, cell, P()),
+        out_specs=P(axis, None),
+        check_vma=False,
+    )
+
+
+def frontier_round_ext_fn(
+    sched: DeviceSchedule,
+    plan: FrontierPlan,
+    semiring: Semiring,
+    row_update,
+    mesh,
+    axis: str = "data",
+) -> Callable:
+    """Global-frontier view of the halo round: ``(x_ext, q, *plan args) -> x_ext``.
+
+    Scatters ``x_ext`` into the owner-computes layout, runs one halo round,
+    and gathers the owned entries back (the dump slot passes through), so
+    host-driven convergence loops and residuals see the familiar ``(n + 1,)``
+    frontier.  Argument order after ``q`` matches :func:`frontier_plan_args`.
+    """
+    rnd = frontier_sharded_round_fn(sched, plan, semiring, row_update, mesh, axis)
+
+    def fn(
+        x_ext, q, src_loc, val, dst_local, rows_g, rows_loc, send, recv, gidx, oflat
+    ):
+        x_loc = x_ext[gidx]
+        x_out = rnd(x_loc, src_loc, val, dst_local, rows_g, rows_loc, send, recv, q)
+        owned = x_out.reshape(-1)[oflat]
+        return jnp.concatenate([owned, x_ext[-1:]])
+
+    return fn
+
+
+def frontier_plan_args(sched: DeviceSchedule, plan: FrontierPlan) -> tuple:
+    """The runtime argument tuple for :func:`frontier_round_ext_fn`."""
+    return (
+        plan.src_loc,
+        sched.val,
+        sched.dst_local,
+        sched.rows,
+        plan.rows_loc,
+        plan.send_idx,
+        plan.recv_idx,
+        plan.gather_index,
+        plan.owned_flat,
     )

@@ -1,6 +1,13 @@
 from repro.graphs.formats import CSRGraph, StripeSchedule, build_stripe_schedule
 from repro.graphs.generators import make_graph, GRAPH_GENERATORS
-from repro.graphs.partition import balanced_blocks
+from repro.graphs.partition import (
+    PARTITION_METHODS,
+    Partition,
+    balanced_blocks,
+    equal_blocks,
+    greedy_degree_blocks,
+    make_partition,
+)
 
 __all__ = [
     "CSRGraph",
@@ -8,5 +15,10 @@ __all__ = [
     "build_stripe_schedule",
     "make_graph",
     "GRAPH_GENERATORS",
+    "PARTITION_METHODS",
+    "Partition",
     "balanced_blocks",
+    "equal_blocks",
+    "greedy_degree_blocks",
+    "make_partition",
 ]

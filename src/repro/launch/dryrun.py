@@ -53,9 +53,21 @@ _COLLECTIVES = (
 )
 
 _DTYPE_BYTES = {
-    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
-    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
-    "s8": 1, "u8": 1, "pred": 1,
+    "f64": 8,
+    "f32": 4,
+    "f16": 2,
+    "bf16": 2,
+    "f8e4m3fn": 1,
+    "f8e5m2": 1,
+    "s64": 8,
+    "u64": 8,
+    "s32": 4,
+    "u32": 4,
+    "s16": 2,
+    "u16": 2,
+    "s8": 1,
+    "u8": 1,
+    "pred": 1,
 }
 
 _SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
@@ -160,9 +172,7 @@ def build_cell(arch: str, shape_name: str, multi_pod: bool, kv_quant: bool = Fal
     key = jax.random.PRNGKey(0)
 
     kind, arg_specs, arg_shard_specs = input_specs(cfg, shape, rules)
-    arg_sh = tuple(
-        named(mesh, s, d) for s, d in zip(arg_shard_specs, arg_specs)
-    )
+    arg_sh = tuple(named(mesh, s, d) for s, d in zip(arg_shard_specs, arg_specs))
 
     t0 = time.time()
     with use_rules(rules), set_mesh(mesh):
@@ -262,7 +272,9 @@ def run_cell(arch: str, shape_name: str, mesh_name: str, force=False, kv_quant=F
         print(f"[skip] {out.name}")
         return json.loads(out.read_text())
     try:
-        rec = build_cell(arch, shape_name, multi_pod=(mesh_name == "multi"), kv_quant=kv_quant)
+        rec = build_cell(
+            arch, shape_name, multi_pod=(mesh_name == "multi"), kv_quant=kv_quant
+        )
         out.write_text(json.dumps(rec, indent=1))
         print(
             f"[ok]   {out.name}: compile={rec['compile_s']}s "
@@ -272,12 +284,15 @@ def run_cell(arch: str, shape_name: str, mesh_name: str, force=False, kv_quant=F
         )
         return rec
     except Exception as e:  # noqa: BLE001 — sweep must record failures and continue
-        err = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
-               "error": f"{type(e).__name__}: {e}",
-               "trace": traceback.format_exc()[-2000:]}
-        (RESULTS / f"FAILED__{ALIASES[arch]}__{shape_name}__{mesh_name}.json").write_text(
-            json.dumps(err, indent=1)
-        )
+        err = {
+            "arch": arch,
+            "shape": shape_name,
+            "mesh": mesh_name,
+            "error": f"{type(e).__name__}: {e}",
+            "trace": traceback.format_exc()[-2000:],
+        }
+        fail = RESULTS / f"FAILED__{ALIASES[arch]}__{shape_name}__{mesh_name}.json"
+        fail.write_text(json.dumps(err, indent=1))
         print(f"[FAIL] {arch} {shape_name} {mesh_name}: {err['error']}")
         return err
 

@@ -10,7 +10,8 @@ to a fixed batch size so the compiled shape never changes.
 Example::
 
     PYTHONPATH=src python -m repro.launch.serve_graph --graph twitter \\
-        --scale 12 --algo both --queries 8 --repeats 3 --delta auto
+        --scale 12 --algo both --queries 8 --repeats 3 --delta auto \\
+        --backend sharded --frontier halo --compact-every 4
 """
 
 from __future__ import annotations
@@ -46,6 +47,12 @@ class GraphService:
     match the damping baked into the graph's pagerank edge values
     (``d / outdeg``), so one value covers both the link-follow mass and the
     teleport mass of every PPR query.
+
+    ``backend="sharded"`` serves every batch through the ``shard_map``
+    engine spanning the worker mesh (``frontier="halo"`` keeps the frontier
+    sharded with halo-exchange commits — graphs larger than one device);
+    ``compact_every`` shrinks each batch to its unconverged queries every
+    that many rounds so one straggler query stops taxing the whole batch.
     """
 
     def __init__(
@@ -56,6 +63,9 @@ class GraphService:
         batch_size: int = 8,
         min_chunk: int = MIN_CHUNK,
         damping: float = 0.85,
+        backend: str = "jit",
+        frontier: str = "replicated",
+        compact_every: int | None = None,
     ):
         self.graph = graph
         self.n_workers = n_workers
@@ -63,6 +73,9 @@ class GraphService:
         self.batch_size = batch_size
         self.min_chunk = min_chunk
         self.damping = damping
+        self.backend = backend
+        self.frontier = frontier
+        self.compact_every = compact_every
         self._solvers: dict[str, Solver] = {}
         self._ppr_x0 = None  # constant (batch_size, n) uniform tile, built once
 
@@ -79,11 +92,17 @@ class GraphService:
                 problems[name](),
                 n_workers=self.n_workers,
                 delta=self.delta,
-                backend="jit",
+                backend=self.backend,
+                frontier=self.frontier,
                 min_chunk=self.min_chunk,
             )
             self._solvers[name] = sv
         return sv
+
+    def _solve(self, name: str, x0_batch, q=None):
+        return solve_batch(
+            self.solver(name), x0_batch, q=q, compact_every=self.compact_every
+        )
 
     def _pad(self, arr: np.ndarray) -> tuple[np.ndarray, int]:
         k = arr.shape[0]
@@ -97,7 +116,7 @@ class GraphService:
     def sssp(self, sources) -> np.ndarray:
         """(k, n) int32 distance rows, one per source, in one lowering."""
         sources, k = self._pad(np.atleast_1d(np.asarray(sources, np.int64)))
-        res = solve_batch(self.solver("sssp"), multi_source_x0(self.graph, sources))
+        res = self._solve("sssp", multi_source_x0(self.graph, sources))
         return res.x[:k]
 
     def ppr(self, seeds) -> np.ndarray:
@@ -107,10 +126,8 @@ class GraphService:
             self._ppr_x0 = np.full(
                 (self.batch_size, self.graph.n), 1.0 / self.graph.n, np.float32
             )
-        res = solve_batch(
-            self.solver("ppr"),
-            self._ppr_x0,
-            q=ppr_teleport(self.graph, seeds, self.damping),
+        res = self._solve(
+            "ppr", self._ppr_x0, q=ppr_teleport(self.graph, seeds, self.damping)
         )
         return res.x[:k]
 
@@ -130,6 +147,14 @@ def main(argv=None) -> dict:
     ap.add_argument("--repeats", type=int, default=3, help="batches per algo")
     ap.add_argument("--min-chunk", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--backend", choices=["jit", "sharded"], default="jit")
+    ap.add_argument("--frontier", choices=["replicated", "halo"], default="replicated")
+    ap.add_argument(
+        "--compact-every",
+        type=int,
+        default=None,
+        help="straggler compaction period in rounds (default: off)",
+    )
     args = ap.parse_args(argv)
 
     delta = args.delta if args.delta in ("auto", "sync", "async") else int(args.delta)
@@ -147,6 +172,9 @@ def main(argv=None) -> dict:
             delta=delta,
             batch_size=args.queries,
             min_chunk=args.min_chunk,
+            backend=args.backend,
+            frontier=args.frontier,
+            compact_every=args.compact_every,
         )
         lat = []
         for rep in range(args.repeats):

@@ -83,7 +83,9 @@ def main(argv=None):
 
     if args.commit_delta > 0:
         if args.batch % args.n_pods:
-            ap.error(f"--batch {args.batch} must be divisible by --n-pods {args.n_pods}")
+            ap.error(
+                f"--batch {args.batch} must be divisible by --n-pods {args.n_pods}"
+            )
         cc = DelayedCommitConfig(
             n_pods=args.n_pods, delta=args.commit_delta, compress=args.compress
         )

@@ -15,10 +15,11 @@ from repro.solve.problem import (
     ppr_teleport,
     sssp_problem,
 )
-from repro.solve.solver import BACKENDS, Solver, resolve_legacy_args
+from repro.solve.solver import BACKENDS, FRONTIERS, Solver, resolve_legacy_args
 
 __all__ = [
     "BACKENDS",
+    "FRONTIERS",
     "BatchResult",
     "Problem",
     "Solver",

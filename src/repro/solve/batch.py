@@ -8,9 +8,18 @@ as a single device program against a warm schedule — no per-query stripe
 builds, no per-query retraces, one commit collective per flush shared by the
 whole batch.
 
+``backend="sharded"`` vmaps the ``shard_map`` round instead of the
+single-device one, so the whole batch spans the worker mesh in one lowering —
+with ``frontier="halo"`` each commit moves only boundary entries while all Q
+queries ride the same collectives.
+
 Converged queries keep iterating (at their fixed point for idempotent
 semirings like min-plus) until the stragglers finish; ``rounds_per_query``
-records when each one first converged.
+records when each one first converged.  ``compact_every=k`` bounds that
+straggler tax: every ``k`` rounds the unconverged subset is gathered on the
+host and the loop continues on the smaller batch (one extra compile per
+distinct active size); ``compact_every=None`` preserves the single fused
+call bit-for-bit.
 """
 
 from __future__ import annotations
@@ -43,21 +52,49 @@ class BatchResult:
     Q: int
     compile_time_s: float = 0.0  # 0 on a warm cache
     total_time_s: float = 0.0
+    compactions: int = 0  # straggler-compaction shrinks performed
 
 
-def _make_batch_solve_fn(sched, semiring, row_update_q, residual_fn):
-    """``(X_ext, Q, tol, max_rounds) -> carry`` running all queries together."""
-    rnd = jax.vmap(round_fn_q(sched, semiring, row_update_q), in_axes=(0, 0))
+def _batched_round(solver, sched, backend: str, frontier: str):
+    """Build ``(X_ext, qb) -> X_ext`` running one round for all Q queries."""
+    sr = solver.problem.semiring
+    if backend == "jit":
+        return jax.vmap(round_fn_q(sched, sr, solver._row_update_q), in_axes=(0, 0))
+    if backend != "sharded":
+        raise ValueError(f"batch backend must be 'jit' or 'sharded': {backend!r}")
+    mesh = solver._default_mesh()
+    if frontier == "replicated":
+        from repro.dist.engine_sharded import sharded_round_fn_q
+
+        base = sharded_round_fn_q(
+            sched, sr, solver._row_update_q, mesh, axis=solver.mesh_axis
+        )
+        vm = jax.vmap(base, in_axes=(0, None, None, None, None, 0))
+        args = (sched.src, sched.val, sched.dst_local, sched.rows)
+        return lambda X, qb: vm(X, *args, qb)
+    from repro.dist.engine_sharded import frontier_plan_args, frontier_round_ext_fn
+
+    plan = solver.frontier_plan(sched)
+    ext = frontier_round_ext_fn(
+        sched, plan, sr, solver._row_update_q, mesh, axis=solver.mesh_axis
+    )
+    args = frontier_plan_args(sched, plan)
+    vm = jax.vmap(ext, in_axes=(0, 0) + (None,) * len(args))
+    return lambda X, qb: vm(X, qb, *args)
+
+
+def _make_batch_solve_fn(rnd, residual_fn):
+    """``(X_ext, qb, tol, max_rounds) -> carry`` over a batched round fn."""
     res_fn = jax.vmap(residual_fn, in_axes=(0, 0))
 
-    def solve_loop(X_ext, q, tol, max_rounds):
+    def solve_loop(X_ext, qb, tol, max_rounds):
         def cond(carry):
             _, _, rounds, converged, _ = carry
             return jnp.logical_and(rounds < max_rounds, ~jnp.all(converged))
 
         def body(carry):
             X, _, rounds, converged, rpq = carry
-            X_new = rnd(X, q)
+            X_new = rnd(X, qb)
             res = res_fn(X[:, :-1], X_new[:, :-1]).astype(jnp.float32)
             # stamp only at first convergence; never-converged queries keep 0
             just_converged = jnp.logical_and(~converged, res <= tol)
@@ -78,24 +115,46 @@ def _make_batch_solve_fn(sched, semiring, row_update_q, residual_fn):
 
 
 def solve_batch(
-    solver, x0_batch, *, q=None, delta=None, tol=None, max_rounds=None
+    solver,
+    x0_batch,
+    *,
+    q=None,
+    delta=None,
+    backend: str | None = None,
+    frontier: str | None = None,
+    tol=None,
+    max_rounds=None,
+    compact_every: int | None = None,
 ) -> BatchResult:
     """Solve Q queries of ``solver.problem`` in one compiled device loop.
 
-    * ``x0_batch`` — (Q, n) initial states (e.g. :func:`multi_source_x0`).
-    * ``q``        — for query problems, a pytree whose leaves have a leading
-      Q axis (e.g. :func:`ppr_teleport`); must be ``None`` otherwise.
+    * ``x0_batch``      — (Q, n) initial states (e.g. :func:`multi_source_x0`).
+    * ``q``             — for query problems, a pytree whose leaves have a
+      leading Q axis (e.g. :func:`ppr_teleport`); must be ``None`` otherwise.
+    * ``backend``       — ``"jit"`` (default: vmapped single-device round) or
+      ``"sharded"`` (vmapped ``shard_map`` round spanning the worker mesh);
+      ``frontier`` picks replicated vs halo for the sharded round.
+    * ``compact_every`` — shrink the active batch to the unconverged subset
+      every this many rounds (straggler-aware batching); ``None`` runs one
+      fused loop until the slowest query converges, bit-for-bit as before.
 
     ``solve_batch`` with ``Q == 1`` is bit-identical to the unbatched
     ``backend="jit"`` path: same round function, same residual rule, same
     stopping round.  The compiled loop is cached on the solver keyed by
-    ``(δ, Q)``; repeated batches of the same shape never retrace.
+    ``(backend, frontier, δ, Q)``; repeated batches of the same shape never
+    retrace.
     """
     problem = solver.problem
     sr = problem.semiring
+    backend = backend or (
+        solver.default_backend if solver.default_backend == "sharded" else "jit"
+    )
+    frontier = solver.resolve_frontier(frontier, backend)
     sched = solver.schedule(delta)
     tol = solver.tol if tol is None else tol
     max_rounds = solver.max_rounds if max_rounds is None else max_rounds
+    if compact_every is not None and compact_every < 1:
+        raise ValueError(f"compact_every must be >= 1, got {compact_every}")
 
     X = jnp.asarray(x0_batch, dtype=sr.dtype)
     if X.ndim != 2 or X.shape[1] != solver.graph.n:
@@ -116,36 +175,78 @@ def solve_batch(
         qb = jnp.zeros((Q,), jnp.int32)
 
     tol_a = jnp.asarray(tol, jnp.float32)
-    mr_a = jnp.asarray(max_rounds, jnp.int32)
-    fn = solver.compile_cached(
-        ("batch", sched.delta, Q),
-        _make_batch_solve_fn(sched, sr, solver._row_update_q, problem.residual),
-        X_ext,
-        qb,
-        tol_a,
-        mr_a,
-    )
-    compile_time_s = solver._last_compile_s
+    bytes_per = np.dtype(sr.dtype).itemsize
+
+    def compiled_loop(X_cur, qb_cur):
+        """The fused loop for the current active size (cached per size)."""
+        return solver.compile_cached(
+            ("batch", backend, frontier, sched.delta, X_cur.shape[0]),
+            _make_batch_solve_fn(
+                _batched_round(solver, sched, backend, frontier), problem.residual
+            ),
+            X_cur,
+            qb_cur,
+            tol_a,
+            jnp.asarray(max_rounds, jnp.int32),
+        )
+
     solver.stats["solves"] += 1
+    x_out = np.empty((Q, solver.graph.n), dtype=sr.dtype)
+    rpq_all = np.zeros(Q, np.int32)
+    conv_all = np.zeros(Q, bool)
+    res_all = np.full(Q, np.inf, np.float32)
+    active = np.arange(Q)
+    rounds_done = 0
+    flushes = 0
+    flush_bytes = 0
+    compile_time_s = 0.0
+    compactions = 0
     t0 = time.perf_counter()
-    X_out, res, rounds, converged, rpq = fn(X_ext, qb, tol_a, mr_a)
-    X_out.block_until_ready()
+    while active.size:
+        chunk = max_rounds - rounds_done
+        if compact_every is not None:
+            chunk = min(chunk, compact_every)
+        fn = compiled_loop(X_ext, qb)
+        compile_time_s += solver._last_compile_s
+        X_new, res, r, conv, rpq = fn(X_ext, qb, tol_a, jnp.asarray(chunk, jnp.int32))
+        X_new.block_until_ready()
+        r = int(r)
+        rounds_done += r
+        flushes += r * sched.S
+        flush_bytes += r * sched.S * sched.P * sched.delta * bytes_per * active.size
+        conv_np = np.asarray(conv)
+        rpq_np = np.asarray(rpq)
+        rpq_all[active] = np.where(rpq_np > 0, rounds_done - r + rpq_np, 0)
+        conv_all[active] = conv_np
+        res_all[active] = np.asarray(res)
+        if conv_np.all() or rounds_done >= max_rounds:
+            x_out[active] = np.asarray(X_new[:, :-1])
+            break
+        # Straggler compaction: keep only converged rows' states on the host
+        # (their final answers) and continue on the unconverged subset.
+        if conv_np.any():
+            done = jnp.asarray(np.nonzero(conv_np)[0])
+            x_out[active[conv_np]] = np.asarray(X_new[done, :-1])
+            keep = jnp.asarray(np.nonzero(~conv_np)[0])
+            active = active[~conv_np]
+            X_new = X_new[keep]
+            qb = jax.tree_util.tree_map(lambda a: a[keep], qb)
+            compactions += 1
+        X_ext = X_new
     total = time.perf_counter() - t0
 
-    rounds = int(rounds)
-    bytes_per = np.dtype(sr.dtype).itemsize
-    flushes = rounds * sched.S
     return BatchResult(
-        x=np.asarray(X_out[:, :-1]),
-        rounds=rounds,
-        rounds_per_query=np.asarray(rpq),
-        converged=np.asarray(converged),
-        residuals=np.asarray(res),
+        x=x_out,
+        rounds=rounds_done,
+        rounds_per_query=rpq_all,
+        converged=conv_all,
+        residuals=res_all,
         flushes=flushes,
-        flush_bytes=flushes * sched.P * sched.delta * bytes_per * Q,
+        flush_bytes=flush_bytes,
         delta=sched.delta,
         P=sched.P,
         Q=Q,
         compile_time_s=compile_time_s,
         total_time_s=total,
+        compactions=compactions,
     )

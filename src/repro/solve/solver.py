@@ -1,11 +1,11 @@
-"""The :class:`Solver` — one entry point over every backend and δ.
+"""The :class:`Solver` — one entry point over every backend, frontier, and δ.
 
 A solver binds ``(graph, problem, n_workers)`` and owns two caches:
 
 * **schedule cache** — :class:`DeviceSchedule` per resolved δ, so repeated
   queries never rebuild stripes;
 * **compile cache**  — AOT-compiled round / fused-loop executables per
-  ``(backend, δ)``, so repeated queries never retrace.
+  ``(backend, frontier, δ)``, so repeated queries never retrace.
 
 ``delta`` accepts the paper's three disciplines by name (``"sync"``,
 ``"async"``), an explicit integer (``"delayed"``), or ``"auto"``, which probes
@@ -13,7 +13,10 @@ the sync/async round counts and asks the analytic δ cost model
 (:mod:`repro.core.delta_model`) for δ*.  ``backend`` selects host-driven
 rounds (instrumented, per-round residuals), the fused ``lax.while_loop``
 device path, or the ``shard_map`` multi-device engine from
-:mod:`repro.dist.engine_sharded`.
+:mod:`repro.dist.engine_sharded`; for the sharded backend ``frontier``
+selects between the replicated frontier (exactness-first, O(P·δ) wire per
+commit) and the owner-computes sharded frontier with halo exchange
+(O(boundary) wire, graphs larger than one device).
 """
 
 from __future__ import annotations
@@ -38,12 +41,13 @@ from repro.core.engine import (
     round_fn_q,
 )
 from repro.graphs.formats import CSRGraph
-from repro.graphs.partition import balanced_blocks
+from repro.graphs.partition import PARTITION_METHODS, Partition
 from repro.solve.problem import Problem
 
-__all__ = ["Solver", "BACKENDS", "resolve_legacy_args"]
+__all__ = ["Solver", "BACKENDS", "FRONTIERS", "resolve_legacy_args"]
 
 BACKENDS = ("host", "jit", "sharded")
+FRONTIERS = ("replicated", "halo")
 
 _NO_QUERY = np.zeros((), dtype=np.int32)  # dummy q for query-free problems
 
@@ -87,10 +91,11 @@ def resolve_legacy_args(mode, delta, host_loop, backend):
 class Solver:
     """Reusable solver for one ``(graph, problem)`` pair.
 
-    ``solve()`` answers a query; ``delta=`` / ``backend=`` per call override
-    the construction defaults.  All schedules and compiled executables are
-    cached on the instance — a second ``solve()`` with the same ``(δ, backend)``
-    performs zero schedule builds and zero retraces (see ``stats``).
+    ``solve()`` answers a query; ``delta=`` / ``backend=`` / ``frontier=``
+    per call override the construction defaults.  All schedules, halo plans,
+    and compiled executables are cached on the instance — a second ``solve()``
+    with the same ``(δ, backend, frontier)`` performs zero schedule builds and
+    zero retraces (see ``stats``).
     """
 
     def __init__(
@@ -100,6 +105,8 @@ class Solver:
         n_workers: int = 8,
         delta="auto",
         backend: str = "jit",
+        frontier: str = "replicated",
+        partition_method: str = "balanced",
         min_chunk: int = MIN_CHUNK,
         mesh=None,
         mesh_axis: str = "data",
@@ -108,12 +115,20 @@ class Solver:
     ):
         if backend not in BACKENDS:
             raise ValueError(f"backend must be one of {BACKENDS}, got {backend!r}")
+        self._check_frontier(frontier)
+        if partition_method not in PARTITION_METHODS:
+            raise ValueError(
+                f"partition_method must be one of {sorted(PARTITION_METHODS)}, "
+                f"got {partition_method!r}"
+            )
         self._check_delta(delta)
         self.graph = graph
         self.problem = problem
         self.n_workers = n_workers
         self.default_delta = delta
         self.default_backend = backend
+        self.default_frontier = frontier
+        self.partition_method = partition_method
         self.min_chunk = min_chunk
         self.mesh_axis = mesh_axis
         self.tol = problem.tol if tol is None else tol
@@ -139,27 +154,43 @@ class Solver:
             self._row_update_q = _row_update_q
         self._zero_ext = jnp.asarray([sr.zero]).astype(sr.dtype)
         self._bounds = None
+        self._partition = None
         self._auto_delta = None
         self._schedules: dict[int, DeviceSchedule] = {}
+        self._plans: dict[tuple, object] = {}
         self._compiled: dict[tuple, object] = {}
         self._last_compile_s = 0.0
         self.stats = {
             "solves": 0,
             "schedule_builds": 0,
+            "plan_builds": 0,
             "traces": 0,
             "compiles": 0,
             "compile_time_s": 0.0,
         }
 
     # ------------------------------------------------------------------ #
-    # δ resolution + schedule cache
+    # δ resolution + schedule/plan caches
     # ------------------------------------------------------------------ #
+    @property
+    def bounds(self) -> np.ndarray:
+        """The (P + 1,) contiguous block bounds of ``partition_method``."""
+        if self._bounds is None:
+            self._bounds = PARTITION_METHODS[self.partition_method](
+                self._sched_graph, self.n_workers
+            )
+        return self._bounds
+
     @property
     def block_size(self) -> int:
         """Max worker block size B — the sync δ and the upper clamp."""
-        if self._bounds is None:
-            self._bounds = balanced_blocks(self._sched_graph, self.n_workers)
-        return int(np.diff(self._bounds).max())
+        return int(np.diff(self.bounds).max())
+
+    def partition(self) -> Partition:
+        """The cached :class:`Partition` (owner map, halo sets, edge cut)."""
+        if self._partition is None:
+            self._partition = Partition.from_bounds(self._sched_graph, self.bounds)
+        return self._partition
 
     @staticmethod
     def _check_delta(delta):
@@ -167,6 +198,11 @@ class Solver:
             raise ValueError(
                 f"delta must be 'sync', 'async', 'auto', or an int, got {delta!r}"
             )
+
+    @staticmethod
+    def _check_frontier(frontier):
+        if frontier not in FRONTIERS:
+            raise ValueError(f"frontier must be one of {FRONTIERS}, got {frontier!r}")
 
     def resolve_delta(self, delta=None) -> int:
         """Normalize ``delta ∈ {None, 'sync', 'async', 'auto', int}`` to rows."""
@@ -183,6 +219,26 @@ class Solver:
                 self._auto_delta = self._probe_auto_delta()
             return self._auto_delta
         return int(min(max(int(delta), 1), B))
+
+    def resolve_frontier(self, frontier=None, backend: str | None = None) -> str:
+        """Normalize the frontier knob; ``"halo"`` requires the sharded backend.
+
+        An *explicit* ``frontier="halo"`` with a non-sharded backend is an
+        error; a halo construction default silently falls back to replicated
+        for host/jit calls (the single-device rounds never shard the
+        frontier), so δ="auto" host probes keep working on halo solvers.
+        """
+        explicit = frontier is not None
+        if frontier is None:
+            frontier = self.default_frontier
+        self._check_frontier(frontier)
+        if frontier == "halo" and backend is not None and backend != "sharded":
+            if explicit:
+                raise ValueError(
+                    f"frontier='halo' requires backend='sharded', got {backend!r}"
+                )
+            return "replicated"
+        return frontier
 
     def _probe_auto_delta(self) -> int:
         """Fit the δ cost model from two measured probes (sync + finest δ)."""
@@ -210,10 +266,25 @@ class Solver:
                 self.problem.semiring,
                 mode="delayed",
                 min_chunk=self.min_chunk,
+                bounds=self.bounds,
             )
             self._schedules[delta_eff] = sched
             self.stats["schedule_builds"] += 1
         return sched
+
+    def frontier_plan(self, sched: DeviceSchedule):
+        """The cached owner-computes halo plan for ``sched`` on this mesh."""
+        from repro.dist.compat import mesh_axis_sizes
+        from repro.dist.engine_sharded import make_frontier_plan
+
+        D = mesh_axis_sizes(self._default_mesh())[self.mesh_axis]
+        key = (sched.delta, D)
+        plan = self._plans.get(key)
+        if plan is None:
+            plan = make_frontier_plan(sched, D)
+            self._plans[key] = plan
+            self.stats["plan_builds"] += 1
+        return plan
 
     # ------------------------------------------------------------------ #
     # compile cache
@@ -275,6 +346,7 @@ class Solver:
         q=None,
         delta=None,
         backend: str | None = None,
+        frontier: str | None = None,
         tol: float | None = None,
         max_rounds: int | None = None,
     ) -> EngineResult:
@@ -282,6 +354,7 @@ class Solver:
         backend = backend or self.default_backend
         if backend not in BACKENDS:
             raise ValueError(f"backend must be one of {BACKENDS}, got {backend!r}")
+        frontier = self.resolve_frontier(frontier, backend)
         tol = self.tol if tol is None else tol
         max_rounds = self.max_rounds if max_rounds is None else max_rounds
         sched = self.schedule(delta)
@@ -291,8 +364,10 @@ class Solver:
         if backend == "jit":
             return self._solve_jit(sched, x_ext, q, tol, max_rounds)
         if backend == "host":
-            return self._solve_host(sched, x_ext, q, tol, max_rounds)
-        return self._solve_sharded(sched, x_ext, q, tol, max_rounds)
+            rnd = self._compiled_round(sched, x_ext, q, "host")
+        else:
+            rnd = self._compiled_round(sched, x_ext, q, "sharded", frontier)
+        return self._host_loop(sched, rnd, x_ext, tol, max_rounds)
 
     def _solve_jit(self, sched, x_ext, q, tol, max_rounds) -> EngineResult:
         sr = self.problem.semiring
@@ -315,47 +390,42 @@ class Solver:
             compile_time_s=self._last_compile_s,
         )
 
-    def _solve_host(self, sched, x_ext, q, tol, max_rounds) -> EngineResult:
-        rnd = self._compiled_round(sched, x_ext, q, "host")
-        return self._host_loop(sched, rnd, x_ext, tol, max_rounds)
-
-    def _solve_sharded(self, sched, x_ext, q, tol, max_rounds) -> EngineResult:
-        rnd = self._compiled_round(sched, x_ext, q, "sharded")
-        return self._host_loop(sched, rnd, x_ext, tol, max_rounds)
-
-    def _compiled_round(self, sched, x_ext, q, backend):
+    def _compiled_round(self, sched, x_ext, q, backend, frontier="replicated"):
         """Cached compiled one-round ``x_ext -> x_ext`` for host/sharded."""
+        sr = self.problem.semiring
         if backend == "host":
             rnd = self.compile_cached(
                 ("host", sched.delta),
-                round_fn_q(sched, self.problem.semiring, self._row_update_q),
+                round_fn_q(sched, sr, self._row_update_q),
                 x_ext,
                 q,
             )
             return lambda x: rnd(x, q)
         if backend != "sharded":
             raise ValueError(f"round backend must be 'host' or 'sharded': {backend!r}")
-        if self.problem.takes_query:
-            raise NotImplementedError(
-                "backend='sharded' supports query-free problems only "
-                "(sharded_round_fn has a fixed argument surface)"
-            )
-        from repro.dist.engine_sharded import sharded_round_fn
-
         mesh = self._default_mesh()
-        fn = sharded_round_fn(
-            sched, self.problem.semiring, self._row_update, mesh, axis=self.mesh_axis
+        if frontier == "replicated":
+            from repro.dist.engine_sharded import sharded_round_fn_q
+
+            fn = sharded_round_fn_q(
+                sched, sr, self._row_update_q, mesh, axis=self.mesh_axis
+            )
+            args = (sched.src, sched.val, sched.dst_local, sched.rows)
+            compiled = self.compile_cached(
+                ("sharded", "replicated", sched.delta), fn, x_ext, *args, q
+            )
+            return lambda x: compiled(x, *args, q)
+        from repro.dist.engine_sharded import frontier_plan_args, frontier_round_ext_fn
+
+        plan = self.frontier_plan(sched)
+        fn = frontier_round_ext_fn(
+            sched, plan, sr, self._row_update_q, mesh, axis=self.mesh_axis
         )
+        args = frontier_plan_args(sched, plan)
         compiled = self.compile_cached(
-            ("sharded", sched.delta),
-            fn,
-            x_ext,
-            sched.src,
-            sched.val,
-            sched.dst_local,
-            sched.rows,
+            ("sharded", "halo", sched.delta), fn, x_ext, q, *args
         )
-        return lambda x: compiled(x, sched.src, sched.val, sched.dst_local, sched.rows)
+        return lambda x: compiled(x, q, *args)
 
     def _host_loop(self, sched, rnd, x_ext, tol, max_rounds) -> EngineResult:
         return host_loop(
@@ -369,12 +439,31 @@ class Solver:
             compile_time_s=self._last_compile_s,
         )
 
-    def solve_batch(self, x0_batch, *, q=None, delta=None, tol=None, max_rounds=None):
+    def solve_batch(
+        self,
+        x0_batch,
+        *,
+        q=None,
+        delta=None,
+        backend: str | None = None,
+        frontier: str | None = None,
+        tol=None,
+        max_rounds=None,
+        compact_every: int | None = None,
+    ):
         """Batched multi-query solve — see :func:`repro.solve.batch.solve_batch`."""
         from repro.solve.batch import solve_batch
 
         return solve_batch(
-            self, x0_batch, q=q, delta=delta, tol=tol, max_rounds=max_rounds
+            self,
+            x0_batch,
+            q=q,
+            delta=delta,
+            backend=backend,
+            frontier=frontier,
+            tol=tol,
+            max_rounds=max_rounds,
+            compact_every=compact_every,
         )
 
     # ------------------------------------------------------------------ #
@@ -394,13 +483,17 @@ class Solver:
             )
         return self._mesh
 
-    def round_callable(self, delta=None, backend: str = "host", q=None):
+    def round_callable(
+        self, delta=None, backend: str = "host", frontier: str | None = None, q=None
+    ):
         """The cached compiled one-round ``x_ext -> x_ext`` (tests/benchmarks).
 
         ``backend`` is ``"host"`` (the single-device jitted round — also what
-        the jit backend's fused loop iterates) or ``"sharded"``.
+        the jit backend's fused loop iterates) or ``"sharded"``; for the
+        sharded backend ``frontier`` picks replicated vs halo.
         """
+        frontier = self.resolve_frontier(frontier, backend)
         sched = self.schedule(delta)
         return self._compiled_round(
-            sched, self._x_ext(None), self.resolve_query(q), backend
+            sched, self._x_ext(None), self.resolve_query(q), backend, frontier
         )

@@ -70,7 +70,9 @@ def test_spmv_on_real_graph(rng):
     np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r), rtol=1e-5)
 
 
-@pytest.mark.parametrize("n_chunks,delta,max_deg", [(1, 8, 8), (4, 32, 16), (7, 16, 128)])
+@pytest.mark.parametrize(
+    "n_chunks,delta,max_deg", [(1, 8, 8), (4, 32, 16), (7, 16, 128)]
+)
 def test_delayed_block_vs_sequential_ref(rng, n_chunks, delta, max_deg):
     n = n_chunks * delta
     idx = rng.integers(0, n, (n_chunks, delta, max_deg)).astype(np.int32)

@@ -1,0 +1,218 @@
+"""repro.graphs.partition: Partition invariants, partitioners, access matrix.
+
+The Partition is what the frontier-sharded engine trusts for correctness:
+index maps must be bijections onto the local layout, halo sets must cover
+every cut edge (a missed halo vertex would silently read a stale frontier
+value), and the edge-cut counters must agree with an independent numpy
+reference and with the Fig-5 access matrix.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.access_matrix import (
+    access_matrix,
+    locality_fraction,
+    partition_report,
+    remote_read_fraction,
+)
+from repro.graphs.formats import CSRGraph
+from repro.graphs.generators import make_graph
+from repro.graphs.partition import (
+    PARTITION_METHODS,
+    equal_blocks,
+    greedy_degree_blocks,
+    make_partition,
+)
+
+
+def _random_graph(n, m, seed):
+    rng = np.random.default_rng(seed)
+    return CSRGraph.from_edges(
+        n, rng.integers(0, n, m), rng.integers(0, n, m), name=f"r{seed}"
+    )
+
+
+def _edge_endpoints(g):
+    dst = np.repeat(np.arange(g.n, dtype=np.int64), np.diff(g.indptr))
+    return g.indices.astype(np.int64), dst
+
+
+class TestPartitionInvariants:
+    @pytest.mark.parametrize("seed,P", [(0, 1), (1, 3), (2, 4), (3, 7)])
+    def test_index_maps_are_bijections(self, seed, P):
+        g = _random_graph(100, 400, seed)
+        part = make_partition(g, P)
+        for p in range(P):
+            gi = part.global_index(p)
+            # every resident slot maps to a distinct global vertex…
+            assert len(np.unique(gi)) == gi.size == part.local_sizes[p]
+            # …and local_index inverts global_index exactly
+            np.testing.assert_array_equal(part.local_index(p, gi), np.arange(gi.size))
+        # non-resident vertices resolve to -1
+        for p in range(P):
+            resident = set(part.global_index(p).tolist())
+            absent = np.array(
+                [v for v in range(g.n) if v not in resident][:10], dtype=np.int64
+            )
+            if absent.size:
+                assert (part.local_index(p, absent) == -1).all()
+
+    @pytest.mark.parametrize("seed,P", [(0, 2), (5, 4), (9, 6)])
+    def test_halo_covers_every_cut_edge(self, seed, P):
+        g = _random_graph(80, 500, seed)
+        part = make_partition(g, P)
+        src, dst = _edge_endpoints(g)
+        o_src, o_dst = part.owner[src], part.owner[dst]
+        cut = o_src != o_dst
+        for s, d in zip(src[cut], dst[cut]):
+            reader, owner = part.owner[d], part.owner[s]
+            assert s in part.halo_in[reader]
+            assert s in part.halo_out[owner]
+        # and nothing more: halo_in holds only remote read targets
+        for p in range(P):
+            assert not np.isin(
+                part.halo_in[p], np.arange(part.bounds[p], part.bounds[p + 1])
+            ).any()
+
+    @pytest.mark.parametrize("method", sorted(PARTITION_METHODS))
+    def test_edge_cut_matches_numpy_reference(self, method):
+        g = _random_graph(120, 700, 7)
+        part = make_partition(g, 5, method=method)
+        src, dst = _edge_endpoints(g)
+        owner_ref = np.searchsorted(part.bounds[1:], np.arange(g.n), side="right")
+        np.testing.assert_array_equal(part.owner, owner_ref)
+        assert part.edge_cut == int((owner_ref[src] != owner_ref[dst]).sum())
+        assert 0.0 <= part.cut_fraction <= 1.0
+
+    def test_owner_map_matches_bounds(self):
+        g = _random_graph(50, 200, 3)
+        part = make_partition(g, 4)
+        for p in range(4):
+            lo, hi = part.bounds[p], part.bounds[p + 1]
+            assert (part.owner[lo:hi] == p).all()
+
+    def test_access_matrix_offdiag_equals_edge_cut(self):
+        g = make_graph("web", scale=9, efactor=8, kind="pagerank")
+        part = make_partition(g, 8)
+        mat = access_matrix(g, part)  # Partition accepted directly
+        assert int(mat.sum() - np.trace(mat)) == part.edge_cut
+        rep = partition_report(g, part)
+        assert rep["edge_cut"] == part.edge_cut
+        assert abs(rep["locality_fraction"] + rep["remote_read_fraction"] - 1.0) < 1e-6
+        assert rep["replication_factor"] >= 1.0
+
+
+class TestPartitioners:
+    @pytest.mark.parametrize("method", sorted(PARTITION_METHODS))
+    @pytest.mark.parametrize("P", [1, 3, 8])
+    def test_bounds_valid(self, method, P):
+        g = _random_graph(64, 300, 11)
+        b = PARTITION_METHODS[method](g, P)
+        assert b.shape == (P + 1,)
+        assert b[0] == 0 and b[-1] == g.n
+        assert (np.diff(b) >= 0).all()
+
+    def test_equal_blocks_sizes(self):
+        b = equal_blocks(100, 4)
+        assert (np.diff(b) == 25).all()
+
+    def test_greedy_degree_balances_skew(self):
+        """One hub vertex must not drag every later cut off balance."""
+        n, P = 400, 4
+        rng = np.random.default_rng(0)
+        # hub at vertex 10: huge in-degree; rest uniform
+        src = np.concatenate([rng.integers(0, n, 2000), rng.integers(0, n, 2000)])
+        dst = np.concatenate([np.full(2000, 10), rng.integers(0, n, 2000)])
+        g = CSRGraph.from_edges(n, src, dst)
+        cost = g.in_degree + 0.5 * g.out_degree
+        spreads = {}
+        for method in ("balanced", "greedy_degree"):
+            b = PARTITION_METHODS[method](g, P)
+            per_block = np.array(
+                [cost[b[p] : b[p + 1]].sum() for p in range(P)], dtype=float
+            )
+            spreads[method] = per_block.max() / max(per_block.mean(), 1e-9)
+        assert spreads["greedy_degree"] <= spreads["balanced"] * 1.05
+
+    def test_greedy_degree_rejects_bad_alpha(self):
+        g = _random_graph(10, 20, 0)
+        with pytest.raises(ValueError, match="alpha"):
+            greedy_degree_blocks(g, 2, alpha=-1.0)
+
+    def test_make_partition_rejects_unknown_method(self):
+        g = _random_graph(10, 20, 0)
+        with pytest.raises(ValueError, match="unknown partition method"):
+            make_partition(g, 2, method="metis")
+
+
+class TestClusteredVsDiffuse:
+    def test_clustered_graph_cuts_less(self):
+        """The paper's Fig-5 story as numbers: web (diagonal) cuts fewer
+        edges and needs less halo than kron (diffuse) at the same P."""
+        web = make_graph("web", scale=10, efactor=8, kind="pagerank")
+        kron = make_graph("kron", scale=10, efactor=8, kind="pagerank")
+        p_web = make_partition(web, 8)
+        p_kron = make_partition(kron, 8)
+        assert p_web.cut_fraction < p_kron.cut_fraction
+        assert p_web.replication_factor < p_kron.replication_factor
+        m_web = access_matrix(web, p_web)
+        m_kron = access_matrix(kron, p_kron)
+        assert locality_fraction(m_web) > locality_fraction(m_kron)
+        assert remote_read_fraction(m_web) < remote_read_fraction(m_kron)
+
+
+try:
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    SETTINGS = dict(
+        deadline=None,
+        max_examples=20,
+        suppress_health_check=[HealthCheck.too_slow],
+    )
+
+    @st.composite
+    def random_graph(draw):
+        n = draw(st.integers(min_value=4, max_value=100))
+        m = draw(st.integers(min_value=1, max_value=5 * n))
+        seed = draw(st.integers(min_value=0, max_value=2**31 - 1))
+        rng = np.random.default_rng(seed)
+        return CSRGraph.from_edges(
+            n, rng.integers(0, n, m), rng.integers(0, n, m), name=f"h{seed}"
+        )
+
+    @given(
+        random_graph(), st.integers(1, 6), st.sampled_from(sorted(PARTITION_METHODS))
+    )
+    @settings(**SETTINGS)
+    def test_partition_invariants_property(g, P, method):
+        part = make_partition(g, P, method=method)
+        # bounds cover, owners consistent
+        assert part.bounds[0] == 0 and part.bounds[-1] == g.n
+        src, dst = _edge_endpoints(g)
+        cut = part.owner[src] != part.owner[dst]
+        assert part.edge_cut == int(cut.sum())
+        # halo covers every cut edge, halo_out mirrors halo_in
+        for p in range(P):
+            gi = part.global_index(p)
+            assert len(np.unique(gi)) == gi.size
+            np.testing.assert_array_equal(part.local_index(p, gi), np.arange(gi.size))
+        readers_needed = np.unique(src[cut])
+        halo_union = (
+            np.unique(np.concatenate([h for h in part.halo_in]))
+            if part.halo_total
+            else np.zeros(0, np.int64)
+        )
+        out_union = (
+            np.unique(np.concatenate([h for h in part.halo_out]))
+            if sum(h.size for h in part.halo_out)
+            else np.zeros(0, np.int64)
+        )
+        np.testing.assert_array_equal(halo_union, readers_needed)
+        np.testing.assert_array_equal(out_union, readers_needed)

@@ -211,10 +211,14 @@ class TestProblemSpecs:
         with pytest.raises(ValueError, match="x0 must have shape"):
             solver.solve(np.zeros(3, np.int32))
 
-    def test_sharded_rejects_query_problems(self):
-        solver = Solver(GRAPH_PR, ppr_problem(), n_workers=4, delta=64)
-        with pytest.raises(NotImplementedError):
-            solver.solve(backend="sharded")
+    def test_sharded_supports_query_problems(self):
+        """q threads through the shard_map round (was NotImplementedError)."""
+        solver = Solver(GRAPH_PR, ppr_problem(), n_workers=4, delta=64, min_chunk=16)
+        q = ppr_teleport(GRAPH_PR, [5])[0]
+        r_jit = solver.solve(q=q, backend="jit")
+        r_shard = solver.solve(q=q, backend="sharded")
+        assert r_jit.rounds == r_shard.rounds
+        np.testing.assert_array_equal(r_jit.x, r_shard.x)
 
 
 class TestLegacySurface:
