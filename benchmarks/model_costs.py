@@ -74,7 +74,11 @@ def cell_cost(cfg: ModelConfig, shape: ShapeSpec, accum: int = 1) -> CellCost:
     dtype_bytes = 2  # bf16 compute
 
     if shape.kind == "train":
-        fwd = _param_flops(cfg, N_act, B, S) + _attn_flops_fwd(cfg, B, S) + _ssm_flops_fwd(cfg, B, S)
+        fwd = (
+            _param_flops(cfg, N_act, B, S)
+            + _attn_flops_fwd(cfg, B, S)
+            + _ssm_flops_fwd(cfg, B, S)
+        )
         # fwd + remat-recompute-fwd + 2×fwd-equivalent for backward matmuls
         flops = 4.0 * fwd
         model = 6.0 * N_act * B * S
@@ -88,9 +92,16 @@ def cell_cost(cfg: ModelConfig, shape: ShapeSpec, accum: int = 1) -> CellCost:
         return CellCost(flops, model, hbm, f"remat×4fwd, accum={accum}")
 
     if shape.kind == "prefill":
-        fwd = _param_flops(cfg, N_act, B, S) + _attn_flops_fwd(cfg, B, S) + _ssm_flops_fwd(cfg, B, S)
+        fwd = (
+            _param_flops(cfg, N_act, B, S)
+            + _attn_flops_fwd(cfg, B, S)
+            + _ssm_flops_fwd(cfg, B, S)
+        )
         model = 2.0 * N_act * B * S
-        hbm = cfg.param_count() * dtype_bytes + 2 * B * S * cfg.d_model * dtype_bytes * cfg.n_layers
+        hbm = (
+            cfg.param_count() * dtype_bytes
+            + 2 * B * S * cfg.d_model * dtype_bytes * cfg.n_layers
+        )
         return CellCost(fwd, model, hbm, "single fwd")
 
     # decode: one token; context = S

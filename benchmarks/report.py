@@ -77,13 +77,50 @@ def main():
     print("\n## §Roofline multi-pod (auto-generated)\n")
     print(roofline_table("multi"))
     for name, cols in [
-        ("table2_graphs", ["name", "vertices", "edges", "avg_in_degree", "locality_fraction"]),
-        ("table1_rounds", ["graph", "mode", "rounds", "avg_round_time_s", "flushes", "flush_bytes"]),
-        ("fig2_pr_speedup", ["graph", "mode", "rounds", "wall_speedup_vs_sync", "modeled_speedup_vs_sync"]),
-        ("fig34_scaling", ["graph", "P", "rounds_sync", "rounds_async", "best_delta_modeled", "locality"]),
+        (
+            "table2_graphs",
+            ["name", "vertices", "edges", "avg_in_degree", "locality_fraction"],
+        ),
+        (
+            "table1_rounds",
+            ["graph", "mode", "rounds", "avg_round_time_s", "flushes", "flush_bytes"],
+        ),
+        (
+            "fig2_pr_speedup",
+            [
+                "graph",
+                "mode",
+                "rounds",
+                "wall_speedup_vs_sync",
+                "modeled_speedup_vs_sync",
+            ],
+        ),
+        (
+            "fig34_scaling",
+            [
+                "graph",
+                "P",
+                "rounds_sync",
+                "rounds_async",
+                "best_delta_modeled",
+                "locality",
+            ],
+        ),
         ("fig5_access_matrix", ["graph", "locality_fraction", "workers_self_dominant"]),
-        ("fig6_sssp_speedup", ["graph", "mode", "rounds", "wall_speedup_vs_sync", "modeled_speedup_vs_sync"]),
-        ("delta_model_validation", ["graph", "delta", "rounds_measured", "rounds_predicted"]),
+        (
+            "fig6_sssp_speedup",
+            [
+                "graph",
+                "mode",
+                "rounds",
+                "wall_speedup_vs_sync",
+                "modeled_speedup_vs_sync",
+            ],
+        ),
+        (
+            "delta_model_validation",
+            ["graph", "delta", "rounds_measured", "rounds_predicted"],
+        ),
     ]:
         print(f"\n## {name} (auto-generated)\n")
         try:

@@ -37,6 +37,8 @@ __all__ = [
     "make_schedule",
     "round_fn",
     "round_fn_q",
+    "round_fn_pallas",
+    "round_fn_pallas_q",
     "make_solve_fn",
     "make_solve_fn_q",
     "host_loop",
@@ -186,8 +188,43 @@ def round_fn_q(sched: DeviceSchedule, semiring: Semiring, row_update) -> Callabl
     return body
 
 
+def round_fn_pallas(
+    sched: DeviceSchedule, semiring: Semiring, row_update, interpret: bool | None = None
+) -> Callable:
+    """``x_ext -> x_ext``: one round as a single fused Pallas kernel.
+
+    Drop-in for :func:`round_fn` — same schedule, same commit-step order,
+    bit-identical per round — but all ``S`` commit steps execute inside one
+    ``pallas_call`` with the frontier input/output-aliased in VMEM, so the
+    δ-buffer flush never round-trips through HBM between commits (see
+    :mod:`repro.kernels.round_block`).  ``interpret=None`` auto-dispatches:
+    compiled on TPU, interpret-mode emulation elsewhere.
+    """
+    from repro.kernels.round_block import fused_round_fn
+
+    return fused_round_fn(sched, semiring, row_update, interpret=interpret)
+
+
+def round_fn_pallas_q(
+    sched: DeviceSchedule, semiring: Semiring, row_update, interpret: bool | None = None
+) -> Callable:
+    """``(x_ext, q) -> x_ext``: the fused Pallas round with query threading.
+
+    Drop-in for :func:`round_fn_q`; ``q``'s pytree leaves ride along as
+    VMEM-resident kernel inputs, so the returned callable vmaps for
+    :func:`repro.solve.batch.solve_batch` exactly like the XLA round.
+    """
+    from repro.kernels.round_block import fused_round_fn_q
+
+    return fused_round_fn_q(sched, semiring, row_update, interpret=interpret)
+
+
 def make_solve_fn_q(
-    sched: DeviceSchedule, semiring: Semiring, row_update, residual_fn
+    sched: DeviceSchedule,
+    semiring: Semiring,
+    row_update,
+    residual_fn,
+    round_builder: Callable = round_fn_q,
 ) -> Callable:
     """Fused device loop ``(x_ext, q, tol, max_rounds) -> carry``.
 
@@ -195,8 +232,13 @@ def make_solve_fn_q(
     ``max_rounds``, entirely on device (``lax.while_loop``), and returns the
     carry ``(x_ext, residual, rounds, converged)``.  ``tol``/``max_rounds``
     are traced arguments, so changing them never retraces.
+
+    ``round_builder`` swaps the round implementation the loop iterates —
+    :func:`round_fn_q` (the XLA round) or :func:`round_fn_pallas_q` (the
+    fused kernel) — while the convergence/residual/counter semantics stay in
+    this one place.
     """
-    rnd = round_fn_q(sched, semiring, row_update)
+    rnd = round_builder(sched, semiring, row_update)
 
     def solve_loop(x_ext, q, tol, max_rounds):
         def cond(carry):
@@ -221,7 +263,11 @@ def make_solve_fn_q(
 
 
 def make_solve_fn(
-    sched: DeviceSchedule, semiring: Semiring, row_update, residual_fn
+    sched: DeviceSchedule,
+    semiring: Semiring,
+    row_update,
+    residual_fn,
+    round_builder: Callable = round_fn_q,
 ) -> Callable:
     """``(x_ext, tol, max_rounds) -> carry``: query-free fused device loop."""
     fn_q = make_solve_fn_q(
@@ -229,6 +275,7 @@ def make_solve_fn(
         semiring,
         lambda old, red, rows, q: row_update(old, red, rows),
         residual_fn,
+        round_builder=round_builder,
     )
 
     def solve_loop(x_ext, tol, max_rounds):

@@ -1,57 +1,81 @@
-"""Dispatch wrappers: Pallas kernel on TPU, interpret-mode or XLA fallback
-elsewhere.  Public entry points used by the engine and benchmarks."""
+"""Dispatch wrappers and host-side layout builders for the Pallas kernels.
+
+Public entry points used by the engine's ``backend="pallas"`` path
+(:func:`fused_round` ↔ :mod:`repro.kernels.round_block`), tests, and
+benchmarks.  Kernels auto-dispatch on backend: compiled on TPU,
+interpret-mode emulation elsewhere (``interpret=None``); ``use_kernel=False``
+falls back to the pure-jnp oracles in :mod:`repro.kernels.ref`.
+"""
 
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import ref
-from repro.kernels.delayed_block import delayed_block_pagerank
+from repro.kernels.round_block import fused_round_fn, fused_round_fn_q
 from repro.kernels.spmv_ell import spmv_ell
 
 
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
-
-
 def spmv(x_ext, idx, val, semiring: str = "plus_times", use_kernel: bool = True):
-    """Semiring SpMV; Pallas when requested (compiled on TPU, interpreted on
-    CPU), pure-jnp otherwise."""
+    """Semiring SpMV; Pallas when requested (compiled on TPU, interpreted
+    elsewhere), pure-jnp otherwise."""
     if use_kernel:
-        return spmv_ell(x_ext, idx, val, semiring=semiring, interpret=not _on_tpu())
+        return spmv_ell(x_ext, idx, val, semiring=semiring)
     return ref.spmv_ell_ref(x_ext, idx, val, semiring)
 
 
-def delayed_round(x_ext, idx, val, rows, teleport, use_kernel: bool = True):
-    """Fused delayed-async PageRank round for one worker block."""
+def fused_round(
+    x_ext,
+    sched,
+    semiring,
+    row_update,
+    q=None,
+    use_kernel: bool = True,
+    interpret: bool | None = None,
+):
+    """One full engine round (all S commit steps) over ``sched``.
+
+    The kernel path runs :mod:`repro.kernels.round_block`'s single fused
+    ``pallas_call`` (frontier VMEM-resident across commits); the fallback is
+    the engine's XLA round itself — the parity reference.  Pass ``q`` for
+    query-parameterized row updates (``row_update(old, reduced, rows, q)``).
+    """
     if use_kernel:
-        return delayed_block_pagerank(
-            x_ext, idx, val, rows, teleport, interpret=not _on_tpu()
+        if q is None:
+            return fused_round_fn(sched, semiring, row_update, interpret=interpret)(
+                x_ext
+            )
+        return fused_round_fn_q(sched, semiring, row_update, interpret=interpret)(
+            x_ext, q
         )
-    return ref.delayed_block_ref(
-        x_ext, idx, val, rows, teleport, n_chunks=idx.shape[0]
-    )
+    return ref.fused_round_ref(x_ext, sched, semiring, row_update, q)
 
 
 def ell_from_csr(graph, rows_slice=None, lane_pad: int = 128):
     """Build padded ELL (idx, val) from a CSRGraph (host-side, numpy).
 
-    Padding entries point at the dump slot with annihilating values so the
-    kernels need no masks.  ``max_deg`` is padded to a lane multiple.
+    Padding entries gather vertex 0 but carry the semiring's *annihilating*
+    edge value, so they contribute the ⊕-identity and the kernels need no
+    masks.  ``max_deg`` is padded to a lane multiple.
+    Fully vectorized (numpy fancy indexing) — no per-row Python loop, so
+    host-side layout cost stays flat in ``n`` like
+    :func:`repro.graphs.formats.build_stripe_schedule`.
     """
     indptr, indices, values = graph.indptr, graph.indices, graph.values
     n = graph.n
-    rows = np.arange(n) if rows_slice is None else rows_slice
-    degs = indptr[rows + 1] - indptr[rows]
-    max_deg = int(max(degs.max(), 1))
+    rows = np.arange(n) if rows_slice is None else np.asarray(rows_slice)
+    degs = (indptr[rows + 1] - indptr[rows]).astype(np.int64)
+    max_deg = int(max(degs.max() if degs.size else 0, 1))
     max_deg = -(-max_deg // lane_pad) * lane_pad
-    idx = np.zeros((len(rows), max_deg), np.int32)
     pad_val = np.float32(0.0) if values.dtype.kind == "f" else np.int32(2**30 - 1)
-    val = np.full((len(rows), max_deg), pad_val, values.dtype)
-    for i, r in enumerate(rows):
-        e0, e1 = indptr[r], indptr[r + 1]
-        idx[i, : e1 - e0] = indices[e0:e1]
-        val[i, : e1 - e0] = values[e0:e1]
+    if graph.nnz == 0:
+        idx = np.zeros((len(rows), max_deg), np.int32)
+        val = np.full((len(rows), max_deg), pad_val, values.dtype)
+        return idx, val
+    # edge slot (r, j) holds the row's j-th in-edge; mask kills the overhang
+    offs = np.arange(max_deg, dtype=np.int64)[None, :]
+    mask = offs < degs[:, None]
+    pos = np.minimum(indptr[rows][:, None] + offs, graph.nnz - 1)
+    idx = np.where(mask, indices[pos], 0).astype(np.int32)
+    val = np.where(mask, values[pos], pad_val).astype(values.dtype)
     return idx, val

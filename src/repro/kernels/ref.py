@@ -2,7 +2,6 @@
 
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 
@@ -24,17 +23,15 @@ def spmv_ell_ref(x_ext, idx, val, semiring: str):
     raise ValueError(semiring)
 
 
-def delayed_block_ref(x_ext, idx, val, rows, teleport, n_chunks, semiring="plus_times"):
-    """Oracle for the fused delayed-async PageRank block kernel.
+def fused_round_ref(x_ext, sched, semiring, row_update, q=None):
+    """Oracle for the fused-round kernel (:mod:`repro.kernels.round_block`).
 
-    Processes ``n_chunks`` δ-chunks sequentially; chunk c reads the frontier
-    *including* all previously committed chunks (block Gauss–Seidel).
-
-    idx/val: (n_chunks, delta, max_deg); rows: (n_chunks, delta) int32 row
-    ids (dump = len(x_ext) - 1).
+    The kernel's contract is literally "the engine's round, in one kernel" —
+    so the oracle IS the engine's XLA round (:func:`repro.core.engine.
+    round_fn`), not a third copy of the commit-step math.
     """
-    for c in range(n_chunks):
-        red = spmv_ell_ref(x_ext, idx[c], val[c], semiring)
-        new = teleport + red
-        x_ext = x_ext.at[rows[c]].set(new.astype(x_ext.dtype), mode="drop")
-    return x_ext
+    from repro.core.engine import round_fn, round_fn_q
+
+    if q is None:
+        return round_fn(sched, semiring, row_update)(x_ext)
+    return round_fn_q(sched, semiring, row_update)(x_ext, q)

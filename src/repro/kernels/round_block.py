@@ -1,0 +1,197 @@
+"""Pallas TPU kernel: one full engine round (all S commit steps) fused.
+
+This is the production realisation of the paper's thread-local delay buffer:
+the extended frontier ``x_ext`` is input/output-aliased in VMEM and every
+commit step reads the values committed by the steps before it — chunk compute,
+δ-buffer, and flush never leave the chip.  HBM sees each edge stripe exactly
+once and the frontier exactly twice (one read in, one write out) per round,
+where the XLA round (:func:`repro.core.engine.round_fn`) round-trips the
+frontier through HBM on every one of the ``S`` commit steps.
+
+Generalises the retired ``delayed_block.py`` (hardcoded ⊕=+/⊗=× and
+PageRank's row update) to the full ``Semiring`` × ``row_update`` family, and
+is driven directly by the engine's ``(S, P, M)`` stripe layout — the same
+:class:`repro.core.engine.DeviceSchedule` arrays the XLA round consumes, so
+``backend="pallas"`` needs no second schedule build:
+
+* grid = ``(S,)`` with ``dimension_semantics=("arbitrary",)`` — commit steps
+  execute sequentially, so step ``s`` reads steps ``< s``'s commits (block
+  Gauss–Seidel, exactly :func:`repro.core.engine._commit_step`'s order);
+* per step the BlockSpecs stage that step's ``(P, M)`` edge stripe through
+  VMEM while the frontier and any row-update constants stay VMEM-resident
+  (index_map → 0 for the whole grid);
+* the kernel body runs the *same* semiring ops as the XLA commit step
+  (⊗, per-worker segment-⊕, ``row_update``, publish scatter), which is what
+  makes the parity bar bit-identical rather than merely allclose.
+
+``row_update`` is an arbitrary callable and may close over device arrays
+(Jacobi's ``b/diag`` table, a PPR teleport vector).  Pallas kernels cannot
+capture traced constants, so the builder traces ``row_update`` to a jaxpr
+once, hoists its closure constants into explicit kernel inputs, and
+re-evaluates the jaxpr inside the kernel — any engine-compatible row update
+runs unmodified.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.semiring import Semiring
+
+__all__ = ["fused_round_fn", "fused_round_fn_q", "resolve_interpret"]
+
+# Version portability (same spirit as repro.dist.compat): the typed
+# compiler-params class is CompilerParams on current jax, TPUCompilerParams
+# on 0.4.x; eval_jaxpr lives in jax.core on 0.4.x and jax.extend.core later.
+_COMPILER_PARAMS_CLS = getattr(
+    pltpu, "CompilerParams", getattr(pltpu, "TPUCompilerParams", None)
+)
+
+try:  # pragma: no cover - depends on installed jax
+    from jax.extend.core import eval_jaxpr as _eval_jaxpr
+except ImportError:
+    from jax.core import eval_jaxpr as _eval_jaxpr
+
+
+def _sequential_grid_params() -> dict:
+    """``compiler_params`` pinning the grid sequential (commit order) on TPU."""
+    if _COMPILER_PARAMS_CLS is not None:
+        return {
+            "compiler_params": _COMPILER_PARAMS_CLS(
+                dimension_semantics=("arbitrary",)
+            )
+        }
+    return {"compiler_params": dict(mosaic=dict(dimension_semantics=("arbitrary",)))}
+
+
+def resolve_interpret(interpret: bool | None) -> bool:
+    """``None`` → compiled on TPU, interpret-mode emulation elsewhere.
+
+    Explicit ``True``/``False`` is honoured as given (validation runs force
+    interpretation; TPU unit tests may force compilation).
+    """
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return interpret
+
+
+def _full_spec(shape: tuple) -> pl.BlockSpec:
+    """A BlockSpec pinning the whole array VMEM-resident for every grid step."""
+    return pl.BlockSpec(shape, lambda s, _nd=len(shape): (0,) * _nd)
+
+
+def _at_least_1d(leaf):
+    arr = jnp.asarray(leaf)
+    return arr.reshape((1,)) if arr.ndim == 0 else arr
+
+
+def _trace_row_update(row_update_q, semiring: Semiring, P, delta, q_avals):
+    """Trace ``row_update(old, reduced, rows, q)`` and hoist its constants."""
+    closed = jax.make_jaxpr(row_update_q)(
+        jax.ShapeDtypeStruct((P, delta), semiring.dtype),
+        jax.ShapeDtypeStruct((P, delta), semiring.dtype),
+        jax.ShapeDtypeStruct((P, delta), np.int32),
+        *q_avals,
+    )
+    consts = [jnp.asarray(c) for c in closed.consts]
+    return closed.jaxpr, consts
+
+
+def fused_round_fn_q(
+    sched, semiring: Semiring, row_update, *, interpret: bool | None = None
+):
+    """Return ``(x_ext, q) -> x_ext`` running one full round in one kernel.
+
+    Drop-in for :func:`repro.core.engine.round_fn_q`: same schedule, same
+    ``row_update(old, reduced, rows, q)`` contract, bit-identical per round
+    (the kernel body applies the identical semiring ops in the identical
+    order).  ``q`` is a per-query pytree whose leaves ride along as
+    VMEM-resident kernel inputs, so the returned callable vmaps for
+    :func:`repro.solve.batch.solve_batch` and iterates inside
+    ``lax.while_loop`` for the fused solve path.
+    """
+    S, P, M, delta = sched.S, sched.P, sched.M, sched.delta
+    n_slots = sched.n_slots
+    interp = resolve_interpret(interpret)
+
+    def rnd(x_ext, q):
+        q_leaves, q_tree = jax.tree_util.tree_flatten(q)
+        q_avals = [
+            jax.ShapeDtypeStruct(jnp.shape(leaf), jnp.result_type(leaf))
+            for leaf in q_leaves
+        ]
+
+        def row_update_flat(old, reduced, rows, *leaves):
+            return row_update(
+                old, reduced, rows, jax.tree_util.tree_unflatten(q_tree, leaves)
+            )
+
+        jaxpr, consts = _trace_row_update(row_update_flat, semiring, P, delta, q_avals)
+        c_shapes = [c.shape for c in consts]
+        c_in = [_at_least_1d(c) for c in consts]
+        q_in = [_at_least_1d(leaf) for leaf in q_leaves]
+        n_consts, n_q = len(c_in), len(q_in)
+
+        def kernel(*refs):
+            # refs = (src, val, dst, rows, *consts, *q, x_in, x_out); x_in is
+            # the alias donor — x_ref below is the persistent VMEM frontier.
+            src_ref, val_ref, dst_ref, rows_ref = refs[:4]
+            c_refs = refs[4 : 4 + n_consts]
+            q_refs = refs[4 + n_consts : 4 + n_consts + n_q]
+            x_ref = refs[-1]
+            src = src_ref[0]  # (P, M) — this commit step's edge stripe
+            val = val_ref[0]
+            dst = dst_ref[0]
+            rows = rows_ref[0]  # (P, delta)
+            x = x_ref[...]  # reads every prior step's commits
+            contrib = semiring.mul(x[src], val)
+            # Per-worker segment-⊕ into δ + 1 slots (last = padding dump).
+            seg = dst + (jnp.arange(P, dtype=jnp.int32) * (delta + 1))[:, None]
+            reduced = semiring.segment_reduce(
+                contrib.reshape(-1), seg.reshape(-1), P * (delta + 1)
+            ).reshape(P, delta + 1)[:, :delta]
+            old = x[rows]
+            c_vals = [c[...].reshape(shape) for c, shape in zip(c_refs, c_shapes)]
+            leaves = [r[...].reshape(a.shape) for r, a in zip(q_refs, q_avals)]
+            (new,) = _eval_jaxpr(jaxpr, c_vals, old, reduced, rows, *leaves)
+            # The flush: commit this step's chunks into the VMEM frontier.
+            x_ref[rows.reshape(-1)] = new.reshape(-1).astype(x_ref.dtype)
+
+        stripe = [
+            pl.BlockSpec((1, P, M), lambda s: (s, 0, 0)),
+            pl.BlockSpec((1, P, M), lambda s: (s, 0, 0)),
+            pl.BlockSpec((1, P, M), lambda s: (s, 0, 0)),
+            pl.BlockSpec((1, P, delta), lambda s: (s, 0, 0)),
+        ]
+        resident = [_full_spec(a.shape) for a in (*c_in, *q_in)]
+        return pl.pallas_call(
+            kernel,
+            grid=(S,),
+            in_specs=stripe + resident + [_full_spec((n_slots,))],
+            out_specs=_full_spec((n_slots,)),
+            out_shape=jax.ShapeDtypeStruct((n_slots,), semiring.dtype),
+            # x_ext in ↔ out: commits stay visible across sequential steps
+            input_output_aliases={4 + n_consts + n_q: 0},
+            interpret=interp,
+            **_sequential_grid_params(),
+        )(sched.src, sched.val, sched.dst_local, sched.rows, *c_in, *q_in, x_ext)
+
+    return rnd
+
+
+def fused_round_fn(
+    sched, semiring: Semiring, row_update, *, interpret: bool | None = None
+):
+    """Return ``x_ext -> x_ext``: the query-free fused round (one kernel)."""
+    fn_q = fused_round_fn_q(
+        sched,
+        semiring,
+        lambda old, reduced, rows, q: row_update(old, reduced, rows),
+        interpret=interpret,
+    )
+    dummy = jnp.zeros((), jnp.int32)
+    return lambda x_ext: fn_q(x_ext, dummy)

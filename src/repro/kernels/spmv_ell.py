@@ -27,6 +27,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.core.semiring import INT_INF
+from repro.kernels.round_block import resolve_interpret
 
 DEFAULT_ROW_TILE = 256
 
@@ -57,13 +58,14 @@ def spmv_ell(
     *,
     semiring: str = "plus_times",
     row_tile: int = DEFAULT_ROW_TILE,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ):
     """rows = ⊕_j x_ext[idx[r, j]] ⊗ val[r, j] via pl.pallas_call.
 
-    ``interpret=True`` executes the kernel body on CPU (validation mode);
-    on TPU pass ``interpret=False``.
+    ``interpret=None`` (the default) auto-dispatches: compiled on TPU,
+    interpret-mode emulation elsewhere.  Pass ``True``/``False`` to force.
     """
+    interpret = resolve_interpret(interpret)
     rows, max_deg = idx.shape
     row_tile = min(row_tile, rows)
     assert rows % row_tile == 0, (rows, row_tile)

@@ -48,11 +48,14 @@ class GraphService:
     (``d / outdeg``), so one value covers both the link-follow mass and the
     teleport mass of every PPR query.
 
-    ``backend="sharded"`` serves every batch through the ``shard_map``
-    engine spanning the worker mesh (``frontier="halo"`` keeps the frontier
-    sharded with halo-exchange commits — graphs larger than one device);
-    ``compact_every`` shrinks each batch to its unconverged queries every
-    that many rounds so one straggler query stops taxing the whole batch.
+    ``backend="pallas"`` serves every batch through the fused one-kernel
+    round (frontier VMEM-resident across all commit steps — the lowest
+    frontier HBM traffic on a single device); ``backend="sharded"`` serves
+    through the ``shard_map`` engine spanning the worker mesh
+    (``frontier="halo"`` keeps the frontier sharded with halo-exchange
+    commits — graphs larger than one device); ``compact_every`` shrinks each
+    batch to its unconverged queries every that many rounds so one straggler
+    query stops taxing the whole batch.
     """
 
     def __init__(
@@ -147,7 +150,7 @@ def main(argv=None) -> dict:
     ap.add_argument("--repeats", type=int, default=3, help="batches per algo")
     ap.add_argument("--min-chunk", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--backend", choices=["jit", "sharded"], default="jit")
+    ap.add_argument("--backend", choices=["jit", "pallas", "sharded"], default="jit")
     ap.add_argument("--frontier", choices=["replicated", "halo"], default="replicated")
     ap.add_argument(
         "--compact-every",

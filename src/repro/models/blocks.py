@@ -105,7 +105,9 @@ def _quant_i8(x):
     return q.astype(jnp.int8), scale
 
 
-def apply_attn_layer_decode(p, cfg: ModelConfig, x, angles, cache, cur_len, *, window=0):
+def apply_attn_layer_decode(
+    p, cfg: ModelConfig, x, angles, cache, cur_len, *, window=0
+):
     """Decode path: x (B,1,d); cache = (k_cache, v_cache) (B,S,Hkv,hd) or the
     int8-quantized 4-tuple (k_i8, v_i8, k_scale, v_scale)."""
     B, _, d = x.shape
@@ -380,7 +382,9 @@ def _moe_shardmap(p, cfg: ModelConfig, x, mesh):
             out_buf = _expert_ffn(p_loc, cfg, buf[:, :C_e]).astype(x_loc.dtype)
             out_r = jnp.zeros((R, d), x_loc.dtype)
             out_r = out_r.at[order2].set(
-                out_buf[eid[order2].clip(0, E_loc - 1) * keep2, jnp.minimum(slot2, C_e - 1)]
+                out_buf[
+                    eid[order2].clip(0, E_loc - 1) * keep2, jnp.minimum(slot2, C_e - 1)
+                ]
                 * keep2[:, None]
             )
             back = jax.lax.all_to_all(
@@ -400,7 +404,11 @@ def _moe_shardmap(p, cfg: ModelConfig, x, mesh):
             my_rank = jax.lax.axis_index("model")
             local = (flat_e // E_loc) == my_rank
             eid = jnp.where(local, flat_e % E_loc, E_loc).astype(jnp.int32)
-            C_e = max(8, -(-int(np.ceil(N * k * cfg.capacity_factor / max(E, 1) * E_loc)) // 8) * 8)
+            C_e = max(
+                8,
+                -(-int(np.ceil(N * k * cfg.capacity_factor / max(E, 1) * E_loc)) // 8)
+                * 8,
+            )
             order2, _, slot2, keep2 = _pack_by_group(eid, E_loc, C_e)
             token_of2 = order2 // k
             buf = jnp.zeros((E_loc, C_e + 1, d), x_loc.dtype)

@@ -101,7 +101,9 @@ def _attend_tile(q, k, v, mask, scale):
     m = jnp.max(logits, axis=-1)  # (B,H,G,q)
     p = jnp.exp(logits - m[..., None])
     l = jnp.sum(p, axis=-1)  # (B,H,G,q)
-    pv = jnp.einsum("bhgqk,bkhd->bhgqd", p.astype(v.dtype), v, preferred_element_type=F32)
+    pv = jnp.einsum(
+        "bhgqk,bkhd->bhgqd", p.astype(v.dtype), v, preferred_element_type=F32
+    )
     return m, l, pv
 
 
@@ -178,7 +180,9 @@ def flash_attention(
                 def visit(carry):
                     kc = jax.lax.dynamic_index_in_dim(kr, ki, 1, keepdims=False)
                     vc = jax.lax.dynamic_index_in_dim(vr, ki, 1, keepdims=False)
-                    tile = _attend_tile(qc, kc, vc, tile_mask(qi, ki)[None, None, None], scale)
+                    tile = _attend_tile(
+                        qc, kc, vc, tile_mask(qi, ki)[None, None, None], scale
+                    )
                     return combine(carry, tile)
 
                 # live iff this tile intersects the causal band
@@ -199,7 +203,9 @@ def flash_attention(
             def kv_step(carry, ki):
                 kc = jax.lax.dynamic_index_in_dim(kr, ki, 1, keepdims=False)
                 vc = jax.lax.dynamic_index_in_dim(vr, ki, 1, keepdims=False)
-                tile = _attend_tile(qc, kc, vc, tile_mask(qi, ki)[None, None, None], scale)
+                tile = _attend_tile(
+                    qc, kc, vc, tile_mask(qi, ki)[None, None, None], scale
+                )
                 return combine(carry, tile), None
 
             init = (
@@ -278,8 +284,12 @@ def seq_parallel_decode_attention(
             vc = vc.at[bidx, safe].set(
                 jnp.where(in_range[:, None, None], vnq, vc[bidx, safe])
             )
-            ksc = ksc.at[bidx, safe].set(jnp.where(in_range[:, None], kns, ksc[bidx, safe]))
-            vsc = vsc.at[bidx, safe].set(jnp.where(in_range[:, None], vns, vsc[bidx, safe]))
+            ksc = ksc.at[bidx, safe].set(
+                jnp.where(in_range[:, None], kns, ksc[bidx, safe])
+            )
+            vsc = vsc.at[bidx, safe].set(
+                jnp.where(in_range[:, None], vns, vsc[bidx, safe])
+            )
             k_use = kc.astype(F32) * ksc[..., None]
             v_use = vc.astype(F32) * vsc[..., None]
         else:

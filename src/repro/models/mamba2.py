@@ -162,7 +162,9 @@ def apply_ssm_layer(p, cfg: ModelConfig, x, *, state=None, conv_state=None):
     xs = xs.reshape(B, S, H, Pd)
 
     if not decode:
-        y, s_final = ssd_forward(xs.astype(F32), dt, A, Bm.astype(F32), Cm.astype(F32), cfg.ssm_chunk)
+        y, s_final = ssd_forward(
+            xs.astype(F32), dt, A, Bm.astype(F32), Cm.astype(F32), cfg.ssm_chunk
+        )
     else:
         # recurrent step: h' = h·exp(dt A) + dt·B xᵀ ; y = C·h' + D x
         dA = jnp.exp(dt[:, 0] * A)  # (B,H)

@@ -31,7 +31,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.engine import round_fn_q
+from repro.core.engine import round_fn_pallas_q, round_fn_q
 
 __all__ = ["BatchResult", "solve_batch"]
 
@@ -58,10 +58,13 @@ class BatchResult:
 def _batched_round(solver, sched, backend: str, frontier: str):
     """Build ``(X_ext, qb) -> X_ext`` running one round for all Q queries."""
     sr = solver.problem.semiring
-    if backend == "jit":
-        return jax.vmap(round_fn_q(sched, sr, solver._row_update_q), in_axes=(0, 0))
+    if backend in ("jit", "pallas"):
+        builder = round_fn_q if backend == "jit" else round_fn_pallas_q
+        return jax.vmap(builder(sched, sr, solver._row_update_q), in_axes=(0, 0))
     if backend != "sharded":
-        raise ValueError(f"batch backend must be 'jit' or 'sharded': {backend!r}")
+        raise ValueError(
+            f"batch backend must be 'jit', 'pallas', or 'sharded': {backend!r}"
+        )
     mesh = solver._default_mesh()
     if frontier == "replicated":
         from repro.dist.engine_sharded import sharded_round_fn_q
@@ -131,9 +134,11 @@ def solve_batch(
     * ``x0_batch``      — (Q, n) initial states (e.g. :func:`multi_source_x0`).
     * ``q``             — for query problems, a pytree whose leaves have a
       leading Q axis (e.g. :func:`ppr_teleport`); must be ``None`` otherwise.
-    * ``backend``       — ``"jit"`` (default: vmapped single-device round) or
-      ``"sharded"`` (vmapped ``shard_map`` round spanning the worker mesh);
-      ``frontier`` picks replicated vs halo for the sharded round.
+    * ``backend``       — ``"jit"`` (default: vmapped single-device round),
+      ``"pallas"`` (vmapped fused one-kernel round — the whole batch shares
+      the VMEM-resident commit pipeline), or ``"sharded"`` (vmapped
+      ``shard_map`` round spanning the worker mesh); ``frontier`` picks
+      replicated vs halo for the sharded round.
     * ``compact_every`` — shrink the active batch to the unconverged subset
       every this many rounds (straggler-aware batching); ``None`` runs one
       fused loop until the slowest query converges, bit-for-bit as before.
@@ -147,7 +152,7 @@ def solve_batch(
     problem = solver.problem
     sr = problem.semiring
     backend = backend or (
-        solver.default_backend if solver.default_backend == "sharded" else "jit"
+        solver.default_backend if solver.default_backend != "host" else "jit"
     )
     frontier = solver.resolve_frontier(frontier, backend)
     sched = solver.schedule(delta)

@@ -12,11 +12,14 @@ A solver binds ``(graph, problem, n_workers)`` and owns two caches:
 the sync/async round counts and asks the analytic δ cost model
 (:mod:`repro.core.delta_model`) for δ*.  ``backend`` selects host-driven
 rounds (instrumented, per-round residuals), the fused ``lax.while_loop``
-device path, or the ``shard_map`` multi-device engine from
-:mod:`repro.dist.engine_sharded`; for the sharded backend ``frontier``
-selects between the replicated frontier (exactness-first, O(P·δ) wire per
-commit) and the owner-computes sharded frontier with halo exchange
-(O(boundary) wire, graphs larger than one device).
+device path (``"jit"`` iterates the XLA round; ``"pallas"`` iterates the
+one-kernel fused round from :mod:`repro.kernels.round_block`, which keeps
+the frontier VMEM-resident across all S commit steps), or the ``shard_map``
+multi-device engine from :mod:`repro.dist.engine_sharded`; for the sharded
+backend ``frontier`` selects between the replicated frontier
+(exactness-first, O(P·δ) wire per commit) and the owner-computes sharded
+frontier with halo exchange (O(boundary) wire, graphs larger than one
+device).
 """
 
 from __future__ import annotations
@@ -38,6 +41,7 @@ from repro.core.engine import (
     host_loop,
     make_schedule,
     make_solve_fn_q,
+    round_fn_pallas_q,
     round_fn_q,
 )
 from repro.graphs.formats import CSRGraph
@@ -46,8 +50,13 @@ from repro.solve.problem import Problem
 
 __all__ = ["Solver", "BACKENDS", "FRONTIERS", "resolve_legacy_args"]
 
-BACKENDS = ("host", "jit", "sharded")
+BACKENDS = ("host", "jit", "pallas", "sharded")
 FRONTIERS = ("replicated", "halo")
+
+# Round builders for the two fused-loop backends: same while-loop, same
+# convergence/residual/counter semantics — only the round implementation
+# differs (XLA commit steps vs the one-kernel VMEM-resident round).
+_FUSED_ROUND_BUILDERS = {"jit": round_fn_q, "pallas": round_fn_pallas_q}
 
 _NO_QUERY = np.zeros((), dtype=np.int32)  # dummy q for query-free problems
 
@@ -58,7 +67,7 @@ def resolve_legacy_args(mode, delta, host_loop, backend):
     The old API scattered the paper's one tunable across ``mode`` + ``delta``
     and named the execution path with a boolean.  New code passes
     ``delta ∈ {"sync", "async", "auto", int}`` and
-    ``backend ∈ {"host", "jit", "sharded"}`` directly.
+    ``backend ∈ {"host", "jit", "pallas", "sharded"}`` directly.
     """
     if mode is not None:
         warnings.warn(
@@ -77,7 +86,8 @@ def resolve_legacy_args(mode, delta, host_loop, backend):
             raise ValueError(f"unknown mode {mode!r}")
     if host_loop is not None:
         warnings.warn(
-            "host_loop= is deprecated; pass backend='host' | 'jit' | 'sharded'",
+            "host_loop= is deprecated; "
+            "pass backend='host' | 'jit' | 'pallas' | 'sharded'",
             DeprecationWarning,
             stacklevel=3,
         )
@@ -361,19 +371,26 @@ class Solver:
         x_ext = self._x_ext(x0)
         q = self.resolve_query(q)
         self.stats["solves"] += 1
-        if backend == "jit":
-            return self._solve_jit(sched, x_ext, q, tol, max_rounds)
+        if backend in _FUSED_ROUND_BUILDERS:
+            return self._solve_fused(backend, sched, x_ext, q, tol, max_rounds)
         if backend == "host":
             rnd = self._compiled_round(sched, x_ext, q, "host")
         else:
             rnd = self._compiled_round(sched, x_ext, q, "sharded", frontier)
         return self._host_loop(sched, rnd, x_ext, tol, max_rounds)
 
-    def _solve_jit(self, sched, x_ext, q, tol, max_rounds) -> EngineResult:
+    def _solve_fused(self, backend, sched, x_ext, q, tol, max_rounds) -> EngineResult:
+        """The fused ``lax.while_loop`` path: ``backend ∈ {"jit", "pallas"}``."""
         sr = self.problem.semiring
         fn = self.compile_cached(
-            ("jit", sched.delta),
-            make_solve_fn_q(sched, sr, self._row_update_q, self.problem.residual),
+            (backend, sched.delta),
+            make_solve_fn_q(
+                sched,
+                sr,
+                self._row_update_q,
+                self.problem.residual,
+                round_builder=_FUSED_ROUND_BUILDERS[backend],
+            ),
             x_ext,
             q,
             jnp.asarray(tol, jnp.float32),
@@ -391,18 +408,21 @@ class Solver:
         )
 
     def _compiled_round(self, sched, x_ext, q, backend, frontier="replicated"):
-        """Cached compiled one-round ``x_ext -> x_ext`` for host/sharded."""
+        """Cached compiled one-round ``x_ext -> x_ext`` for host/pallas/sharded."""
         sr = self.problem.semiring
-        if backend == "host":
+        if backend in ("host", "pallas"):
+            builder = round_fn_q if backend == "host" else round_fn_pallas_q
             rnd = self.compile_cached(
-                ("host", sched.delta),
-                round_fn_q(sched, sr, self._row_update_q),
+                (backend, "round", sched.delta),
+                builder(sched, sr, self._row_update_q),
                 x_ext,
                 q,
             )
             return lambda x: rnd(x, q)
         if backend != "sharded":
-            raise ValueError(f"round backend must be 'host' or 'sharded': {backend!r}")
+            raise ValueError(
+                f"round backend must be 'host', 'pallas', or 'sharded': {backend!r}"
+            )
         mesh = self._default_mesh()
         if frontier == "replicated":
             from repro.dist.engine_sharded import sharded_round_fn_q
@@ -488,9 +508,10 @@ class Solver:
     ):
         """The cached compiled one-round ``x_ext -> x_ext`` (tests/benchmarks).
 
-        ``backend`` is ``"host"`` (the single-device jitted round — also what
-        the jit backend's fused loop iterates) or ``"sharded"``; for the
-        sharded backend ``frontier`` picks replicated vs halo.
+        ``backend`` is ``"host"`` (the single-device XLA round — also what
+        the jit backend's fused loop iterates), ``"pallas"`` (the fused
+        one-kernel round the pallas backend iterates), or ``"sharded"``; for
+        the sharded backend ``frontier`` picks replicated vs halo.
         """
         frontier = self.resolve_frontier(frontier, backend)
         sched = self.schedule(delta)

@@ -97,9 +97,13 @@ class AdamW:
         grads, gnorm = clip_by_global_norm(grads, self.clip_norm)
         lr = self.schedule(step)
         b1, b2 = self.b1, self.b2
-        m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(F32), state["m"], grads)
+        m = jax.tree.map(
+            lambda m, g: b1 * m + (1 - b1) * g.astype(F32), state["m"], grads
+        )
         v = jax.tree.map(
-            lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(F32)), state["v"], grads
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(F32)),
+            state["v"],
+            grads,
         )
         bc1 = 1 - b1**step.astype(F32)
         bc2 = 1 - b2**step.astype(F32)
@@ -110,7 +114,11 @@ class AdamW:
             return (p.astype(F32) - lr * (u + wd)).astype(p.dtype)
 
         new_params = jax.tree.map(upd, params, m, v)
-        return new_params, {"m": m, "v": v, "step": step}, {"lr": lr, "grad_norm": gnorm}
+        return (
+            new_params,
+            {"m": m, "v": v, "step": step},
+            {"lr": lr, "grad_norm": gnorm},
+        )
 
 
 # --------------------------------------------------------------------------- #
@@ -192,7 +200,9 @@ class Adafactor:
                 denom = jnp.sqrt(
                     vr[..., None]
                     * vc[..., None, :]
-                    / jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True)[..., None], self.eps)
+                    / jnp.maximum(
+                        jnp.mean(vr, axis=-1, keepdims=True)[..., None], self.eps
+                    )
                     + self.eps
                 )
                 u = g / denom

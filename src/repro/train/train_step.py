@@ -84,7 +84,9 @@ def make_train_step(cfg: ModelConfig, optimizer, accum_steps: int = 1,
             grads = constrain(grads)
         else:
             micro = jax.tree.map(
-                lambda x: x.reshape((accum_steps, x.shape[0] // accum_steps) + x.shape[1:]),
+                lambda x: x.reshape(
+                    (accum_steps, x.shape[0] // accum_steps) + x.shape[1:]
+                ),
                 batch,
             )
 

@@ -23,7 +23,9 @@ KEY = jax.random.PRNGKey(0)
 def make_batch(cfg, B=2, S=32, with_labels=True):
     batch = {}
     if cfg.family == "vlm":
-        batch["embeds"] = jax.random.normal(KEY, (B, S, cfg.d_model), jnp.dtype(cfg.dtype))
+        batch["embeds"] = jax.random.normal(
+            KEY, (B, S, cfg.d_model), jnp.dtype(cfg.dtype)
+        )
     else:
         batch["tokens"] = jax.random.randint(KEY, (B, S), 0, cfg.vocab)
     if cfg.family == "encdec":
@@ -46,7 +48,10 @@ class TestArchSmoke:
         )(params)
         assert jnp.isfinite(loss)
         assert np.isfinite(
-            sum(float(jnp.sum(jnp.square(g.astype(jnp.float32)))) for g in jax.tree.leaves(grads))
+            sum(
+                float(jnp.sum(jnp.square(g.astype(jnp.float32))))
+                for g in jax.tree.leaves(grads)
+            )
         )
         # loss starts near ln(vocab) for random init
         assert abs(float(loss) - np.log(cfg.vocab)) < 2.0
@@ -101,7 +106,9 @@ def test_decode_matches_full_forward(arch):
     _, cache = prefill(params, cfg, b_pre)
     cache = pad_cache(cfg, cache, S + 8)
     lg_dec, _ = decode_step(params, cfg, cache, tok)
-    rel = float(jnp.abs(lg_full - lg_dec).max()) / max(float(jnp.abs(lg_full).max()), 1e-6)
+    rel = float(jnp.abs(lg_full - lg_dec).max()) / max(
+        float(jnp.abs(lg_full).max()), 1e-6
+    )
     assert rel < 1e-4
 
 

@@ -1,0 +1,338 @@
+"""backend="pallas": the fused one-kernel round in the production hot path.
+
+Acceptance coverage for the Pallas fused-round backend:
+
+* ``Solver(backend="pallas")`` is bit-identical to ``backend="jit"`` for
+  pagerank / sssp / cc / jacobi, in every discipline (sync / async /
+  delayed) — fixed point AND per round (the house parity bar: the kernel
+  runs the same semiring ops in the same commit-step order, interpret mode
+  on CPU CI);
+* query-parameterized PPR runs on the kernel, unbatched and batched
+  (``solve_batch(backend="pallas")`` vmaps the fused round);
+* a hypothesis property test drives random graphs × P × δ × semiring
+  through the fused round against the engine's XLA reference round
+  (mirroring ``tests/test_frontier_sharded.py``);
+* the solver caches pallas executables under their own key — switching
+  backends never recompiles the other, and a second solve is warm.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.algorithms.jacobi import jacobi_graph
+from repro.core.engine import (
+    make_schedule,
+    round_fn,
+    round_fn_pallas,
+    round_fn_pallas_q,
+)
+from repro.core.semiring import INT_INF, MIN_PLUS, PLUS_TIMES
+from repro.graphs.formats import CSRGraph
+from repro.graphs.generators import make_graph
+from repro.solve import (
+    Solver,
+    cc_problem,
+    jacobi_problem,
+    multi_source_x0,
+    pagerank_problem,
+    ppr_problem,
+    ppr_teleport,
+    solve_batch,
+    sssp_problem,
+)
+
+N_WORKERS = 8
+
+GRAPH_PR = make_graph("twitter", scale=9, efactor=8, kind="pagerank")
+GRAPH_S = make_graph("kron", scale=8, efactor=8, kind="sssp")
+GRAPH_U = make_graph("road", scale=8, kind="unit")
+
+
+def _jacobi_case():
+    rng = np.random.default_rng(0)
+    n = 256
+    rows = np.repeat(np.arange(n), 4)
+    cols = (rows + rng.integers(1, n, rows.shape[0])) % n
+    vals = rng.normal(size=rows.shape[0]).astype(np.float32) * 0.1
+    diag = np.full(n, 4.0, np.float32)
+    b = rng.normal(size=n).astype(np.float32)
+    return jacobi_graph(n, rows, cols, vals, diag), jacobi_problem(diag, b)
+
+
+CASES = {
+    "pagerank": lambda: (GRAPH_PR, pagerank_problem()),
+    "sssp": lambda: (GRAPH_S, sssp_problem()),
+    "cc": lambda: (GRAPH_U, cc_problem()),
+    "jacobi": _jacobi_case,
+}
+
+# The paper's three disciplines, as Solver δ arguments.
+MODES = {"sync": "sync", "async": "async", "delayed": 48}
+
+
+class TestFourProblemParity:
+    @pytest.mark.parametrize("mode", sorted(MODES))
+    @pytest.mark.parametrize("name", sorted(CASES))
+    def test_fixed_point_bit_identical_to_jit(self, name, mode):
+        graph, problem = CASES[name]()
+        solver = Solver(
+            graph, problem, n_workers=N_WORKERS, delta=MODES[mode], min_chunk=16
+        )
+        r_jit = solver.solve(backend="jit")
+        r_pal = solver.solve(backend="pallas")
+        assert r_pal.rounds == r_jit.rounds
+        assert r_pal.converged == r_jit.converged
+        np.testing.assert_array_equal(r_pal.x, r_jit.x)
+
+    @pytest.mark.parametrize("name", sorted(CASES))
+    def test_per_round_bit_identical(self, name):
+        graph, problem = CASES[name]()
+        solver = Solver(graph, problem, n_workers=N_WORKERS, delta=48, min_chunk=16)
+        rnd_host = solver.round_callable(backend="host")
+        rnd_pal = solver.round_callable(backend="pallas")
+        x_h = x_p = solver._x_ext(None)
+        for _ in range(3):
+            x_h, x_p = rnd_host(x_h), rnd_pal(x_p)
+            # owned frontier identical; the dump slot sees different (but
+            # equally meaningless) last-writer races between the paths
+            np.testing.assert_array_equal(np.asarray(x_h[:-1]), np.asarray(x_p[:-1]))
+
+    def test_counter_semantics_match_jit(self):
+        """Same while-loop, same EngineResult authority: flush counters and
+        timing normalization are untouched by the round swap."""
+        solver = Solver(
+            GRAPH_PR, pagerank_problem(), n_workers=N_WORKERS, delta=64, min_chunk=16
+        )
+        r_jit = solver.solve(backend="jit")
+        r_pal = solver.solve(backend="pallas")
+        assert r_pal.flushes == r_jit.flushes
+        assert r_pal.flush_bytes == r_jit.flush_bytes
+        assert r_pal.delta == r_jit.delta and r_pal.P == r_jit.P
+        assert r_pal.total_time_s > 0
+
+
+class TestQueryThreading:
+    def test_ppr_unbatched_matches_jit(self):
+        solver = Solver(
+            GRAPH_PR, ppr_problem(), n_workers=N_WORKERS, delta=64, min_chunk=16
+        )
+        q = ppr_teleport(GRAPH_PR, [5])[0]
+        r_jit = solver.solve(q=q, backend="jit")
+        r_pal = solver.solve(q=q, backend="pallas")
+        assert r_pal.rounds == r_jit.rounds
+        np.testing.assert_array_equal(r_pal.x, r_jit.x)
+
+    def test_ppr_default_query_matches_pagerank(self):
+        r_pr = Solver(
+            GRAPH_PR, pagerank_problem(), n_workers=N_WORKERS, delta=64, min_chunk=16
+        ).solve(backend="pallas")
+        r_ppr = Solver(
+            GRAPH_PR, ppr_problem(), n_workers=N_WORKERS, delta=64, min_chunk=16
+        ).solve(backend="pallas")
+        np.testing.assert_array_equal(r_pr.x, r_ppr.x)
+
+    def test_ppr_batch_matches_jit_batch(self):
+        solver = Solver(
+            GRAPH_PR, ppr_problem(), n_workers=N_WORKERS, delta=64, min_chunk=16
+        )
+        seeds = [3, 11]
+        q = ppr_teleport(GRAPH_PR, seeds)
+        x0 = np.tile(np.full(GRAPH_PR.n, 1.0 / GRAPH_PR.n, np.float32), (2, 1))
+        b_jit = solve_batch(solver, x0, q=q)
+        b_pal = solve_batch(solver, x0, q=q, backend="pallas")
+        assert b_pal.rounds == b_jit.rounds
+        np.testing.assert_array_equal(b_pal.x, b_jit.x)
+        for i, s in enumerate(seeds):
+            assert b_pal.x[i].argmax() == s
+
+
+class TestBatch:
+    def test_multi_source_sssp_matches_jit_batch(self):
+        solver = Solver(
+            GRAPH_S, sssp_problem(), n_workers=N_WORKERS, delta=32, min_chunk=8
+        )
+        x0 = multi_source_x0(GRAPH_S, [0, 7, 33])
+        b_jit = solve_batch(solver, x0)
+        b_pal = solve_batch(solver, x0, backend="pallas")
+        assert b_pal.rounds == b_jit.rounds
+        np.testing.assert_array_equal(b_pal.x, b_jit.x)
+        np.testing.assert_array_equal(b_pal.rounds_per_query, b_jit.rounds_per_query)
+
+    def test_q1_bit_identical_to_unbatched(self):
+        solver = Solver(
+            GRAPH_S, sssp_problem(), n_workers=N_WORKERS, delta=32, min_chunk=8
+        )
+        r = solver.solve(backend="pallas")
+        b = solve_batch(solver, multi_source_x0(GRAPH_S, [0]), backend="pallas")
+        assert b.rounds == r.rounds and b.Q == 1
+        np.testing.assert_array_equal(b.x[0], r.x)
+
+    def test_pallas_default_backend_routes_batches(self):
+        """A pallas-default solver batches on the fused kernel without an
+        explicit backend= at the call site."""
+        solver = Solver(
+            GRAPH_S,
+            sssp_problem(),
+            n_workers=N_WORKERS,
+            delta=32,
+            backend="pallas",
+            min_chunk=8,
+        )
+        x0 = multi_source_x0(GRAPH_S, [0, 7])
+        b = solve_batch(solver, x0)
+        ref = solve_batch(solver, x0, backend="jit")
+        np.testing.assert_array_equal(b.x, ref.x)
+        assert ("batch", "pallas", "replicated", 32, 2) in solver._compiled
+
+    def test_compaction_on_pallas(self):
+        solver = Solver(
+            GRAPH_S, sssp_problem(), n_workers=N_WORKERS, delta=32, min_chunk=8
+        )
+        x0 = multi_source_x0(GRAPH_S, list(range(6)))
+        full = solve_batch(solver, x0, backend="pallas")
+        comp = solve_batch(solver, x0, backend="pallas", compact_every=2)
+        np.testing.assert_array_equal(comp.x, full.x)
+        np.testing.assert_array_equal(comp.rounds_per_query, full.rounds_per_query)
+
+
+class TestCache:
+    def test_second_solve_warm(self):
+        solver = Solver(
+            GRAPH_PR, pagerank_problem(), n_workers=N_WORKERS, delta=128, min_chunk=16
+        )
+        r1 = solver.solve(backend="pallas")
+        snap = dict(solver.stats)
+        r2 = solver.solve(backend="pallas")
+        assert solver.stats["traces"] == snap["traces"]
+        assert solver.stats["compiles"] == snap["compiles"]
+        assert r1.compile_time_s > 0.0 and r2.compile_time_s == 0.0
+        np.testing.assert_array_equal(r1.x, r2.x)
+
+    def test_pallas_key_distinct_from_jit(self):
+        solver = Solver(
+            GRAPH_PR, pagerank_problem(), n_workers=N_WORKERS, delta=128, min_chunk=16
+        )
+        solver.solve(backend="jit")
+        solver.solve(backend="pallas")
+        d = solver.schedule().delta
+        assert ("jit", d) in solver._compiled
+        assert ("pallas", d) in solver._compiled
+        assert solver.stats["compiles"] == 2
+        # schedule is shared: one stripe build serves both round flavours
+        assert solver.stats["schedule_builds"] == 1
+
+    def test_validation(self):
+        with pytest.raises(ValueError, match="backend must be one of"):
+            Solver(GRAPH_S, sssp_problem(), backend="mosaic")
+        solver = Solver(GRAPH_S, sssp_problem(), n_workers=N_WORKERS, delta=32)
+        with pytest.raises(ValueError, match="requires backend='sharded'"):
+            solver.solve(backend="pallas", frontier="halo")
+
+
+class TestServeGraphPallas:
+    def test_service_on_pallas_matches_jit(self):
+        from repro.launch.serve_graph import GraphService
+
+        kwargs = dict(n_workers=N_WORKERS, delta=32, batch_size=2, min_chunk=8)
+        base = GraphService(GRAPH_S, **kwargs)
+        pallas = GraphService(GRAPH_S, backend="pallas", **kwargs)
+        np.testing.assert_array_equal(base.sssp([0, 7]), pallas.sssp([0, 7]))
+
+    def test_cli_accepts_pallas(self):
+        from repro.launch.serve_graph import main
+
+        argv = (
+            "--graph kron --scale 8 --queries 2 --repeats 2 --delta 32 "
+            "--backend pallas --algo sssp"
+        )
+        report = main(argv.split())
+        stats = report["stats"]["sssp"]
+        assert stats["schedule_builds"] == 1 and stats["compiles"] == 1
+
+
+# --------------------------------------------------------------------------- #
+# Property test: fused pallas round ≡ XLA round on random graphs × P × δ
+# --------------------------------------------------------------------------- #
+try:
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    SETTINGS = dict(
+        deadline=None,
+        max_examples=15,
+        suppress_health_check=[HealthCheck.too_slow],
+    )
+
+    @st.composite
+    def random_case(draw):
+        n = draw(st.integers(min_value=8, max_value=96))
+        m = draw(st.integers(min_value=1, max_value=5 * n))
+        seed = draw(st.integers(min_value=0, max_value=2**31 - 1))
+        semiring = draw(st.sampled_from(["plus_times", "min_plus"]))
+        P = draw(st.integers(min_value=1, max_value=6))
+        delta = draw(st.integers(min_value=1, max_value=24))
+        rng = np.random.default_rng(seed)
+        src = rng.integers(0, n, m)
+        dst = rng.integers(0, n, m)
+        if semiring == "min_plus":
+            vals = rng.integers(1, 64, m).astype(np.int32)
+        else:
+            vals = (rng.random(m) * 0.2).astype(np.float32)
+        g = CSRGraph.from_edges(n, src, dst, vals, name=f"p{seed}")
+        return g, semiring, P, delta, seed
+
+    @given(random_case())
+    @settings(**SETTINGS)
+    def test_pallas_round_bit_identical_property(case):
+        g, sr_name, P, delta, seed = case
+        sr = MIN_PLUS if sr_name == "min_plus" else PLUS_TIMES
+        sched = make_schedule(g, P, delta, sr)
+        rng = np.random.default_rng(seed)
+        if sr_name == "min_plus":
+            row_update = lambda o, r, w: jnp.minimum(o, r)
+            x0 = rng.integers(0, INT_INF, g.n, dtype=np.int32)
+        else:
+            row_update = lambda o, r, w: jnp.float32(0.01) + r
+            x0 = rng.random(g.n).astype(np.float32)
+        ref = jax.jit(round_fn(sched, sr, row_update))
+        pal = jax.jit(round_fn_pallas(sched, sr, row_update))
+        x = jnp.concatenate(
+            [jnp.asarray(x0, sr.dtype), jnp.asarray([sr.zero], sr.dtype)]
+        )
+        x_ref = x_pal = x
+        for _ in range(3):
+            x_ref = ref(x_ref)
+            x_pal = pal(x_pal)
+            np.testing.assert_array_equal(
+                np.asarray(x_ref[:-1]), np.asarray(x_pal[:-1])
+            )
+
+    @given(random_case())
+    @settings(**SETTINGS)
+    def test_pallas_round_q_threads_query_property(case):
+        """The q-threaded fused round matches the XLA q round on random
+        teleport vectors (the PPR shape, any graph)."""
+        g, sr_name, P, delta, seed = case
+        if sr_name == "min_plus":
+            return  # q threading is a plus-times (teleport) concern
+        from repro.core.engine import round_fn_q
+
+        sr = PLUS_TIMES
+        sched = make_schedule(g, P, delta, sr)
+        rng = np.random.default_rng(seed)
+        row_update_q = lambda o, r, w, q: q[w] + r
+        q = jnp.asarray(rng.random(g.n).astype(np.float32))
+        x = jnp.concatenate(
+            [jnp.asarray(rng.random(g.n).astype(np.float32)), jnp.zeros(1, jnp.float32)]
+        )
+        ref = jax.jit(round_fn_q(sched, sr, row_update_q))
+        pal = jax.jit(round_fn_pallas_q(sched, sr, row_update_q))
+        x_ref, x_pal = ref(x, q), pal(x, q)
+        np.testing.assert_array_equal(np.asarray(x_ref[:-1]), np.asarray(x_pal[:-1]))

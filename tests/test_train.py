@@ -26,7 +26,9 @@ def batch_for(step, B=4, S=32, pods=0):
     data = SyntheticLM(vocab=CFG.vocab, seq_len=S, global_batch=B)
     b = {k: jnp.asarray(v) for k, v in data.batch(step).items()}
     if pods:
-        b = jax.tree.map(lambda x: x.reshape((pods, x.shape[0] // pods) + x.shape[1:]), b)
+        b = jax.tree.map(
+            lambda x: x.reshape((pods, x.shape[0] // pods) + x.shape[1:]), b
+        )
     return b
 
 
