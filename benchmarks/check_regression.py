@@ -1,0 +1,141 @@
+"""Bench-regression guard: fresh ``results/*.json`` vs committed baselines.
+
+The smoke-bench CI job snapshots the committed ``results/`` tree before
+running the benchmarks, then calls this script to diff every regenerated
+file against its baseline — so a drifting counter **fails the job** instead
+of silently riding along in the uploaded artifacts.
+
+What is compared: every numeric leaf reachable through matching JSON
+structure (dicts by key, lists by index).  Wall-clock fields are skipped —
+they measure the runner, not the code — identified by name
+(``*time*``/``*latency*``/``*second*``/``*duration*`` or a ``_s``/``_ms``/
+``_us`` suffix).  Deterministic fields (round counts, flush/wire bytes,
+cache-counter stats) must agree within ``--rtol``; a missing key, missing
+baseline-relative file, or structural mismatch is always a failure.  Files
+present only in the fresh tree are reported as new and pass (first run of a
+new benchmark: commit its output to create the baseline).
+
+Usage (what CI runs)::
+
+    cp -r results results-baseline       # before the benchmarks
+    ...run benchmarks...
+    python -m benchmarks.check_regression results-baseline results
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import re
+import sys
+from pathlib import Path
+
+TIME_KEY = re.compile(r"time|latency|second|duration", re.IGNORECASE)
+TIME_SUFFIX = ("_s", "_ms", "_us")
+
+
+def is_time_key(key: str) -> bool:
+    return bool(TIME_KEY.search(key)) or key.endswith(TIME_SUFFIX)
+
+
+def compare(base, fresh, rtol: float, atol: float, path: str, problems: list):
+    """Recursively diff ``fresh`` against ``base``; append findings."""
+    if isinstance(base, dict):
+        if not isinstance(fresh, dict):
+            problems.append(f"{path}: dict became {type(fresh).__name__}")
+            return
+        for key, bval in base.items():
+            if is_time_key(str(key)):
+                continue
+            if key not in fresh:
+                problems.append(f"{path}.{key}: missing from fresh results")
+                continue
+            compare(bval, fresh[key], rtol, atol, f"{path}.{key}", problems)
+        return
+    if isinstance(base, list):
+        if not isinstance(fresh, list):
+            problems.append(f"{path}: list became {type(fresh).__name__}")
+            return
+        if len(fresh) < len(base):
+            problems.append(f"{path}: {len(base)} baseline rows, {len(fresh)} fresh")
+        for i, bval in enumerate(base[: len(fresh)]):
+            compare(bval, fresh[i], rtol, atol, f"{path}[{i}]", problems)
+        return
+    if isinstance(base, bool) or isinstance(fresh, bool):
+        if base != fresh:
+            problems.append(f"{path}: baseline={base} fresh={fresh}")
+        return
+    if isinstance(base, (int, float)) and isinstance(fresh, (int, float)):
+        if abs(fresh - base) > atol + rtol * abs(base):
+            rel = (fresh - base) / base * 100 if base else float("inf")
+            problems.append(
+                f"{path}: baseline={base} fresh={fresh} ({rel:+.1f}% > ±{rtol:.0%})"
+            )
+        return
+    if base != fresh:
+        problems.append(f"{path}: baseline={base!r} fresh={fresh!r}")
+
+
+def check(baseline_dir: Path, fresh_dir: Path, rtol: float, atol: float) -> int:
+    problems: list[str] = []
+    compared = 0
+    for base_file in sorted(baseline_dir.rglob("*.json")):
+        rel = base_file.relative_to(baseline_dir)
+        fresh_file = fresh_dir / rel
+        if not fresh_file.exists():
+            problems.append(f"{rel}: baseline exists but fresh run produced no file")
+            continue
+        try:
+            base = json.loads(base_file.read_text())
+        except ValueError:
+            print(f"  skip {rel}: unreadable baseline (regenerate and commit)")
+            continue
+        try:
+            fresh = json.loads(fresh_file.read_text())
+        except ValueError:
+            problems.append(f"{rel}: fresh file is not valid JSON")
+            continue
+        compared += 1
+        compare(base, fresh, rtol, atol, str(rel), problems)
+    new = {
+        str(p.relative_to(fresh_dir))
+        for p in fresh_dir.rglob("*.json")
+        if not (baseline_dir / p.relative_to(fresh_dir)).exists()
+    }
+    for name in sorted(new):
+        print(f"  new (no baseline, passes): {name}")
+    print(f"compared {compared} result files against {baseline_dir}")
+    if problems:
+        print(f"\n{len(problems)} regression(s) beyond rtol={rtol}:")
+        for p in problems:
+            print(f"  FAIL {p}")
+        return 1
+    print("no regressions")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("baseline", type=Path, help="snapshot of committed results/")
+    ap.add_argument("fresh", type=Path, help="results/ after the benchmark run")
+    ap.add_argument(
+        "--rtol",
+        type=float,
+        default=0.2,
+        help="relative tolerance for numeric drift (default 0.2)",
+    )
+    ap.add_argument(
+        "--atol",
+        type=float,
+        default=1e-9,
+        help="absolute tolerance floor (default 1e-9)",
+    )
+    args = ap.parse_args(argv)
+    if not args.baseline.is_dir():
+        print(f"baseline dir {args.baseline} missing", file=sys.stderr)
+        return 2
+    return check(args.baseline, args.fresh, args.rtol, args.atol)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

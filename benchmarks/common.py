@@ -1,9 +1,9 @@
-"""Shared benchmark helpers: standard graph set + timing."""
+"""Shared benchmark helpers: standard graph set + timing + atomic results."""
 
 from __future__ import annotations
 
 import json
-import time
+import os
 from pathlib import Path
 
 from repro.graphs.generators import make_graph
@@ -24,9 +24,24 @@ def load_graph(name: str, kind: str = "pagerank"):
     return make_graph(name, scale=scale, efactor=EFACTOR, kind=kind)
 
 
+def write_json_atomic(path, obj) -> Path:
+    """Write ``obj`` as JSON via tmp file + atomic rename.
+
+    Creates parent directories as needed.  The rename means a mid-write kill
+    (CI timeout, OOM) can never leave a truncated baseline for
+    ``benchmarks/check_regression.py`` to trip on — the previous file stays
+    intact until the new one is fully on disk.
+    """
+    path = Path(path)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    tmp = path.with_name(f"{path.name}.tmp-{os.getpid()}")
+    tmp.write_text(json.dumps(obj, indent=1))
+    os.replace(tmp, path)
+    return path
+
+
 def record(table: str, rows: list):
-    RESULTS.mkdir(parents=True, exist_ok=True)
-    (RESULTS / f"{table}.json").write_text(json.dumps(rows, indent=1))
+    write_json_atomic(RESULTS / f"{table}.json", rows)
 
 
 def emit(name: str, us_per_call: float, derived: str = ""):

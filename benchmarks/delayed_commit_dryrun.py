@@ -25,12 +25,13 @@ import os
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
 
 import argparse
-import json
 from functools import partial
 from pathlib import Path
 
 import jax
 from jax.sharding import PartitionSpec as P
+
+from benchmarks.common import write_json_atomic
 
 from repro.configs import get_config, get_reduced
 from repro.configs.shapes import SHAPES, ShapeSpec
@@ -141,8 +142,7 @@ def main(argv=None):
         table.append({"delta": d, "f32_gib": f32b / 2**30, "int8_gib": i8b / 2**30})
         print(f"{d:4d} {f32b/2**30:12.2f} {i8b/2**30:12.2f}")
     out = {"smoke": smoke, "phases": rows, "amortised": table}
-    RESULTS.mkdir(parents=True, exist_ok=True)
-    (RESULTS / "delayed_commit_dryrun.json").write_text(json.dumps(out, indent=1))
+    write_json_atomic(RESULTS / "delayed_commit_dryrun.json", out)
     return out
 
 

@@ -23,12 +23,13 @@ os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
 
 import argparse
 import dataclasses
-import json
 from functools import partial
 from pathlib import Path
 
 import jax
 import numpy as np
+
+from benchmarks.common import write_json_atomic
 
 from repro.core.engine import _commit_step, make_schedule, round_fn_pallas
 from repro.core.semiring import PLUS_TIMES
@@ -154,8 +155,7 @@ def main(argv=None):
             f"({kernel['fused_traffic_ratio']:.2f}x, "
             f"frontier 1/{sched.S} of the XLA round's)"
         )
-    RESULTS.mkdir(parents=True, exist_ok=True)
-    (RESULTS / "engine_dryrun.json").write_text(json.dumps(rows, indent=1))
+    write_json_atomic(RESULTS / "engine_dryrun.json", rows)
     return rows
 
 

@@ -21,13 +21,14 @@ import os
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
 import argparse
-import json
 import time
 from pathlib import Path
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from benchmarks.common import write_json_atomic
 
 from repro.core.engine import make_schedule
 from repro.core.semiring import PLUS_TIMES
@@ -166,8 +167,7 @@ def main(argv=None):
         )
         print(f"halo/replicated commit-wire ratio (worst aligned width): {worst:.3f}")
         assert worst < 1.0, "halo exchange should move strictly less than replication"
-    RESULTS.mkdir(parents=True, exist_ok=True)
-    (RESULTS / "sharded_scaling.json").write_text(json.dumps(rows, indent=1))
+    write_json_atomic(RESULTS / "sharded_scaling.json", rows)
     return rows
 
 

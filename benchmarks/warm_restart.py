@@ -1,0 +1,104 @@
+"""Cold vs warm restart: what the persistent solver cache buys a new process.
+
+Simulates the ``serve_graph`` restart regime in one process: a *cold* Solver
+pointed at an empty ``cache_dir`` pays stripe builds, the δ="auto" probes,
+and trace+compile; a second, fresh Solver pointed at the same directory (a
+restarted process, as far as the cache is concerned) must construct warm —
+zero stripe builds, zero probe solves, zero retraces — and produce a
+**bit-identical** fixed point.  Counters are asserted here and in
+``tests/test_persist.py``; the same round trip gates CI via
+``serve_graph --assert-warm``.
+
+    PYTHONPATH=src python -m benchmarks.warm_restart [--scale 12]
+"""
+
+from __future__ import annotations
+
+import argparse
+import shutil
+import tempfile
+import time
+from pathlib import Path
+
+import numpy as np
+
+from benchmarks.common import write_json_atomic
+from repro.graphs.generators import make_graph
+from repro.solve import Solver, pagerank_problem, sssp_problem
+
+RESULTS = Path(__file__).resolve().parents[1] / "results"
+
+
+def one_restart(graph, problem, cache_dir, n_workers: int) -> dict:
+    t0 = time.perf_counter()
+    cold = Solver(
+        graph, problem, n_workers=n_workers, delta="auto", cache_dir=cache_dir
+    )
+    r_cold = cold.solve()
+    cold_s = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    warm = Solver(
+        graph, problem, n_workers=n_workers, delta="auto", cache_dir=cache_dir
+    )
+    r_warm = warm.solve()
+    warm_s = time.perf_counter() - t0
+
+    assert warm.stats["schedule_builds"] == 0, warm.stats
+    assert warm.stats["traces"] == 0, warm.stats
+    return {
+        "problem": problem.name,
+        "delta_star": cold.resolve_delta("auto"),
+        "rounds": r_cold.rounds,
+        "bit_identical": bool(np.array_equal(r_cold.x, r_warm.x)),
+        "cold_first_solve_s": cold_s,
+        "warm_first_solve_s": warm_s,
+        # "time" in the name keeps the regression guard's wall-clock skip
+        # rule matching this ratio of two wall-clock measurements
+        "wall_time_speedup": cold_s / warm_s if warm_s > 0 else float("inf"),
+        # deterministic counters (the regression guard checks these; the
+        # wall-clock fields above are skipped by name)
+        "cold_schedule_builds": cold.stats["schedule_builds"],
+        "cold_traces": cold.stats["traces"],
+        "warm_schedule_builds": warm.stats["schedule_builds"],
+        "warm_traces": warm.stats["traces"],
+        "warm_cache_loads": warm.stats["cache_loads"],
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--scale", type=int, default=12, help="log2 vertices")
+    ap.add_argument("--workers", type=int, default=8)
+    ap.add_argument(
+        "--cache-dir",
+        default=None,
+        help="reuse a cache directory (default: fresh tempdir, removed after)",
+    )
+    args = ap.parse_args(argv)
+
+    cache_dir = args.cache_dir or tempfile.mkdtemp(prefix="repro-warm-restart-")
+    rows = []
+    try:
+        problems = [(pagerank_problem(), "pagerank"), (sssp_problem(), "sssp")]
+        for problem, kind in problems:
+            g = make_graph("kron", scale=args.scale, efactor=8, kind=kind)
+            row = one_restart(g, problem, cache_dir, args.workers)
+            rows.append(row)
+            print(
+                f"{row['problem']:9s} δ*={row['delta_star']:5d} "
+                f"cold={row['cold_first_solve_s'] * 1e3:8.1f} ms "
+                f"warm={row['warm_first_solve_s'] * 1e3:8.1f} ms "
+                f"({row['wall_time_speedup']:.1f}x, warm builds="
+                f"{row['warm_schedule_builds']}, warm traces={row['warm_traces']}, "
+                f"bit-identical={row['bit_identical']})"
+            )
+    finally:
+        if args.cache_dir is None:
+            shutil.rmtree(cache_dir, ignore_errors=True)
+    write_json_atomic(RESULTS / "warm_restart.json", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

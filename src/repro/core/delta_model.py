@@ -29,7 +29,7 @@ from repro.core.access_matrix import access_matrix, locality_fraction
 from repro.graphs.formats import CSRGraph
 from repro.graphs.partition import balanced_blocks
 
-__all__ = ["DeltaModel", "fit_delta_model", "TPUCostParams"]
+__all__ = ["DeltaModel", "fit_delta_model", "refit_delta_model", "TPUCostParams"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -55,16 +55,12 @@ class DeltaModel:
     hw: TPUCostParams
 
     def rounds(self, delta: int) -> float:
-        if self.B <= self.delta_min:
-            return float(self.r_sync)
-        frac = np.log(max(delta, self.delta_min) / self.delta_min) / np.log(
-            self.B / self.delta_min
-        )
-        frac = float(np.clip(frac, 0.0, 1.0))
-        # Diagonal-clustered topologies get little freshness benefit from
-        # remote commits (paper Fig 5) — discount the async gain.
-        gain = (self.r_sync - self.r_async) * (1.0 - self.locality)
-        return self.r_sync - gain * (1.0 - frac)
+        # Exactly the linear-in-(r_sync, r_async) form that
+        # refit_delta_model's least squares inverts — any change to the
+        # interpolation must go through _freshness_weight or the refit
+        # silently fits a different curve than best_delta evaluates.
+        w = self._freshness_weight(delta)
+        return float(self.r_sync) * (1.0 - w) + float(self.r_async) * w
 
     def round_cost_s(self, delta: int) -> float:
         hw = self.hw
@@ -85,6 +81,50 @@ class DeltaModel:
             grid = [2**k for k in range(4, 16)]
         grid = [int(min(d, self.B)) for d in grid if d >= self.delta_min] or [self.B]
         return int(min(grid, key=self.total_time_s))
+
+    # ------------------------------------------------------------------ #
+    # persistence (repro.persist stores the fitted model as JSON)
+    # ------------------------------------------------------------------ #
+    def to_dict(self) -> dict:
+        return {
+            "P": int(self.P),
+            "B": int(self.B),
+            "delta_min": int(self.delta_min),
+            "r_sync": float(self.r_sync),
+            "r_async": float(self.r_async),
+            "locality": float(self.locality),
+            "edges": int(self.edges),
+            "bytes_per_elem": int(self.bytes_per_elem),
+            "hw": dataclasses.asdict(self.hw),
+        }
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "DeltaModel":
+        return cls(
+            P=int(d["P"]),
+            B=int(d["B"]),
+            delta_min=int(d["delta_min"]),
+            r_sync=d["r_sync"],
+            r_async=d["r_async"],
+            locality=float(d["locality"]),
+            edges=int(d["edges"]),
+            bytes_per_elem=int(d["bytes_per_elem"]),
+            hw=TPUCostParams(**d["hw"]),
+        )
+
+    def _freshness_weight(self, delta: int) -> float:
+        """w(δ) with rounds(δ) = r_sync·(1 − w) + r_async·w (linear form).
+
+        Diagonal-clustered topologies get little freshness benefit from
+        remote commits (paper Fig 5) — ``locality`` discounts the async gain.
+        """
+        if self.B <= self.delta_min:
+            return 0.0
+        frac = np.log(max(delta, self.delta_min) / self.delta_min) / np.log(
+            self.B / self.delta_min
+        )
+        frac = float(np.clip(frac, 0.0, 1.0))
+        return (1.0 - self.locality) * (1.0 - frac)
 
 
 def fit_delta_model(
@@ -110,4 +150,36 @@ def fit_delta_model(
         edges=graph.nnz,
         bytes_per_elem=bytes_per_elem,
         hw=hw or TPUCostParams(),
+    )
+
+
+def refit_delta_model(model: DeltaModel, observations) -> DeltaModel:
+    """Re-fit ``(r_sync, r_async)`` from production-observed ``(δ, rounds)``.
+
+    The freshness model is *linear* in its two round counts:
+    ``rounds(δ) = r_sync·(1 − w) + r_async·w`` with
+    ``w(δ) = (1 − locality)·(1 − frac(δ))`` — so observations accumulated from
+    real :class:`~repro.core.engine.EngineResult` runs refit by least squares,
+    no re-probing solves required.  The current model's own predictions at the
+    two anchor points (δ_min and B) join as prior pseudo-observations, keeping
+    the fit well-posed from a single observed δ and the migration smooth
+    (new data *pulls* the curve rather than replacing it).
+
+    ``observations`` is an iterable of ``(delta, rounds)`` pairs; non-positive
+    round counts are discarded.  Returns a new model (the input is frozen);
+    topology-derived fields (locality, B, cost params) are unchanged — only
+    the round-count curve moves.
+    """
+    obs = [(int(d), float(r)) for d, r in observations if r > 0]
+    anchors = [
+        (model.delta_min, model.rounds(model.delta_min)),
+        (model.B, model.rounds(model.B)),
+    ]
+    pts = obs + anchors
+    w = np.array([model._freshness_weight(d) for d, _ in pts])
+    design = np.stack([1.0 - w, w], axis=1)
+    target = np.array([r for _, r in pts])
+    (r_sync, r_async), *_ = np.linalg.lstsq(design, target, rcond=None)
+    return dataclasses.replace(
+        model, r_sync=max(float(r_sync), 1.0), r_async=max(float(r_async), 1.0)
     )

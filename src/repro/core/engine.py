@@ -74,6 +74,60 @@ class DeviceSchedule:
     def n_slots(self) -> int:
         return self.n + 1
 
+    # ------------------------------------------------------------------ #
+    # persistence (repro.persist stores schedules as plain npz archives)
+    # ------------------------------------------------------------------ #
+    def to_host_arrays(self) -> dict:
+        """Flat ``{name: ndarray}`` dict round-trippable through ``np.savez``."""
+        return {
+            "n": np.int64(self.n),
+            "P": np.int64(self.P),
+            "delta": np.int64(self.delta),
+            "S": np.int64(self.S),
+            "M": np.int64(self.M),
+            "src": np.asarray(self.src),
+            "val": np.asarray(self.val),
+            "dst_local": np.asarray(self.dst_local),
+            "rows": np.asarray(self.rows),
+            "edges": np.int64(self.edges),
+            "padding_overhead": np.float64(self.padding_overhead),
+            "block_bounds": np.asarray(
+                self.block_bounds if self.block_bounds is not None else []
+            ),
+        }
+
+    @classmethod
+    def from_host_arrays(cls, arrays) -> "DeviceSchedule":
+        """Rebuild from :meth:`to_host_arrays` output (shape-validated)."""
+        n, P = int(arrays["n"]), int(arrays["P"])
+        delta, S, M = int(arrays["delta"]), int(arrays["S"]), int(arrays["M"])
+        src = np.asarray(arrays["src"])
+        val = np.asarray(arrays["val"])
+        dst_local = np.asarray(arrays["dst_local"])
+        rows = np.asarray(arrays["rows"])
+        bb = np.asarray(arrays["block_bounds"])
+        if (
+            src.shape != (S, P, M)
+            or val.shape != (S, P, M)
+            or dst_local.shape != (S, P, M)
+            or rows.shape != (S, P, delta)
+        ):
+            raise ValueError("schedule arrays inconsistent with (S, P, M, delta)")
+        return cls(
+            n=n,
+            P=P,
+            delta=delta,
+            S=S,
+            M=M,
+            src=jnp.asarray(src),
+            val=jnp.asarray(val),
+            dst_local=jnp.asarray(dst_local),
+            rows=jnp.asarray(rows),
+            edges=int(arrays["edges"]),
+            padding_overhead=float(arrays["padding_overhead"]),
+            block_bounds=bb.astype(np.int64) if bb.size else None,
+        )
+
 
 def make_schedule(
     graph: CSRGraph,

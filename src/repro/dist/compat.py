@@ -15,7 +15,15 @@ import threading
 
 import jax
 
-__all__ = ["AxisType", "current_mesh", "make_mesh", "set_mesh", "shard_map"]
+__all__ = [
+    "AxisType",
+    "current_mesh",
+    "export_deserialize",
+    "export_serialize",
+    "make_mesh",
+    "set_mesh",
+    "shard_map",
+]
 
 try:  # jax >= 0.6
     from jax.sharding import AxisType
@@ -109,6 +117,52 @@ def cost_analysis(compiled) -> dict:
     if isinstance(ca, (list, tuple)):
         ca = ca[0] if ca else {}
     return ca or {}
+
+
+def export_serialize(fn, args) -> bytes | None:
+    """AOT-export ``jit(fn)`` for ``args``' shapes to a portable blob, or None.
+
+    The blob is the :mod:`jax.export` serialization of the traced program —
+    closure constants (stripe schedules, Jacobi tables) baked in — and
+    deserializes on any same-version jax without re-running the Python that
+    built ``fn``.  Returns ``None`` (callers then keep their freshly traced
+    executable for this process only — the lower-only fallback) when:
+
+    * jax predates ``jax.export`` (the 0.4.x floor this repo's compat layer
+      targets has it, but the graceful path costs nothing);
+    * the program spans **more than one device** (a shard_map export pins the
+      device assignment and refuses to load into a different-width context, so
+      persisting it could never hit);
+    * export itself rejects the program (exotic primitives).
+    """
+    try:
+        from jax import export as jax_export
+    except ImportError:  # pragma: no cover - depends on installed jax
+        return None
+    try:
+        specs = jax.tree_util.tree_map(
+            lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), tuple(args)
+        )
+        exported = jax_export.export(jax.jit(fn))(*specs)
+        if exported.nr_devices != 1:
+            return None
+        return exported.serialize()
+    except Exception:
+        return None
+
+
+def export_deserialize(blob: bytes):
+    """The jit-able callable of a serialized export, or ``None`` on any failure.
+
+    A corrupt, truncated, or version-incompatible blob is a cache *miss* (the
+    caller re-traces), never an error surfaced to the solve path.
+    """
+    try:
+        from jax import export as jax_export
+
+        return jax_export.deserialize(blob).call
+    except Exception:
+        return None
 
 
 def shard_map(f, *, mesh, in_specs, out_specs, check_vma=True):

@@ -199,6 +199,48 @@ class FrontierPlan:
         """Replicated ``(n + 1,)`` frontier → stacked ``(D, L)`` local view."""
         return jnp.asarray(x_ext)[self.gather_index]
 
+    # ------------------------------------------------------------------ #
+    # persistence (repro.persist stores plans as plain npz archives)
+    # ------------------------------------------------------------------ #
+    def to_host_arrays(self) -> dict:
+        """Flat ``{name: ndarray}`` dict round-trippable through ``np.savez``."""
+        out = {
+            f.name: np.asarray(getattr(self, f.name))
+            for f in dataclasses.fields(self)
+        }
+        return out
+
+    @classmethod
+    def from_host_arrays(cls, arrays) -> "FrontierPlan":
+        """Rebuild from :meth:`to_host_arrays` output (shape-validated)."""
+        D, S, H, L = (int(arrays[k]) for k in ("D", "S", "H", "L"))
+        plan = cls(
+            D=D,
+            P_loc=int(arrays["P_loc"]),
+            L=L,
+            H=H,
+            S=S,
+            delta=int(arrays["delta"]),
+            n=int(arrays["n"]),
+            vertex_bounds=np.asarray(arrays["vertex_bounds"], dtype=np.int64),
+            halo_sizes=np.asarray(arrays["halo_sizes"], dtype=np.int64),
+            boundary_entries_per_round=int(arrays["boundary_entries_per_round"]),
+            src_loc=jnp.asarray(arrays["src_loc"]),
+            rows_loc=jnp.asarray(arrays["rows_loc"]),
+            send_idx=jnp.asarray(arrays["send_idx"]),
+            recv_idx=jnp.asarray(arrays["recv_idx"]),
+            gather_index=jnp.asarray(arrays["gather_index"]),
+            owned_flat=jnp.asarray(arrays["owned_flat"]),
+        )
+        if (
+            plan.send_idx.shape != (S, D, H)
+            or plan.recv_idx.shape != (S, D, D * H)
+            or plan.gather_index.shape != (D, L)
+            or plan.vertex_bounds.shape != (D + 1,)
+        ):
+            raise ValueError("plan arrays inconsistent with (S, D, H, L)")
+        return plan
+
     def gather_x(self, x_loc, dump=None):
         """Stacked ``(D, L)`` local view → ``(n + 1,)`` global frontier."""
         owned = jnp.reshape(x_loc, (-1,))[self.owned_flat]

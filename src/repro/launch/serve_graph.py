@@ -56,6 +56,14 @@ class GraphService:
     commits — graphs larger than one device); ``compact_every`` shrinks each
     batch to its unconverged queries every that many rounds so one straggler
     query stops taxing the whole batch.
+
+    ``cache_dir`` makes the warm state survive the *process*: each solver
+    persists its stripe schedules, δ-model, and AOT-exported executables to
+    the content-addressed store (:mod:`repro.persist`), so a restarted
+    service pointed at the same directory serves its first batch with zero
+    stripe builds and zero retraces; ``reprobe_every=N`` keeps refitting the
+    δ-model from the observations production solves log there, migrating
+    ``delta="auto"`` services to the measured-best δ* as traffic accumulates.
     """
 
     def __init__(
@@ -69,6 +77,8 @@ class GraphService:
         backend: str = "jit",
         frontier: str = "replicated",
         compact_every: int | None = None,
+        cache_dir=None,
+        reprobe_every: int | None = None,
     ):
         self.graph = graph
         self.n_workers = n_workers
@@ -79,6 +89,8 @@ class GraphService:
         self.backend = backend
         self.frontier = frontier
         self.compact_every = compact_every
+        self.cache_dir = cache_dir
+        self.reprobe_every = reprobe_every
         self._solvers: dict[str, Solver] = {}
         self._ppr_x0 = None  # constant (batch_size, n) uniform tile, built once
 
@@ -98,6 +110,8 @@ class GraphService:
                 backend=self.backend,
                 frontier=self.frontier,
                 min_chunk=self.min_chunk,
+                cache_dir=self.cache_dir,
+                reprobe_every=self.reprobe_every,
             )
             self._solvers[name] = sv
         return sv
@@ -158,6 +172,25 @@ def main(argv=None) -> dict:
         default=None,
         help="straggler compaction period in rounds (default: off)",
     )
+    ap.add_argument(
+        "--cache-dir",
+        default=None,
+        help="persistent warm-start cache directory (schedules, δ-model, "
+        "AOT executables survive restarts)",
+    )
+    ap.add_argument(
+        "--reprobe-every",
+        type=int,
+        default=None,
+        help="refit the δ-model from logged observations every N solves "
+        "(requires --cache-dir and --delta auto)",
+    )
+    ap.add_argument(
+        "--assert-warm",
+        action="store_true",
+        help="fail (exit 1) unless every solver served from the cache: "
+        "zero stripe builds and zero retraces (the CI warm-restart gate)",
+    )
     args = ap.parse_args(argv)
 
     delta = args.delta if args.delta in ("auto", "sync", "async") else int(args.delta)
@@ -178,6 +211,8 @@ def main(argv=None) -> dict:
             backend=args.backend,
             frontier=args.frontier,
             compact_every=args.compact_every,
+            cache_dir=args.cache_dir,
+            reprobe_every=args.reprobe_every,
         )
         lat = []
         for rep in range(args.repeats):
@@ -192,10 +227,30 @@ def main(argv=None) -> dict:
             f"{algo}: graph={g.name} n={g.n} δ={sv.resolve_delta():d} "
             f"Q={args.queries}  cold={lat[0] * 1e3:.1f} ms  warm={warm}  "
             f"(schedule builds={sv.stats['schedule_builds']}, "
-            f"compiles={sv.stats['compiles']})"
+            f"compiles={sv.stats['compiles']}, "
+            f"cache loads={sv.stats['cache_loads']})"
         )
         report["latency_s"][algo] = lat
         report["stats"][algo] = service.stats()[algo]
+    if args.assert_warm:
+        cold = {
+            algo: {
+                k: stats[k]
+                for k in ("schedule_builds", "plan_builds", "traces")
+                if stats[k]
+            }
+            for algo, stats in report["stats"].items()
+        }
+        cold = {algo: c for algo, c in cold.items() if c}
+        if cold:
+            raise SystemExit(
+                f"--assert-warm: cold work performed despite the cache: {cold} "
+                f"(cache_dir={args.cache_dir!r})"
+            )
+        print(
+            "warm restart verified: zero stripe builds, zero plan builds, "
+            "zero retraces across all solvers"
+        )
     return report
 
 

@@ -1,0 +1,24 @@
+# Persistent warm-start caches: content-addressed on-disk storage for
+# everything a Solver otherwise recomputes per process — stripe schedules,
+# frontier halo plans, the fitted δ-model, and AOT-exported executables —
+# plus the production (δ, rounds, time) observation log that online δ
+# re-probing refits from.  See persist/keys.py for what makes an entry safe.
+from repro.persist.keys import (
+    CACHE_FORMAT,
+    env_fingerprint,
+    graph_fingerprint,
+    problem_fingerprint,
+    row_update_digest,
+    solver_namespace,
+)
+from repro.persist.store import SolverCache
+
+__all__ = [
+    "CACHE_FORMAT",
+    "SolverCache",
+    "env_fingerprint",
+    "graph_fingerprint",
+    "problem_fingerprint",
+    "row_update_digest",
+    "solver_namespace",
+]

@@ -1,0 +1,159 @@
+"""Content-addressed cache keys: what makes a persisted entry *safe* to reuse.
+
+The store never trusts a path: every namespace is derived from the content it
+caches results for, so a stale or mismatched entry is a **miss**, never a
+wrong answer.  A solver namespace hashes together
+
+* the **graph content** (indptr / indices / values bytes — the schedule graph,
+  i.e. after any ``Problem.edge_values`` override);
+* the **problem fingerprint** — name, tolerance, semiring, and a digest of the
+  row-update's *traced jaxpr including its closure constants* (so two Jacobi
+  problems with different right-hand sides never share executables);
+* the solver shape knobs (``n_workers``, ``partition_method``, ``min_chunk``);
+* the solver's effective ``tol``/``max_rounds`` (constructor overrides
+  applied), so different convergence regimes never share a δ-model;
+* the **environment** (cache format, repro / jax / numpy versions) — a version
+  bump silently retires every old namespace.
+
+Known limit: *source edits* to schedule/engine construction code are not
+content-hashed (package version strings don't change in a dev checkout, and
+``PYTHONPATH=src`` runs pin the fallback version), so after changing how
+schedules or rounds are *built*, bump :data:`CACHE_FORMAT` to retire every
+persisted entry — that is what the constant is for.
+
+Anything not captured by the namespace (δ, backend, frontier, mesh width,
+argument shapes) is keyed per entry inside the namespace by
+:mod:`repro.persist.store`.
+"""
+
+from __future__ import annotations
+
+import hashlib
+
+import jax
+import numpy as np
+
+__all__ = [
+    "CACHE_FORMAT",
+    "env_fingerprint",
+    "graph_fingerprint",
+    "problem_fingerprint",
+    "row_update_digest",
+    "solver_namespace",
+]
+
+# Bump to retire every existing cache entry (layout or semantics change).
+CACHE_FORMAT = 1
+
+try:  # installed package
+    import importlib.metadata
+
+    _REPRO_VERSION = importlib.metadata.version("repro")
+except Exception:  # pragma: no cover - PYTHONPATH runs carry no dist metadata
+    _REPRO_VERSION = "0.1.0"
+
+
+def env_fingerprint() -> str:
+    """The toolchain part of every namespace key (mismatch ⇒ cold build)."""
+    return (
+        f"format{CACHE_FORMAT}-repro{_REPRO_VERSION}"
+        f"-jax{jax.__version__}-numpy{np.__version__}"
+    )
+
+
+def _digest(*parts: bytes) -> str:
+    h = hashlib.sha256()
+    for p in parts:
+        h.update(p)
+        h.update(b"\x00")  # unambiguous part boundaries
+    return h.hexdigest()
+
+
+def graph_fingerprint(graph) -> str:
+    """Content hash of a :class:`~repro.graphs.formats.CSRGraph` (not its name)."""
+    return _digest(
+        str(graph.n).encode(),
+        str(graph.indptr.dtype).encode(),
+        np.ascontiguousarray(graph.indptr).tobytes(),
+        str(graph.indices.dtype).encode(),
+        np.ascontiguousarray(graph.indices).tobytes(),
+        str(graph.values.dtype).encode(),
+        np.ascontiguousarray(graph.values).tobytes(),
+    )
+
+
+def row_update_digest(row_update_q, semiring, q_template) -> str:
+    """Digest of the row update's traced jaxpr **plus closure constants**.
+
+    ``row_update_q`` is the normalized 4-arg form
+    ``(old, reduced, rows, q) -> new``.  Tracing with tiny abstract row blocks
+    captures the update's computation graph and hoists its closure constants
+    (Jacobi's ``b/diag`` table, PageRank's teleport scalar) into ``consts`` —
+    both are hashed, so problems that differ only in baked-in data get
+    distinct namespaces.  Untraceable updates degrade to a sentinel (their
+    problems then only share entries with themselves via name/tol/semiring).
+    """
+    sds = jax.ShapeDtypeStruct
+    dt = np.dtype(semiring.dtype)
+    args = (
+        sds((2, 3), dt),
+        sds((2, 3), dt),
+        sds((2, 3), np.int32),
+        jax.tree_util.tree_map(
+            lambda a: sds(np.shape(a), np.asarray(a).dtype), q_template
+        ),
+    )
+    try:
+        closed = jax.make_jaxpr(row_update_q)(*args)
+    except Exception:
+        return "untraceable"
+    h = hashlib.sha256(str(closed.jaxpr).encode())
+    for c in closed.consts:
+        arr = np.asarray(c)
+        h.update(str(arr.dtype).encode())
+        h.update(np.ascontiguousarray(arr).tobytes())
+    return h.hexdigest()
+
+
+def problem_fingerprint(problem, row_update_q, semiring, q_template) -> str:
+    """Fingerprint of a :class:`~repro.solve.problem.Problem` instance."""
+    return _digest(
+        problem.name.encode(),
+        repr(float(problem.tol)).encode(),
+        str(int(problem.max_rounds)).encode(),
+        str(np.dtype(semiring.dtype)).encode(),
+        repr(semiring.zero).encode(),
+        str(bool(problem.takes_query)).encode(),
+        row_update_digest(row_update_q, semiring, q_template).encode(),
+    )
+
+
+def solver_namespace(
+    graph,
+    problem,
+    row_update_q,
+    q_template,
+    n_workers: int,
+    partition_method: str,
+    min_chunk: int,
+    tol: float,
+    max_rounds: int,
+) -> str:
+    """The namespace key one Solver's persisted entries live under.
+
+    ``tol``/``max_rounds`` are the solver's *effective* values (constructor
+    overrides applied) — two solvers on one problem with different
+    convergence regimes must not share a δ-model or observation log.
+    """
+    return _digest(
+        env_fingerprint().encode(),
+        graph_fingerprint(graph).encode(),
+        problem_fingerprint(
+            problem, row_update_q, problem.semiring, q_template
+        ).encode(),
+        str(int(n_workers)).encode(),
+        partition_method.encode(),
+        str(int(min_chunk)).encode(),
+        repr(float(tol)).encode(),
+        str(int(max_rounds)).encode(),
+    )

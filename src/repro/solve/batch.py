@@ -182,10 +182,19 @@ def solve_batch(
     tol_a = jnp.asarray(tol, jnp.float32)
     bytes_per = np.dtype(sr.dtype).itemsize
 
+    # Sharded loops are additionally keyed by mesh width: a persisted
+    # executable exported by a 1-device process must never satisfy an
+    # 8-device one (single-device exports are the only ones persisted).
+    key_tail: tuple = ()
+    if backend == "sharded":
+        from repro.dist.compat import mesh_axis_sizes
+
+        key_tail = (mesh_axis_sizes(solver._default_mesh())[solver.mesh_axis],)
+
     def compiled_loop(X_cur, qb_cur):
         """The fused loop for the current active size (cached per size)."""
         return solver.compile_cached(
-            ("batch", backend, frontier, sched.delta, X_cur.shape[0]),
+            ("batch", backend, frontier, sched.delta, X_cur.shape[0]) + key_tail,
             _make_batch_solve_fn(
                 _batched_round(solver, sched, backend, frontier), problem.residual
             ),
@@ -193,6 +202,9 @@ def solve_batch(
             qb_cur,
             tol_a,
             jnp.asarray(max_rounds, jnp.int32),
+            # a >1-device shard_map export pins its device assignment and
+            # could never load — skip the store instead of exporting to waste
+            portable=key_tail in ((), (1,)),
         )
 
     solver.stats["solves"] += 1
@@ -239,6 +251,13 @@ def solve_batch(
             compactions += 1
         X_ext = X_new
     total = time.perf_counter() - t0
+
+    # Batch rounds are max-over-queries (tagged "batch" so the refit can tell)
+    # — routed through the solver so served traffic advances reprobe_every's
+    # counter: in a serving process, batches ARE the production observations.
+    solver._record_observation(
+        sched.delta, rounds_done, total, backend, kind="batch"
+    )
 
     return BatchResult(
         x=x_out,

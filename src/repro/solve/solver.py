@@ -32,7 +32,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.delta_model import fit_delta_model
+from repro.core.delta_model import fit_delta_model, refit_delta_model
 from repro.core.engine import (
     MIN_CHUNK,
     DeviceSchedule,
@@ -106,6 +106,15 @@ class Solver:
     and compiled executables are cached on the instance — a second ``solve()``
     with the same ``(δ, backend, frontier)`` performs zero schedule builds and
     zero retraces (see ``stats``).
+
+    ``cache_dir=`` extends both caches across *processes*: schedules, halo
+    plans, the fitted δ-model, and AOT-exported executables persist to a
+    content-addressed store (:mod:`repro.persist`), so a second process
+    pointed at the same directory constructs warm — zero stripe builds, zero
+    retraces, results bit-identical to cold.  Every solve also logs its
+    ``(δ, rounds, time)`` to the store; ``reprobe_every=N`` refits the
+    δ-model from those observations every N solves and migrates
+    ``delta="auto"`` to the new δ* (see :meth:`reprobe_delta`).
     """
 
     def __init__(
@@ -122,6 +131,8 @@ class Solver:
         mesh_axis: str = "data",
         tol: float | None = None,
         max_rounds: int | None = None,
+        cache_dir=None,
+        reprobe_every: int | None = None,
     ):
         if backend not in BACKENDS:
             raise ValueError(f"backend must be one of {BACKENDS}, got {backend!r}")
@@ -177,7 +188,52 @@ class Solver:
             "traces": 0,
             "compiles": 0,
             "compile_time_s": 0.0,
+            "cache_loads": 0,
         }
+        self.reprobe_every = reprobe_every
+        self._obs_since_refit = 0
+        self._reprobing = False
+        self.persist = None
+        if cache_dir is not None:
+            from repro.persist import SolverCache
+
+            if problem.takes_query:
+                q_template = (
+                    problem.default_query(graph)
+                    if problem.default_query is not None
+                    else np.zeros((graph.n,), dtype=sr.dtype)
+                )
+            else:
+                q_template = _NO_QUERY
+            self.persist = SolverCache.for_solver(
+                cache_dir,
+                self._sched_graph,
+                problem,
+                self._row_update_q,
+                q_template,
+                n_workers,
+                partition_method,
+                min_chunk,
+                self.tol,
+                self.max_rounds,
+            )
+            self._warm_from_persist()
+
+    def _warm_from_persist(self):
+        """Load the δ-model eagerly — the one entry with no lazy fallback.
+
+        ``delta="auto"`` then resolves to the persisted (possibly migrated)
+        δ* without running a single probe solve.  Schedules, halo plans, and
+        executables stay lazy: :meth:`schedule`, :meth:`frontier_plan`, and
+        :meth:`compile_cached` each consult the store on an in-memory miss,
+        so a warm process deserializes only the δ it actually serves (the
+        probe-δ schedules on disk never cost startup time or device memory).
+        """
+        loaded = self.persist.load_delta_model()
+        if loaded is not None:
+            self.delta_model, best = loaded
+            self._auto_delta = int(min(best, self.block_size))
+            self.stats["cache_loads"] += 1
 
     # ------------------------------------------------------------------ #
     # δ resolution + schedule/plan caches
@@ -262,12 +318,73 @@ class Solver:
             delta_min=min(self.min_chunk, self.block_size),
             bytes_per_elem=np.dtype(self.problem.semiring.dtype).itemsize,
         )
-        return min(self.delta_model.best_delta(), self.block_size)
+        best = min(self.delta_model.best_delta(), self.block_size)
+        if self.persist is not None:
+            self.persist.save_delta_model(self.delta_model, best)
+        return best
+
+    def reprobe_delta(self) -> tuple[int, int]:
+        """Refit the δ-model from logged observations and migrate δ*.
+
+        Pulls every production ``(δ, rounds)`` datapoint accumulated in the
+        persistent store — unbatched solves and batched ones alike (batch
+        round counts are max-over-queries, a conservative upper bound that
+        still orders δ correctly, and in a serving process they are the only
+        traffic there is) — refits via
+        :func:`repro.core.delta_model.refit_delta_model`, and repoints
+        ``delta="auto"`` at the new δ*.  Nothing is dropped:
+        schedules and compiled executables are keyed by *numeric* δ, so the
+        old δ*'s entries (and any explicit-δ neighbors) stay warm in memory
+        and on disk — migration only changes what ``"auto"`` resolves to.
+        Returns ``(old_delta_star, new_delta_star)``.
+        """
+        if self.persist is None:
+            raise ValueError("reprobe_delta requires a Solver(cache_dir=...)")
+        self._reprobing = True
+        try:
+            old = self.resolve_delta("auto")  # probes or loads the base model
+            obs = self.persist.load_observations()
+            pairs = [(o["delta"], o["rounds"]) for o in obs]
+            self.delta_model = refit_delta_model(self.delta_model, pairs)
+            new = int(min(self.delta_model.best_delta(), self.block_size))
+            self._auto_delta = new
+            self._obs_since_refit = 0
+            self.persist.save_delta_model(self.delta_model, new)
+            return old, new
+        finally:
+            self._reprobing = False
+
+    def _record_observation(
+        self, delta: int, rounds: int, total_time_s: float, backend: str,
+        kind: str = "solve",
+    ):
+        """Log one observed (δ, rounds, time); maybe trigger a refit."""
+        if self.persist is None:
+            return
+        self.persist.record_observation(
+            delta, rounds, total_time_s, backend=backend, kind=kind
+        )
+        self._obs_since_refit += 1
+        if (
+            self.reprobe_every is not None
+            and self.default_delta == "auto"
+            and self._obs_since_refit >= self.reprobe_every
+            # never recurse out of the δ="auto" probe solves (no fitted model
+            # yet) or out of a refit already in flight
+            and self._auto_delta is not None
+            and not self._reprobing
+        ):
+            self.reprobe_delta()
 
     def schedule(self, delta=None) -> DeviceSchedule:
         """The cached device schedule for ``delta`` (build on first use)."""
         delta_eff = self.resolve_delta(delta)
         sched = self._schedules.get(delta_eff)
+        if sched is None and self.persist is not None:
+            sched = self.persist.load_schedule(delta_eff)
+            if sched is not None:
+                self._schedules[delta_eff] = sched
+                self.stats["cache_loads"] += 1
         if sched is None:
             sched = make_schedule(
                 self._sched_graph,
@@ -280,6 +397,8 @@ class Solver:
             )
             self._schedules[delta_eff] = sched
             self.stats["schedule_builds"] += 1
+            if self.persist is not None:
+                self.persist.save_schedule(sched)
         return sched
 
     def frontier_plan(self, sched: DeviceSchedule):
@@ -290,10 +409,17 @@ class Solver:
         D = mesh_axis_sizes(self._default_mesh())[self.mesh_axis]
         key = (sched.delta, D)
         plan = self._plans.get(key)
+        if plan is None and self.persist is not None:
+            plan = self.persist.load_plan(sched.delta, D)
+            if plan is not None:
+                self._plans[key] = plan
+                self.stats["cache_loads"] += 1
         if plan is None:
             plan = make_frontier_plan(sched, D)
             self._plans[key] = plan
             self.stats["plan_builds"] += 1
+            if self.persist is not None:
+                self.persist.save_plan(plan)
         return plan
 
     # ------------------------------------------------------------------ #
@@ -308,18 +434,48 @@ class Solver:
 
         return wrapped
 
-    def compile_cached(self, key: tuple, fn, *args):
-        """AOT-lower + compile ``fn`` for ``args``' shapes, once per ``key``."""
+    def compile_cached(self, key: tuple, fn, *args, portable: bool = True):
+        """AOT-lower + compile ``fn`` for ``args``' shapes, once per ``key``.
+
+        Resolution order: in-memory executable → persistent store (a
+        deserialized :mod:`jax.export` blob — compiling it replays StableHLO
+        and never re-traces ``fn``, so warm processes stay at zero ``traces``)
+        → fresh trace+compile, which is then exported back to the store
+        (best-effort; the export re-traces once, a one-time cold cost that
+        buys every later process a zero-trace start).  Callers compiling
+        shard_map programs pass ``portable=False``: a multi-device export
+        pins its device assignment and could never be loaded, so the store
+        is skipped entirely instead of computing an export to discard.
+        """
         cached = self._compiled.get(key)
         if cached is not None:
             self._last_compile_s = 0.0
             return cached
         t0 = time.perf_counter()
+        if self.persist is not None and portable:
+            loaded = self.persist.load_executable(key, args)
+            if loaded is not None:
+                try:
+                    cached = jax.jit(loaded).lower(*args).compile()
+                except Exception:
+                    # a blob can deserialize yet refuse to lower (jax.export
+                    # checks platform here, not at deserialize) — e.g. a
+                    # CPU-built cache shared to a TPU host.  A miss, not an
+                    # error: fall through to the fresh trace below.
+                    cached = None
+                if cached is not None:
+                    self._last_compile_s = time.perf_counter() - t0
+                    self._compiled[key] = cached
+                    self.stats["cache_loads"] += 1
+                    self.stats["compile_time_s"] += self._last_compile_s
+                    return cached
         cached = jax.jit(self._traced(fn)).lower(*args).compile()
         self._last_compile_s = time.perf_counter() - t0
         self._compiled[key] = cached
         self.stats["compiles"] += 1
         self.stats["compile_time_s"] += self._last_compile_s
+        if self.persist is not None and portable:
+            self.persist.save_executable(key, fn, args)
         return cached
 
     # ------------------------------------------------------------------ #
@@ -372,12 +528,17 @@ class Solver:
         q = self.resolve_query(q)
         self.stats["solves"] += 1
         if backend in _FUSED_ROUND_BUILDERS:
-            return self._solve_fused(backend, sched, x_ext, q, tol, max_rounds)
-        if backend == "host":
-            rnd = self._compiled_round(sched, x_ext, q, "host")
+            result = self._solve_fused(backend, sched, x_ext, q, tol, max_rounds)
         else:
-            rnd = self._compiled_round(sched, x_ext, q, "sharded", frontier)
-        return self._host_loop(sched, rnd, x_ext, tol, max_rounds)
+            if backend == "host":
+                rnd = self._compiled_round(sched, x_ext, q, "host")
+            else:
+                rnd = self._compiled_round(sched, x_ext, q, "sharded", frontier)
+            result = self._host_loop(sched, rnd, x_ext, tol, max_rounds)
+        self._record_observation(
+            sched.delta, result.rounds, result.total_time_s, backend
+        )
+        return result
 
     def _solve_fused(self, backend, sched, x_ext, q, tol, max_rounds) -> EngineResult:
         """The fused ``lax.while_loop`` path: ``backend ∈ {"jit", "pallas"}``."""
@@ -424,6 +585,9 @@ class Solver:
                 f"round backend must be 'host', 'pallas', or 'sharded': {backend!r}"
             )
         mesh = self._default_mesh()
+        from repro.dist.compat import mesh_axis_sizes
+
+        D = mesh_axis_sizes(mesh)[self.mesh_axis]
         if frontier == "replicated":
             from repro.dist.engine_sharded import sharded_round_fn_q
 
@@ -432,7 +596,12 @@ class Solver:
             )
             args = (sched.src, sched.val, sched.dst_local, sched.rows)
             compiled = self.compile_cached(
-                ("sharded", "replicated", sched.delta), fn, x_ext, *args, q
+                ("sharded", "replicated", sched.delta, D),
+                fn,
+                x_ext,
+                *args,
+                q,
+                portable=D == 1,
             )
             return lambda x: compiled(x, *args, q)
         from repro.dist.engine_sharded import frontier_plan_args, frontier_round_ext_fn
@@ -443,7 +612,8 @@ class Solver:
         )
         args = frontier_plan_args(sched, plan)
         compiled = self.compile_cached(
-            ("sharded", "halo", sched.delta), fn, x_ext, q, *args
+            ("sharded", "halo", sched.delta, D), fn, x_ext, q, *args,
+            portable=D == 1,
         )
         return lambda x: compiled(x, q, *args)
 
