@@ -1,0 +1,218 @@
+"""Serving-tier load sweep: continuous batching vs the fixed-batch barrier.
+
+Replays the same open-loop Poisson traces (``repro.launch.service.loadgen``)
+through both disciplines at a sweep of offered loads:
+
+* **continuous** — the serving tier: arrivals slot into in-flight batches as
+  converged queries retire, per-class quanta, bounded admission queue;
+* **fixed** — the pre-serving-tier counterfactual: arrivals wait for the
+  device, are padded to a full fixed batch, and the whole batch runs to
+  collective convergence before anyone is answered.
+
+A load is *sustained* when nothing was shed (zero rejections, everything
+completed and converged) and p99 latency stays under ``--p99-threshold``
+round-clock units.  The summary reports the highest sustained load per
+discipline; the serving tier's win condition — strictly higher sustained
+load at the same p99 bar — is a committed boolean the regression guard
+enforces.  All reported fields except ``wall_s`` are deterministic functions
+of the trace (latency is measured on the round clock), so the whole report
+is CI-diffable.
+
+    PYTHONPATH=src python -m benchmarks.serve_load \\
+        --trace benchmarks/traces/serve_smoke.json
+
+Regenerate the committed traces with ``--write-trace`` after changing rates
+or scale (then re-commit ``results/serve_load.json``).
+"""
+
+from __future__ import annotations
+
+import argparse
+from pathlib import Path
+
+import numpy as np
+
+from benchmarks.common import write_json_atomic
+from repro.graphs.generators import make_graph
+from repro.launch.serve_graph import GraphService
+from repro.launch.service import (
+    load_traces,
+    poisson_trace,
+    replay_continuous,
+    replay_fixed,
+    save_traces,
+)
+from repro.launch.service.scheduler import ContinuousScheduler
+from repro.solve import multi_source_x0, ppr_teleport, solve_batch
+
+RESULTS = Path(__file__).resolve().parents[1] / "results"
+TRACES = Path(__file__).resolve().parent / "traces" / "serve_smoke.json"
+
+# SSSP wants length-valued edges, PPR wants pagerank-valued ones — two
+# resident tenants in one scheduler process, same topology family.
+TENANTS = {"road": ("sssp", "sssp"), "social": ("ppr", "pagerank")}
+
+
+def build_services(args) -> dict:
+    services = {}
+    for tenant, (algo, kind) in TENANTS.items():
+        g = make_graph("kron", scale=args.scale, efactor=8, kind=kind)
+        services[tenant] = GraphService(
+            g,
+            n_workers=args.workers,
+            delta=args.delta,
+            batch_size=args.batch_size,
+            min_chunk=args.min_chunk,
+            algos=(algo,),
+            queue_capacity=args.queue_capacity,
+        )
+    return services
+
+
+def sustained(report: dict, p99_threshold: float) -> bool:
+    return (
+        report["rejected"] == 0
+        and report["unconverged"] == 0
+        and report["completed"] == report["offered"]
+        and report["p99_rounds"] <= p99_threshold
+    )
+
+
+def check_bit_identity(services: dict, results: list, sample: int = 4) -> bool:
+    """Slotted-in answers == fresh Q=1 ``solve_batch`` of the same query."""
+    for r in results[:sample]:
+        service = services[r.graph]
+        solver = service.solver(r.algo)
+        g = service.graph
+        if r.algo == "sssp":
+            ref = solve_batch(solver, multi_source_x0(g, [r.payload]))
+        else:
+            x0 = np.full((1, g.n), 1.0 / g.n, np.float32)
+            ref = solve_batch(
+                solver, x0, q=ppr_teleport(g, [r.payload], service.damping)
+            )
+        if not np.array_equal(r.x, ref.x[0]):
+            return False
+    return True
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--scale", type=int, default=8, help="log2 vertices per tenant")
+    ap.add_argument("--workers", type=int, default=4)
+    ap.add_argument("--delta", type=int, default=32)
+    ap.add_argument("--batch-size", type=int, default=4)
+    ap.add_argument("--min-chunk", type=int, default=8)
+    ap.add_argument("--queue-capacity", type=int, default=16)
+    ap.add_argument("--duration", type=float, default=400.0, help="arrival window")
+    ap.add_argument("--seed", type=int, default=7)
+    ap.add_argument(
+        "--rates",
+        default="0.02,0.03,0.05,0.08,0.12,0.16",
+        help="offered loads to sweep, queries per round (comma list)",
+    )
+    ap.add_argument(
+        "--p99-threshold",
+        type=float,
+        default=60.0,
+        help="p99 latency bar (round-clock units) defining a sustained load",
+    )
+    ap.add_argument(
+        "--trace",
+        default=None,
+        help="replay committed traces instead of generating (the CI path)",
+    )
+    ap.add_argument(
+        "--write-trace",
+        default=None,
+        help="save the generated traces here (commit for CI replay)",
+    )
+    ap.add_argument("--out", default=str(RESULTS / "serve_load.json"))
+    args = ap.parse_args(argv)
+
+    if args.trace:
+        traces = load_traces(args.trace)
+    else:
+        rates = [float(r) for r in args.rates.split(",")]
+        n_v = {t: 2**args.scale for t in TENANTS}
+        traces = [
+            poisson_trace(
+                rate,
+                args.duration,
+                n_v,
+                seed=args.seed,
+                graph_for={algo: (t,) for t, (algo, _) in TENANTS.items()},
+            )
+            for rate in rates
+        ]
+        if args.write_trace:
+            save_traces(args.write_trace, traces)
+            print(f"wrote {len(traces)} traces -> {args.write_trace}")
+
+    sweep = []
+    bit_identical = True
+    for trace in traces:
+        services = build_services(args)
+        sched = ContinuousScheduler(services, queue_capacity=args.queue_capacity)
+        cont = replay_continuous(sched, trace)
+        bit_identical &= check_bit_identity(services, cont["results"])
+        fixed = replay_fixed(
+            build_services(args),
+            trace,
+            batch_size=args.batch_size,
+            queue_capacity=args.queue_capacity,
+        )
+        row = {
+            "rate": trace.rate,
+            "offered": len(trace.events),
+            "continuous": cont["report"],
+            "fixed": fixed["report"],
+            "continuous_sustained": sustained(cont["report"], args.p99_threshold),
+            "fixed_sustained": sustained(fixed["report"], args.p99_threshold),
+        }
+        sweep.append(row)
+        print(
+            f"rate={trace.rate:g} offered={row['offered']:4d}  "
+            f"continuous: p99={cont['report']['p99_rounds']:8.1f} "
+            f"shed={cont['report']['rejected']:3d} "
+            f"{'OK ' if row['continuous_sustained'] else 'sat'}  |  "
+            f"fixed: p99={fixed['report']['p99_rounds']:8.1f} "
+            f"shed={fixed['report']['rejected']:3d} "
+            f"{'OK' if row['fixed_sustained'] else 'sat'}"
+        )
+
+    max_cont = max(
+        (r["rate"] for r in sweep if r["continuous_sustained"]), default=0.0
+    )
+    max_fixed = max((r["rate"] for r in sweep if r["fixed_sustained"]), default=0.0)
+    summary = {
+        "p99_threshold_rounds": args.p99_threshold,
+        "max_load_continuous": max_cont,
+        "max_load_fixed": max_fixed,
+        # the tentpole claim, enforced by check_regression as a boolean
+        "continuous_sustains_higher_load": max_cont > max_fixed,
+        "slot_in_bit_identical": bool(bit_identical),
+    }
+    print(
+        f"max sustained load: continuous={max_cont:g} fixed={max_fixed:g} "
+        f"(p99 <= {args.p99_threshold:g} rounds)  "
+        f"bit-identical={summary['slot_in_bit_identical']}"
+    )
+    report = {
+        "config": {
+            "scale": args.scale,
+            "batch_size": args.batch_size,
+            "queue_capacity": args.queue_capacity,
+            "delta": args.delta,
+            "n_traces": len(traces),
+        },
+        "sweep": sweep,
+        "summary": summary,
+    }
+    write_json_atomic(args.out, report)
+    print(f"wrote {args.out}")
+    return report
+
+
+if __name__ == "__main__":
+    main()

@@ -15,7 +15,7 @@ from __future__ import annotations
 
 from repro.core.engine import MIN_CHUNK, EngineResult
 from repro.graphs.formats import CSRGraph
-from repro.solve import Solver, cc_problem, resolve_legacy_args
+from repro.solve import Solver, cc_problem
 
 __all__ = ["connected_components", "cc_problem"]
 
@@ -23,15 +23,12 @@ __all__ = ["connected_components", "cc_problem"]
 def connected_components(
     graph: CSRGraph,
     P: int = 8,
-    mode: str | None = None,
-    delta=None,
+    delta="auto",
     max_rounds: int = 10_000,
-    host_loop: bool | None = None,
     min_chunk: int | None = None,
     backend: str | None = None,
 ) -> EngineResult:
     """Label propagation with ``P`` workers and commit period ``delta``."""
-    delta, backend = resolve_legacy_args(mode, delta, host_loop, backend)
     solver = Solver(
         graph,
         cc_problem(max_rounds=max_rounds),

@@ -18,7 +18,7 @@ import numpy as np
 
 from repro.core.engine import MIN_CHUNK, EngineResult
 from repro.graphs.formats import CSRGraph
-from repro.solve import Solver, jacobi_problem, resolve_legacy_args
+from repro.solve import Solver, jacobi_problem
 
 __all__ = ["jacobi_solve", "jacobi_graph", "jacobi_problem"]
 
@@ -46,16 +46,13 @@ def jacobi_solve(
     diag: np.ndarray,
     b: np.ndarray,
     P: int = 8,
-    mode: str | None = None,
-    delta=None,
+    delta="auto",
     tol: float = 1e-6,
     max_rounds: int = 5000,
-    host_loop: bool | None = None,
     min_chunk: int | None = None,
     backend: str | None = None,
 ) -> EngineResult:
     """Solve ``A x = b``; A given as off-diagonal COO + diagonal vector."""
-    delta, backend = resolve_legacy_args(mode, delta, host_loop, backend)
     graph = jacobi_graph(n, offdiag_rows, offdiag_cols, offdiag_vals, diag)
     solver = Solver(
         graph,

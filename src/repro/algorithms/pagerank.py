@@ -8,16 +8,16 @@ teleport term.  Convergence follows the paper: total absolute score change
 across vertices ≤ 1e-4.
 
 The problem spec lives in :func:`repro.solve.pagerank_problem`; this wrapper
-is back-compat sugar over :class:`repro.solve.Solver`.  ``mode=`` and
-``host_loop=`` are deprecated — pass ``delta='sync'|'async'|'auto'|<int>``
-and ``backend='host'|'jit'|'sharded'`` instead.
+is back-compat sugar over :class:`repro.solve.Solver`.  Pass
+``delta='sync'|'async'|'auto'|<int>`` and
+``backend='host'|'jit'|'sharded'`` to pick the schedule and execution path.
 """
 
 from __future__ import annotations
 
 from repro.core.engine import MIN_CHUNK, EngineResult
 from repro.graphs.formats import CSRGraph
-from repro.solve import Solver, pagerank_problem, resolve_legacy_args
+from repro.solve import Solver, pagerank_problem
 
 __all__ = ["pagerank", "pagerank_problem"]
 
@@ -25,17 +25,14 @@ __all__ = ["pagerank", "pagerank_problem"]
 def pagerank(
     graph: CSRGraph,
     P: int = 8,
-    mode: str | None = None,
-    delta=None,
+    delta="auto",
     damping: float = 0.85,
     tol: float = 1e-4,
     max_rounds: int = 1000,
-    host_loop: bool | None = None,
     min_chunk: int | None = None,
     backend: str | None = None,
 ) -> EngineResult:
     """Run PageRank with ``P`` workers and commit period ``delta``."""
-    delta, backend = resolve_legacy_args(mode, delta, host_loop, backend)
     solver = Solver(
         graph,
         pagerank_problem(damping=damping, tol=tol, max_rounds=max_rounds),

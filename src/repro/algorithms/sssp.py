@@ -16,7 +16,7 @@ from __future__ import annotations
 
 from repro.core.engine import MIN_CHUNK, EngineResult
 from repro.graphs.formats import CSRGraph
-from repro.solve import Solver, resolve_legacy_args, sssp_problem
+from repro.solve import Solver, sssp_problem
 
 __all__ = ["sssp", "sssp_problem"]
 
@@ -25,15 +25,12 @@ def sssp(
     graph: CSRGraph,
     source: int = 0,
     P: int = 8,
-    mode: str | None = None,
-    delta=None,
+    delta="auto",
     max_rounds: int = 10_000,
-    host_loop: bool | None = None,
     min_chunk: int | None = None,
     backend: str | None = None,
 ) -> EngineResult:
     """Bellman-Ford from ``source`` with ``P`` workers and commit period δ."""
-    delta, backend = resolve_legacy_args(mode, delta, host_loop, backend)
     solver = Solver(
         graph,
         sssp_problem(source=source, max_rounds=max_rounds),

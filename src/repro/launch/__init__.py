@@ -1,0 +1,33 @@
+# repro.launch: entry points (serve_graph, dryrun, train) plus the serving
+# tier's typed API.  Only the dependency-light wire types import eagerly —
+# GraphService and ContinuousScheduler resolve lazily so `import repro.launch`
+# stays cheap and cycle-free (repro.solve re-exports these same types).
+from repro.launch.service.types import (
+    Admission,
+    ClassPolicy,
+    QueryRequest,
+    QueryResult,
+)
+
+__all__ = [
+    "Admission",
+    "ClassPolicy",
+    "ContinuousScheduler",
+    "GraphService",
+    "QueryRequest",
+    "QueryResult",
+]
+
+_LAZY = {
+    "GraphService": ("repro.launch.serve_graph", "GraphService"),
+    "ContinuousScheduler": ("repro.launch.service.scheduler", "ContinuousScheduler"),
+}
+
+
+def __getattr__(name):
+    entry = _LAZY.get(name)
+    if entry is None:
+        raise AttributeError(f"module 'repro.launch' has no attribute {name!r}")
+    import importlib
+
+    return getattr(importlib.import_module(entry[0]), entry[1])

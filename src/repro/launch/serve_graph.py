@@ -1,11 +1,13 @@
-"""Batched graph-query serving from a warm solver cache.
+"""Graph-query serving from a warm solver cache, behind a typed API.
 
 The serving-scale scenario: one resident graph, many concurrent queries.
 :class:`GraphService` keeps one warm :class:`repro.solve.Solver` per problem
-family; every batch of queries reuses the cached stripe schedule and compiled
-loop, so steady-state latency is pure device execution — the first batch pays
-schedule build + compile, every later batch pays neither.  Queries are padded
-to a fixed batch size so the compiled shape never changes.
+family and serves queries through the continuous-batching tier
+(:mod:`repro.launch.service`): requests are typed
+:class:`~repro.launch.service.types.QueryRequest` objects, admitted into a
+bounded queue and slotted into fixed-capacity in-flight batches as converged
+queries retire — the first quantum pays schedule build + compile, every later
+quantum pays neither, and nobody waits for a full batch to form.
 
 Example::
 
@@ -17,31 +19,36 @@ Example::
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
+import warnings
 
 import numpy as np
 
 from repro.core.engine import MIN_CHUNK
 from repro.graphs.formats import CSRGraph
 from repro.graphs.generators import make_graph
-from repro.solve import (
-    Solver,
-    multi_source_x0,
-    ppr_problem,
-    ppr_teleport,
-    solve_batch,
-    sssp_problem,
+from repro.launch.service.types import (
+    DEFAULT_CLASSES,
+    Admission,
+    ClassPolicy,
+    QueryRequest,
+    QueryResult,
 )
+from repro.solve import Solver, ppr_problem, sssp_problem
 
 __all__ = ["GraphService", "main"]
 
 
 class GraphService:
-    """Answers batched SSSP / personalized-PageRank queries on one graph.
+    """Answers SSSP / personalized-PageRank queries on one resident graph.
 
-    ``batch_size`` is part of the compiled shape: shorter query lists are
-    padded (by repeating the last query) and the padding is stripped from the
-    reply, so a single compiled loop serves every request.
+    The public surface is the typed request/response API: :meth:`submit` a
+    :class:`QueryRequest` (constant-time admission or a reasoned rejection),
+    then :meth:`drain` (or :meth:`pump` one quantum at a time) to collect
+    :class:`QueryResult` rows as queries converge.  ``batch_size`` slots per
+    ``(algo, class)`` lane are part of the compiled shape; free slots ride
+    along pre-converged, so one compiled loop serves every occupancy.
 
     ``damping`` is a property of the *service*, not the request: it must
     match the damping baked into the graph's pagerank edge values
@@ -53,17 +60,20 @@ class GraphService:
     frontier HBM traffic on a single device); ``backend="sharded"`` serves
     through the ``shard_map`` engine spanning the worker mesh
     (``frontier="halo"`` keeps the frontier sharded with halo-exchange
-    commits — graphs larger than one device); ``compact_every`` shrinks each
-    batch to its unconverged queries every that many rounds so one straggler
-    query stops taxing the whole batch.
+    commits — graphs larger than one device); ``compact_every`` sets the
+    scheduling quantum in rounds (how often converged queries retire and
+    queued ones slot in) for every request class.
 
     ``cache_dir`` makes the warm state survive the *process*: each solver
     persists its stripe schedules, δ-model, and AOT-exported executables to
     the content-addressed store (:mod:`repro.persist`), so a restarted
-    service pointed at the same directory serves its first batch with zero
+    service pointed at the same directory serves its first quantum with zero
     stripe builds and zero retraces; ``reprobe_every=N`` keeps refitting the
     δ-model from the observations production solves log there, migrating
     ``delta="auto"`` services to the measured-best δ* as traffic accumulates.
+
+    ``sssp(sources)`` / ``ppr(seeds)`` remain as deprecated sugar over
+    submit/drain (any query count — longer lists split across queue slots).
     """
 
     def __init__(
@@ -79,6 +89,9 @@ class GraphService:
         compact_every: int | None = None,
         cache_dir=None,
         reprobe_every: int | None = None,
+        queue_capacity: int = 64,
+        classes: dict[str, ClassPolicy] | None = None,
+        algos: tuple[str, ...] = ("sssp", "ppr"),
     ):
         self.graph = graph
         self.n_workers = n_workers
@@ -91,8 +104,12 @@ class GraphService:
         self.compact_every = compact_every
         self.cache_dir = cache_dir
         self.reprobe_every = reprobe_every
+        self.queue_capacity = queue_capacity
+        self.classes = classes
+        self.algos = tuple(algos)
         self._solvers: dict[str, Solver] = {}
-        self._ppr_x0 = None  # constant (batch_size, n) uniform tile, built once
+        self._scheduler = None
+        self._unclaimed: list[QueryResult] = []
 
     def solver(self, name: str) -> Solver:
         """The warm per-problem solver (built on first use, then cached)."""
@@ -116,37 +133,102 @@ class GraphService:
             self._solvers[name] = sv
         return sv
 
-    def _solve(self, name: str, x0_batch, q=None):
-        return solve_batch(
-            self.solver(name), x0_batch, q=q, compact_every=self.compact_every
-        )
+    # ------------------------------------------------------ typed surface #
+    @property
+    def scheduler(self):
+        """The service's own single-tenant :class:`ContinuousScheduler`."""
+        if self._scheduler is None:
+            from repro.launch.service.scheduler import ContinuousScheduler
 
-    def _pad(self, arr: np.ndarray) -> tuple[np.ndarray, int]:
-        k = arr.shape[0]
-        if k > self.batch_size:
-            raise ValueError(f"{k} queries > batch_size {self.batch_size}")
-        if k < self.batch_size:
-            pad = np.repeat(arr[-1:], self.batch_size - k, axis=0)
-            arr = np.concatenate([arr, pad], axis=0)
-        return arr, k
+            classes = self.classes
+            if classes is None and self.compact_every is not None:
+                # legacy knob: one quantum length for every request class
+                classes = {
+                    name: dataclasses.replace(p, slot_rounds=self.compact_every)
+                    for name, p in DEFAULT_CLASSES.items()
+                }
+            self._scheduler = ContinuousScheduler(
+                {"default": self},
+                classes=classes,
+                queue_capacity=self.queue_capacity,
+            )
+        return self._scheduler
+
+    def submit(self, req: QueryRequest) -> Admission:
+        """Admit one request (or reject with a reason) — never blocks."""
+        return self.scheduler.submit(req)
+
+    def pump(self) -> list[QueryResult]:
+        """Run one scheduling quantum; return the queries that retired."""
+        results = self._unclaimed + self.scheduler.pump()
+        self._unclaimed = []
+        return results
+
+    def drain(self) -> list[QueryResult]:
+        """Pump until queue and lanes are empty; return everything retired."""
+        results = self._unclaimed + self.scheduler.drain()
+        self._unclaimed = []
+        return results
+
+    # ------------------------------------------------- deprecated surface #
+    def _legacy_query(self, algo: str, ids) -> np.ndarray:
+        ids = np.asarray(ids, np.int64)
+        if ids.ndim != 1:
+            raise ValueError(f"expected a 1-D query list, got shape {ids.shape}")
+        if ids.size == 0:
+            raise ValueError("empty query list")
+        wanted: list[str] = []
+        collected: dict[str, QueryResult] = {}
+
+        def take(results):
+            for r in results:
+                if r.request_id in taken_ids:
+                    collected[r.request_id] = r
+                else:  # a typed-API caller's request — hold for their drain()
+                    self._unclaimed.append(r)
+
+        taken_ids: set[str] = set()
+        for v in ids:
+            while True:
+                adm = self.scheduler.submit(QueryRequest(algo=algo, payload=int(v)))
+                if adm.accepted:
+                    wanted.append(adm.request_id)
+                    taken_ids.add(adm.request_id)
+                    break
+                if adm.reason != "queue_full":
+                    raise ValueError(f"query rejected: {adm.reason}")
+                take(self.scheduler.pump())  # free queue slots, then retry
+        while len(collected) < len(wanted):
+            take(self.scheduler.pump())
+        return np.stack([collected[rid].x for rid in wanted])
 
     def sssp(self, sources) -> np.ndarray:
-        """(k, n) int32 distance rows, one per source, in one lowering."""
-        sources, k = self._pad(np.atleast_1d(np.asarray(sources, np.int64)))
-        res = self._solve("sssp", multi_source_x0(self.graph, sources))
-        return res.x[:k]
+        """(k, n) int32 distance rows, one per source.
+
+        .. deprecated:: use ``submit(QueryRequest(algo="sssp", payload=s))``
+           + ``drain()``.
+        """
+        warnings.warn(
+            "GraphService.sssp() is deprecated; use "
+            "submit(QueryRequest(algo='sssp', payload=...)) + drain()",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        return self._legacy_query("sssp", sources)
 
     def ppr(self, seeds) -> np.ndarray:
-        """(k, n) float32 personalized-PageRank rows, one per seed."""
-        seeds, k = self._pad(np.atleast_1d(np.asarray(seeds, np.int64)))
-        if self._ppr_x0 is None:
-            self._ppr_x0 = np.full(
-                (self.batch_size, self.graph.n), 1.0 / self.graph.n, np.float32
-            )
-        res = self._solve(
-            "ppr", self._ppr_x0, q=ppr_teleport(self.graph, seeds, self.damping)
+        """(k, n) float32 personalized-PageRank rows, one per seed.
+
+        .. deprecated:: use ``submit(QueryRequest(algo="ppr", payload=s))``
+           + ``drain()``.
+        """
+        warnings.warn(
+            "GraphService.ppr() is deprecated; use "
+            "submit(QueryRequest(algo='ppr', payload=...)) + drain()",
+            DeprecationWarning,
+            stacklevel=2,
         )
-        return res.x[:k]
+        return self._legacy_query("ppr", seeds)
 
     def stats(self) -> dict:
         return {name: dict(sv.stats) for name, sv in self._solvers.items()}
@@ -160,8 +242,8 @@ def main(argv=None) -> dict:
     ap.add_argument("--workers", type=int, default=8)
     ap.add_argument("--delta", default="auto", help="'auto', 'sync', 'async', or int")
     ap.add_argument("--algo", choices=["sssp", "ppr", "both"], default="both")
-    ap.add_argument("--queries", type=int, default=8, help="batch size Q")
-    ap.add_argument("--repeats", type=int, default=3, help="batches per algo")
+    ap.add_argument("--queries", type=int, default=8, help="batch capacity Q")
+    ap.add_argument("--repeats", type=int, default=3, help="waves per algo")
     ap.add_argument("--min-chunk", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--backend", choices=["jit", "pallas", "sharded"], default="jit")
@@ -170,7 +252,7 @@ def main(argv=None) -> dict:
         "--compact-every",
         type=int,
         default=None,
-        help="straggler compaction period in rounds (default: off)",
+        help="scheduling quantum in rounds (default: per-class policy)",
     )
     ap.add_argument(
         "--cache-dir",
@@ -213,14 +295,20 @@ def main(argv=None) -> dict:
             compact_every=args.compact_every,
             cache_dir=args.cache_dir,
             reprobe_every=args.reprobe_every,
+            queue_capacity=max(64, args.queries),
+            algos=(algo,),
         )
         lat = []
         for rep in range(args.repeats):
             qids = rng.integers(0, g.n, args.queries)
             t0 = time.perf_counter()
-            out = getattr(service, algo)(qids)
+            for v in qids:
+                adm = service.submit(QueryRequest(algo=algo, payload=int(v)))
+                assert adm.accepted, adm.reason
+            out = service.drain()
             lat.append(time.perf_counter() - t0)
-            assert out.shape == (args.queries, g.n)
+            assert len(out) == args.queries
+            assert all(r.x.shape == (g.n,) for r in out)
         sv = service.solver(algo)
         warm = f"{min(lat[1:]) * 1e3:.1f} ms" if len(lat) > 1 else "n/a (1 repeat)"
         print(

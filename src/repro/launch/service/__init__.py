@@ -1,0 +1,43 @@
+# The continuous-batching serving tier: typed request/response API
+# (types.py), admission queue + lanes over BatchStepper (scheduler.py), and
+# the open-loop Poisson load generator / trace replay harness (loadgen.py).
+# GraphService (repro.launch.serve_graph) is the per-graph facade; a
+# ContinuousScheduler serves several of them in one process.
+from repro.launch.service.types import (
+    DEFAULT_CLASSES,
+    Admission,
+    ClassPolicy,
+    QueryRequest,
+    QueryResult,
+    default_class_for,
+)
+from repro.launch.service.scheduler import AdmissionQueue, ContinuousScheduler
+from repro.launch.service.loadgen import (
+    Trace,
+    TraceEvent,
+    load_traces,
+    poisson_trace,
+    replay_continuous,
+    replay_fixed,
+    save_traces,
+    summarize,
+)
+
+__all__ = [
+    "Admission",
+    "AdmissionQueue",
+    "ClassPolicy",
+    "ContinuousScheduler",
+    "DEFAULT_CLASSES",
+    "QueryRequest",
+    "QueryResult",
+    "Trace",
+    "TraceEvent",
+    "default_class_for",
+    "load_traces",
+    "poisson_trace",
+    "replay_continuous",
+    "replay_fixed",
+    "save_traces",
+    "summarize",
+]

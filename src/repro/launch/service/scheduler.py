@@ -1,0 +1,339 @@
+"""Continuous-batching scheduler: admission queue → lanes → retirement.
+
+The serving loop the LM-inference playbook prescribes, applied to graph
+queries: requests are admitted into a bounded FIFO queue, slotted into
+fixed-capacity in-flight batches (*lanes*) as converged queries retire at
+scheduling-quantum boundaries, and returned the moment **they** converge —
+no barrier on batch boundaries, no slow query stalling the rest (the
+non-blocking-PageRank / Maiter insight at the scheduling level).
+
+One :class:`ContinuousScheduler` serves several resident
+:class:`~repro.launch.serve_graph.GraphService` solvers (multi-graph
+tenancy: ``QueryRequest.graph`` routes), and one *lane* exists per
+``(graph, algo, class)`` — a :class:`repro.solve.batch.BatchStepper` whose
+δ / backend / frontier / quantum come from the class's
+:class:`~repro.launch.service.types.ClassPolicy`, so cheap PPR lookups and
+deep SSSP traversals schedule independently while sharing the process.
+
+Time is counted in *rounds* (``clock_rounds``): every quantum advances the
+clock by the rounds it actually executed, which makes scheduling behavior —
+queue waits, retirement order, backpressure — deterministic and assertable
+in CI, independent of wall clock.  Wall-clock latency rides along in
+``QueryResult.latency_s``.
+"""
+
+from __future__ import annotations
+
+import time
+from collections import deque
+
+import numpy as np
+
+from repro.launch.service.types import (
+    DEFAULT_CLASSES,
+    Admission,
+    ClassPolicy,
+    QueryRequest,
+    QueryResult,
+    default_class_for,
+)
+from repro.solve.batch import BatchStepper
+from repro.solve.problem import multi_source_x0, ppr_teleport
+
+__all__ = ["AdmissionQueue", "ContinuousScheduler"]
+
+
+class AdmissionQueue:
+    """Bounded FIFO of ``(request_id, QueryRequest)`` — the backpressure valve.
+
+    One global queue, popped per lane in scan order, preserves FIFO within
+    every class; ``push`` on a full queue fails deterministically (the
+    caller turns that into a ``"queue_full"`` rejection).
+    """
+
+    def __init__(self, capacity: int):
+        if capacity < 1:
+            raise ValueError(f"queue capacity must be >= 1, got {capacity}")
+        self.capacity = capacity
+        self._q: deque[tuple[str, QueryRequest]] = deque()
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+    @property
+    def full(self) -> bool:
+        return len(self._q) >= self.capacity
+
+    def push(self, request_id: str, req: QueryRequest) -> bool:
+        if self.full:
+            return False
+        self._q.append((request_id, req))
+        return True
+
+    def items(self) -> tuple[tuple[str, QueryRequest], ...]:
+        """FIFO snapshot (for lane materialization / introspection)."""
+        return tuple(self._q)
+
+    def pop_where(self, pred, k: int) -> list[tuple[str, QueryRequest]]:
+        """Pop up to ``k`` entries matching ``pred``, preserving FIFO order."""
+        taken: list[tuple[str, QueryRequest]] = []
+        kept: deque[tuple[str, QueryRequest]] = deque()
+        while self._q:
+            item = self._q.popleft()
+            if len(taken) < k and pred(item[1]):
+                taken.append(item)
+            else:
+                kept.append(item)
+        self._q = kept
+        return taken
+
+
+class _Pending:
+    """Book-keeping for one accepted request while it waits / runs."""
+
+    __slots__ = (
+        "req",
+        "submitted_clock",
+        "submit_wall",
+        "admitted_clock",
+        "admit_seq",
+    )
+
+    def __init__(self, req: QueryRequest, clock: int, wall: float):
+        self.req = req
+        self.submitted_clock = clock
+        self.submit_wall = wall
+        self.admitted_clock = -1
+        self.admit_seq = -1
+
+
+class _Lane:
+    """One in-flight open batch: ``(graph, algo, class)`` → BatchStepper."""
+
+    def __init__(self, service, algo: str, policy: ClassPolicy):
+        self.service = service
+        self.algo = algo
+        self.policy = policy
+        self.stepper = BatchStepper(
+            service.solver(algo),
+            capacity=service.batch_size,
+            delta=policy.delta,
+            backend=policy.backend,
+            frontier=policy.frontier,
+            max_rounds=policy.max_rounds,
+        )
+
+    def admit(self, request_id: str, req: QueryRequest):
+        g = self.service.graph
+        if req.algo == "sssp":
+            self.stepper.admit(multi_source_x0(g, [req.payload])[0], tag=request_id)
+        elif req.algo == "ppr":
+            x0 = np.full(g.n, 1.0 / g.n, np.float32)
+            q = ppr_teleport(g, [req.payload], self.service.damping)[0]
+            self.stepper.admit(x0, q=q, tag=request_id)
+        else:  # pre-validated in submit(); defensive for direct callers
+            raise ValueError(f"unsupported algo {req.algo!r}")
+
+    def run_quantum(self):
+        return self.stepper.run(self.policy.slot_rounds)
+
+
+class ContinuousScheduler:
+    """Admission queue + continuous batching over resident graph services.
+
+    * ``services`` — one :class:`GraphService` or a ``{tenant: service}``
+      mapping (multi-graph tenancy; requests route by ``req.graph``).
+    * ``classes``  — request-class policies, overlaid on
+      :data:`~repro.launch.service.types.DEFAULT_CLASSES`.
+    * ``queue_capacity`` — bound on queued (not yet slotted-in) requests;
+      beyond it :meth:`submit` rejects with ``"queue_full"``.
+
+    ``submit()`` answers immediately with an :class:`Admission`;
+    :meth:`pump` executes one scheduling quantum across all lanes (slot in
+    from the queue, run, retire); :meth:`drain` pumps until idle and returns
+    every completed :class:`QueryResult`.  All scheduling state advances in
+    deterministic round-clock time.
+    """
+
+    def __init__(
+        self,
+        services,
+        *,
+        classes: dict[str, ClassPolicy] | None = None,
+        queue_capacity: int = 64,
+    ):
+        if not isinstance(services, dict):
+            services = {"default": services}
+        if not services:
+            raise ValueError("at least one resident GraphService is required")
+        self.services = dict(services)
+        self.classes = dict(DEFAULT_CLASSES)
+        if classes:
+            self.classes.update(classes)
+        self.queue = AdmissionQueue(queue_capacity)
+        self._lanes: dict[tuple[str, str, str], _Lane] = {}
+        self._pending: dict[str, _Pending] = {}
+        self._next_id = 0
+        self._next_admit_seq = 0
+        self.clock_rounds = 0
+        self.counters = {
+            "submitted": 0,
+            "accepted": 0,
+            "rejected": 0,
+            "completed": 0,
+            "unconverged": 0,
+            "pumps": 0,
+        }
+        self.rejections: dict[str, int] = {}
+
+    # ------------------------------------------------------------ submit #
+    def _reject(self, reason: str) -> Admission:
+        self.counters["rejected"] += 1
+        self.rejections[reason] = self.rejections.get(reason, 0) + 1
+        return Admission(accepted=False, reason=reason, queue_depth=len(self.queue))
+
+    def resolve_class(self, req: QueryRequest) -> str:
+        cls = req.request_class
+        return default_class_for(req.algo) if cls == "auto" else cls
+
+    def submit(self, req: QueryRequest) -> Admission:
+        """Admit or reject one request — constant-time, never blocks."""
+        self.counters["submitted"] += 1
+        service = self.services.get(req.graph)
+        if service is None:
+            return self._reject("unknown_graph")
+        if req.algo not in getattr(service, "algos", ("sssp", "ppr")):
+            return self._reject("unsupported_algo")
+        if self.resolve_class(req) not in self.classes:
+            return self._reject("unknown_class")
+        payload = int(req.payload)
+        if not 0 <= payload < service.graph.n:
+            return self._reject("payload_out_of_range")
+        if self.queue.full:
+            return self._reject("queue_full")
+        request_id = f"q{self._next_id:06d}"
+        self._next_id += 1
+        self._pending[request_id] = _Pending(
+            req, self.clock_rounds, time.perf_counter()
+        )
+        self.queue.push(request_id, req)
+        self.counters["accepted"] += 1
+        return Admission(
+            accepted=True, request_id=request_id, queue_depth=len(self.queue)
+        )
+
+    # -------------------------------------------------------------- pump #
+    def _lane_for(self, req: QueryRequest) -> _Lane:
+        key = (req.graph, req.algo, self.resolve_class(req))
+        lane = self._lanes.get(key)
+        if lane is None:
+            lane = _Lane(self.services[req.graph], req.algo, self.classes[key[2]])
+            self._lanes[key] = lane
+        return lane
+
+    def _admit_from_queue(self):
+        """Slot queued requests into free lane slots, FIFO within class."""
+        # Materialize lanes for whatever is queued (deterministic creation
+        # order: queue scan order), then fill each lane's free slots.
+        for _, req in self.queue.items():
+            self._lane_for(req)
+        for key, lane in self._lanes.items():
+            free = lane.stepper.free_slots
+            if free == 0:
+                continue
+            graph, algo, cls = key
+
+            def match(r, g=graph, a=algo, c=cls):
+                return r.graph == g and r.algo == a and self.resolve_class(r) == c
+
+            for request_id, req in self.queue.pop_where(match, free):
+                lane.admit(request_id, req)
+                pend = self._pending[request_id]
+                pend.admitted_clock = self.clock_rounds
+                pend.admit_seq = self._next_admit_seq
+                self._next_admit_seq += 1
+
+    def pump(self) -> list[QueryResult]:
+        """One scheduling quantum: slot in, run every active lane, retire."""
+        self.counters["pumps"] += 1
+        self._admit_from_queue()
+        results: list[QueryResult] = []
+        for lane in self._lanes.values():
+            if lane.stepper.occupancy == 0:
+                continue
+            before = lane.stepper.rounds_executed
+            retired = lane.run_quantum()
+            self.clock_rounds += lane.stepper.rounds_executed - before
+            for row in retired:
+                pend = self._pending.pop(row.tag)
+                self.counters["completed"] += 1
+                if not row.converged:
+                    self.counters["unconverged"] += 1
+                results.append(
+                    QueryResult(
+                        request_id=row.tag,
+                        algo=pend.req.algo,
+                        graph=pend.req.graph,
+                        request_class=self.resolve_class(pend.req),
+                        payload=int(pend.req.payload),
+                        x=row.x,
+                        rounds=row.rounds,
+                        converged=row.converged,
+                        residual=row.residual,
+                        delta=lane.stepper.sched.delta,
+                        backend=lane.stepper.backend,
+                        admit_seq=pend.admit_seq,
+                        submitted_clock=pend.submitted_clock,
+                        admitted_clock=pend.admitted_clock,
+                        finished_clock=self.clock_rounds,
+                        latency_s=time.perf_counter() - pend.submit_wall,
+                    )
+                )
+        return results
+
+    def advance_clock(self, to_rounds: int):
+        """Fast-forward the round clock across an idle gap (load replay)."""
+        self.clock_rounds = max(self.clock_rounds, int(to_rounds))
+
+    # ------------------------------------------------------------- drain #
+    @property
+    def in_flight(self) -> int:
+        return sum(lane.stepper.occupancy for lane in self._lanes.values())
+
+    @property
+    def idle(self) -> bool:
+        return len(self.queue) == 0 and self.in_flight == 0
+
+    def drain(self, max_pumps: int = 100_000) -> list[QueryResult]:
+        """Pump until queue and lanes are empty; return everything retired."""
+        results: list[QueryResult] = []
+        pumps = 0
+        while not self.idle:
+            if pumps >= max_pumps:
+                raise RuntimeError(
+                    f"drain did not settle within {max_pumps} pumps "
+                    f"(queue={len(self.queue)}, in_flight={self.in_flight})"
+                )
+            results.extend(self.pump())
+            pumps += 1
+        return results
+
+    def stats(self) -> dict:
+        return {
+            "clock_rounds": self.clock_rounds,
+            "queue_depth": len(self.queue),
+            "in_flight": self.in_flight,
+            "counters": dict(self.counters),
+            "rejections": dict(self.rejections),
+            "lanes": {
+                "/".join(key): {
+                    "occupancy": lane.stepper.occupancy,
+                    "capacity": lane.stepper.capacity,
+                    "delta": lane.stepper.sched.delta,
+                    "backend": lane.stepper.backend,
+                    "rounds_executed": lane.stepper.rounds_executed,
+                    "quanta": lane.stepper.quanta,
+                }
+                for key, lane in self._lanes.items()
+            },
+        }

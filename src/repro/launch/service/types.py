@@ -1,0 +1,142 @@
+"""Typed request/response surface of the continuous-batching serving tier.
+
+Nothing here imports the solver stack — these are the wire types a client
+holds: a :class:`QueryRequest` goes in, an :class:`Admission` comes back
+immediately (accepted with an id, or rejected with a reason — that is the
+backpressure contract), and a :class:`QueryResult` comes out of
+``drain()``/``pump()`` when the query retires from its batch.
+
+Request *classes* decouple scheduling policy from the algorithm: a
+:class:`ClassPolicy` names the δ / backend / frontier the class's lane
+solves with and the scheduling quantum (``slot_rounds``) at which its lane
+retires finished queries and slots in waiting ones.  ``"auto"`` routes
+cheap point-lookups (PPR) to the ``"cheap"`` class and whole-graph traversals
+(SSSP) to ``"deep"``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+__all__ = [
+    "Admission",
+    "ClassPolicy",
+    "DEFAULT_CLASSES",
+    "QueryRequest",
+    "QueryResult",
+    "default_class_for",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class QueryRequest:
+    """One serving query: which algorithm, on which resident graph, from where.
+
+    * ``algo``          — ``"sssp"`` (payload = source vertex) or ``"ppr"``
+      (payload = seed vertex).
+    * ``payload``       — the vertex id the query is parameterized by.
+    * ``request_class`` — scheduling class name, or ``"auto"`` to route by
+      algorithm (PPR → ``"cheap"``, SSSP → ``"deep"``).
+    * ``graph``         — tenant name; the scheduler owns several resident
+      :class:`~repro.launch.serve_graph.GraphService` solvers in one process.
+    """
+
+    algo: str
+    payload: int
+    request_class: str = "auto"
+    graph: str = "default"
+
+
+@dataclasses.dataclass(frozen=True)
+class Admission:
+    """Immediate answer to ``submit()`` — the backpressure contract.
+
+    ``accepted=False`` always carries a ``reason`` (``"queue_full"``,
+    ``"unknown_graph"``, ``"unsupported_algo"``, ``"unknown_class"``,
+    ``"payload_out_of_range"``); rejection is deterministic in the submit
+    sequence, never a timing accident.
+    """
+
+    accepted: bool
+    request_id: str | None = None
+    reason: str | None = None
+    queue_depth: int = 0
+
+
+@dataclasses.dataclass
+class QueryResult:
+    """One retired query: the answer plus its scheduling history.
+
+    Clock fields are in *rounds* (the scheduler's deterministic virtual
+    time); ``latency_s`` is the wall-clock from submit to retirement.
+    ``converged=False`` means the round budget ran out — the state is the
+    best iterate, flagged, never silently wrong.
+    """
+
+    request_id: str
+    algo: str
+    graph: str
+    request_class: str
+    payload: int  # the vertex the query was parameterized by
+    x: np.ndarray  # (n,) solution row, frozen at first convergence
+    rounds: int  # rounds to first convergence (this query alone)
+    converged: bool
+    residual: float
+    delta: int  # δ its lane solved with (class policy applied)
+    backend: str
+    admit_seq: int  # global admission order (FIFO audit)
+    submitted_clock: int  # scheduler clock (rounds) at submit
+    admitted_clock: int  # ... at slot-in
+    finished_clock: int  # ... at retirement
+    latency_s: float = 0.0
+
+    @property
+    def queue_rounds(self) -> int:
+        """Rounds spent waiting in the admission queue."""
+        return self.admitted_clock - self.submitted_clock
+
+    @property
+    def service_rounds(self) -> int:
+        """Rounds from slot-in to retirement (includes quantum granularity)."""
+        return self.finished_clock - self.admitted_clock
+
+
+@dataclasses.dataclass(frozen=True)
+class ClassPolicy:
+    """How one request class is solved and scheduled.
+
+    ``delta`` / ``backend`` / ``frontier`` default to the owning service's
+    construction values (``None`` = inherit); ``slot_rounds`` is the lane's
+    scheduling quantum — how many rounds run between retire/slot-in
+    boundaries.  Small quanta give admission latency and fast retirement at
+    the cost of more host sync points; large quanta amortize.
+    """
+
+    name: str
+    delta: object = None
+    backend: str | None = None
+    frontier: str | None = None
+    slot_rounds: int = 4
+    max_rounds: int | None = None
+
+    def __post_init__(self):
+        if self.slot_rounds < 1:
+            raise ValueError(f"slot_rounds must be >= 1, got {self.slot_rounds}")
+
+
+#: Default classes: interactive point lookups vs whole-graph traversals.
+#: Both inherit the service's δ/backend; they differ in scheduling quantum —
+#: the cheap lane retires (and admits) twice as often as the deep lane.
+DEFAULT_CLASSES: dict[str, ClassPolicy] = {
+    "cheap": ClassPolicy(name="cheap", slot_rounds=2),
+    "deep": ClassPolicy(name="deep", slot_rounds=8),
+}
+
+_AUTO_CLASS = {"ppr": "cheap", "sssp": "deep"}
+
+
+def default_class_for(algo: str) -> str:
+    """The class ``request_class="auto"`` resolves to for ``algo``."""
+    return _AUTO_CLASS.get(algo, "deep")

@@ -1,7 +1,7 @@
 # The unified Problem/Solver API — the single entry point everything routes
 # through: problem specs, backend selection, schedule+compile caching, and
 # batched multi-query solving.  See solve/README.md for the paper-term map.
-from repro.solve.batch import BatchResult, solve_batch
+from repro.solve.batch import BatchResult, BatchStepper, RetiredQuery, solve_batch
 from repro.solve.problem import (
     Problem,
     cc_problem,
@@ -15,13 +15,22 @@ from repro.solve.problem import (
     ppr_teleport,
     sssp_problem,
 )
-from repro.solve.solver import BACKENDS, FRONTIERS, Solver, resolve_legacy_args
+from repro.solve.solver import BACKENDS, FRONTIERS, Solver
+
+# Serving-tier wire types, re-exported for callers that speak the typed
+# request/response API.  Imported last: types.py is dependency-light, and by
+# now every repro.solve submodule it may transitively touch is initialized.
+from repro.launch.service.types import QueryRequest, QueryResult
 
 __all__ = [
     "BACKENDS",
     "FRONTIERS",
     "BatchResult",
+    "BatchStepper",
     "Problem",
+    "QueryRequest",
+    "QueryResult",
+    "RetiredQuery",
     "Solver",
     "cc_problem",
     "count_changed_residual",
@@ -32,7 +41,6 @@ __all__ = [
     "pagerank_problem",
     "ppr_problem",
     "ppr_teleport",
-    "resolve_legacy_args",
     "solve_batch",
     "sssp_problem",
 ]

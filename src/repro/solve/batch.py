@@ -33,7 +33,7 @@ import numpy as np
 
 from repro.core.engine import round_fn_pallas_q, round_fn_q
 
-__all__ = ["BatchResult", "solve_batch"]
+__all__ = ["BatchResult", "BatchStepper", "RetiredQuery", "solve_batch"]
 
 
 @dataclasses.dataclass
@@ -115,6 +115,277 @@ def _make_batch_solve_fn(rnd, residual_fn):
         return jax.lax.while_loop(cond, body, init)
 
     return solve_loop
+
+
+def _make_open_batch_solve_fn(rnd, residual_fn):
+    """``(X_ext, qb, conv0, tol, max_rounds) -> carry`` for an *open* batch.
+
+    Two deltas from :func:`_make_batch_solve_fn`, both load-bearing for
+    continuous batching:
+
+    * rows may start already-converged (``conv0``) — that is how empty queue
+      slots ride along in a fixed-shape compiled loop without blocking the
+      convergence test;
+    * a row **freezes at first convergence**: once its residual crosses tol
+      its state stops updating, so the value a slot retires with is exactly
+      the value a fresh ``solve_batch`` of that query alone would return —
+      bit-identical, regardless of how many extra rounds its batchmates need.
+    """
+    res_fn = jax.vmap(residual_fn, in_axes=(0, 0))
+
+    def solve_loop(X_ext, qb, conv0, tol, max_rounds):
+        def cond(carry):
+            _, _, rounds, converged, _ = carry
+            return jnp.logical_and(rounds < max_rounds, ~jnp.all(converged))
+
+        def body(carry):
+            X, res_prev, rounds, converged, rpq = carry
+            X_new = rnd(X, qb)
+            res = res_fn(X[:, :-1], X_new[:, :-1]).astype(jnp.float32)
+            just_converged = jnp.logical_and(~converged, res <= tol)
+            rpq = jnp.where(just_converged, rounds + 1, rpq)
+            X_keep = jnp.where(converged[:, None], X, X_new)
+            res_keep = jnp.where(converged, res_prev, res)
+            return X_keep, res_keep, rounds + 1, converged | (res <= tol), rpq
+
+        Q = X_ext.shape[0]
+        init = (
+            X_ext,
+            jnp.full((Q,), np.inf, jnp.float32),
+            jnp.asarray(0, jnp.int32),
+            conv0,
+            jnp.zeros((Q,), jnp.int32),
+        )
+        return jax.lax.while_loop(cond, body, init)
+
+    return solve_loop
+
+
+@dataclasses.dataclass
+class RetiredQuery:
+    """One slot retired from a :class:`BatchStepper` quantum."""
+
+    tag: object  # caller's identifier, passed through admit()
+    x: np.ndarray  # (n,) final state (frozen at first convergence)
+    rounds: int  # rounds to first convergence (total, across quanta)
+    converged: bool  # False = retired on the max_rounds budget
+    residual: float
+
+
+class BatchStepper:
+    """A fixed-capacity *open* batch: admit mid-flight, retire converged.
+
+    This is the continuous-batching primitive under
+    :mod:`repro.launch.service`.  Where :func:`solve_batch` answers one
+    closed set of queries, a stepper owns ``capacity`` slots of one compiled
+    loop and interleaves three operations:
+
+    * :meth:`admit` writes a query's initial state (and query params) into a
+      free slot;
+    * :meth:`run` executes one scheduling quantum — at most ``quantum``
+      rounds of the fused loop over **all** slots (free slots ride along
+      pre-converged, so the compiled shape never changes);
+    * converged slots (and slots out of round budget) retire from
+      :meth:`run` as :class:`RetiredQuery` rows, freeing their slots for
+      the next admissions.
+
+    Rows are row-independent under ``vmap`` and freeze at first convergence,
+    so a retired result is bit-identical to a fresh ``solve_batch`` of that
+    query alone — no matter when it slotted in or who shared the batch
+    (asserted in ``tests/test_serve_scheduler.py``).
+
+    The compiled loop is cached on the solver under
+    ``("batch", "open", backend, frontier, δ, capacity)`` and persists to the
+    store like every other executable, so a restarted service still serves
+    its first quantum with zero retraces.
+    """
+
+    def __init__(
+        self,
+        solver,
+        capacity: int,
+        *,
+        delta=None,
+        backend: str | None = None,
+        frontier: str | None = None,
+        tol=None,
+        max_rounds=None,
+    ):
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        backend = backend or (
+            solver.default_backend if solver.default_backend != "host" else "jit"
+        )
+        if backend == "host":  # host rounds are not vmappable; jit is the
+            backend = "jit"  # same XLA round iterated on-device
+        self.solver = solver
+        self.backend = backend
+        self.frontier = solver.resolve_frontier(frontier, backend)
+        self.sched = solver.schedule(delta)
+        self.capacity = capacity
+        self.tol = solver.tol if tol is None else tol
+        self.max_rounds = solver.max_rounds if max_rounds is None else max_rounds
+        sr = solver.problem.semiring
+        self._sr = sr
+        n = solver.graph.n
+        self._X = np.full((capacity, n + 1), sr.zero, dtype=sr.dtype)
+        if solver.problem.takes_query:
+            self._qb = None  # built from the first admitted row's structure
+        else:
+            self._qb = np.zeros((capacity,), np.int32)
+        self._occupied = np.zeros(capacity, bool)
+        self._tags: list = [None] * capacity
+        self._rounds_in = np.zeros(capacity, np.int64)
+        self.flushes = 0
+        self.flush_bytes = 0
+        self.rounds_executed = 0  # cumulative, across all quanta
+        self.quanta = 0
+        key_tail: tuple = ()
+        if backend == "sharded":
+            from repro.dist.compat import mesh_axis_sizes
+
+            key_tail = (mesh_axis_sizes(solver._default_mesh())[solver.mesh_axis],)
+        self._key = (
+            "batch",
+            "open",
+            backend,
+            self.frontier,
+            self.sched.delta,
+            capacity,
+        ) + key_tail
+        self._portable = key_tail in ((), (1,))
+
+    # -------------------------------------------------------------- slots #
+    @property
+    def occupancy(self) -> int:
+        return int(self._occupied.sum())
+
+    @property
+    def free_slots(self) -> int:
+        return self.capacity - self.occupancy
+
+    def admit(self, x0, q=None, tag=None) -> int:
+        """Write one query into a free slot; returns the slot index."""
+        free = np.nonzero(~self._occupied)[0]
+        if free.size == 0:
+            raise ValueError("no free slots (retire via run() first)")
+        slot = int(free[0])
+        x0 = np.asarray(x0, dtype=self._sr.dtype)
+        n = self.solver.graph.n
+        if x0.shape != (n,):
+            raise ValueError(f"x0 must have shape ({n},), got {x0.shape}")
+        self._X[slot, :n] = x0
+        self._X[slot, n] = self._sr.zero
+        if self.solver.problem.takes_query:
+            if q is None:
+                raise ValueError(
+                    f"problem {self.solver.problem.name!r} needs a per-row q="
+                )
+            if self._qb is None:
+                self._qb = jax.tree_util.tree_map(
+                    lambda leaf: np.zeros(
+                        (self.capacity,) + np.shape(leaf), np.asarray(leaf).dtype
+                    ),
+                    q,
+                )
+            leaves_b, leaves_q = (
+                jax.tree_util.tree_leaves(self._qb),
+                jax.tree_util.tree_leaves(q),
+            )
+            for dst, row in zip(leaves_b, leaves_q):
+                dst[slot] = row
+        elif q is not None:
+            raise ValueError(f"problem {self.solver.problem.name!r} takes no query")
+        self._occupied[slot] = True
+        self._tags[slot] = tag
+        self._rounds_in[slot] = 0
+        return slot
+
+    # ---------------------------------------------------------------- run #
+    def _compiled_loop(self, X_ext, qb, conv0, tol_a, rounds_a):
+        return self.solver.compile_cached(
+            self._key,
+            _make_open_batch_solve_fn(
+                _batched_round(self.solver, self.sched, self.backend, self.frontier),
+                self.solver.problem.residual,
+            ),
+            X_ext,
+            qb,
+            conv0,
+            tol_a,
+            rounds_a,
+            portable=self._portable,
+        )
+
+    def run(self, quantum: int) -> list[RetiredQuery]:
+        """One scheduling quantum: at most ``quantum`` rounds, then retire.
+
+        Returns the slots that finished this quantum (first convergence, or
+        the ``max_rounds`` budget exhausted — at quantum granularity).  No-op
+        on an empty batch.
+        """
+        if quantum < 1:
+            raise ValueError(f"quantum must be >= 1, got {quantum}")
+        occ = self._occupied
+        if not occ.any():
+            return []
+        sr = self._sr
+        t0 = time.perf_counter()
+        X_ext = jnp.asarray(self._X)
+        qb = jax.tree_util.tree_map(jnp.asarray, self._qb)
+        conv0 = jnp.asarray(~occ)
+        tol_a = jnp.asarray(self.tol, jnp.float32)
+        rounds_a = jnp.asarray(quantum, jnp.int32)
+        fn = self._compiled_loop(X_ext, qb, conv0, tol_a, rounds_a)
+        X_new, res, r, conv, rpq = fn(X_ext, qb, conv0, tol_a, rounds_a)
+        X_new.block_until_ready()
+        r = int(r)
+        # np.array (copy), not np.asarray: device buffers are read-only and
+        # the next admit() writes into this array in place
+        self._X = np.array(X_new)
+        conv_np, res_np, rpq_np = np.asarray(conv), np.asarray(res), np.asarray(rpq)
+        before = self._rounds_in.copy()
+        self._rounds_in[occ] += r
+        self.rounds_executed += r
+        self.quanta += 1
+        self.flushes += r * self.sched.S
+        bytes_per = np.dtype(sr.dtype).itemsize
+        per_round = self.sched.S * self.sched.P * self.sched.delta * bytes_per
+        self.flush_bytes += r * per_round * self.capacity
+        n = self.solver.graph.n
+        retired: list[RetiredQuery] = []
+        for slot in np.nonzero(occ)[0]:
+            done = bool(conv_np[slot])
+            if not done and self._rounds_in[slot] < self.max_rounds:
+                continue
+            if done:
+                rounds = int(before[slot] + rpq_np[slot])
+            else:
+                rounds = int(self._rounds_in[slot])
+            retired.append(
+                RetiredQuery(
+                    tag=self._tags[slot],
+                    x=self._X[slot, :n].copy(),
+                    rounds=rounds,
+                    converged=done,
+                    residual=float(res_np[slot]),
+                )
+            )
+            self._occupied[slot] = False
+            self._tags[slot] = None
+        self.solver.stats["solves"] += len(retired)
+        finished = [q.rounds for q in retired if q.converged]
+        if finished:
+            # one (δ, rounds) datapoint per quantum-with-retirees, max over
+            # the finishers — same conservative convention as solve_batch
+            self.solver._record_observation(
+                self.sched.delta,
+                max(finished),
+                time.perf_counter() - t0,
+                self.backend,
+                kind="batch",
+            )
+        return retired
 
 
 def solve_batch(

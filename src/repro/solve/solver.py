@@ -26,7 +26,6 @@ from __future__ import annotations
 
 import math
 import time
-import warnings
 
 import jax
 import jax.numpy as jnp
@@ -48,7 +47,7 @@ from repro.graphs.formats import CSRGraph
 from repro.graphs.partition import PARTITION_METHODS, Partition
 from repro.solve.problem import Problem
 
-__all__ = ["Solver", "BACKENDS", "FRONTIERS", "resolve_legacy_args"]
+__all__ = ["Solver", "BACKENDS", "FRONTIERS"]
 
 BACKENDS = ("host", "jit", "pallas", "sharded")
 FRONTIERS = ("replicated", "halo")
@@ -59,43 +58,6 @@ FRONTIERS = ("replicated", "halo")
 _FUSED_ROUND_BUILDERS = {"jit": round_fn_q, "pallas": round_fn_pallas_q}
 
 _NO_QUERY = np.zeros((), dtype=np.int32)  # dummy q for query-free problems
-
-
-def resolve_legacy_args(mode, delta, host_loop, backend):
-    """Map the deprecated ``(mode, host_loop)`` surface onto ``(delta, backend)``.
-
-    The old API scattered the paper's one tunable across ``mode`` + ``delta``
-    and named the execution path with a boolean.  New code passes
-    ``delta ∈ {"sync", "async", "auto", int}`` and
-    ``backend ∈ {"host", "jit", "pallas", "sharded"}`` directly.
-    """
-    if mode is not None:
-        warnings.warn(
-            "mode= is deprecated; pass delta='sync' | 'async' | 'auto' | <int>",
-            DeprecationWarning,
-            stacklevel=3,
-        )
-        if mode == "sync":
-            delta = "sync"
-        elif mode == "async":
-            delta = "async"
-        elif mode == "delayed":
-            if delta is None:
-                raise ValueError("delayed mode needs δ")
-        else:
-            raise ValueError(f"unknown mode {mode!r}")
-    if host_loop is not None:
-        warnings.warn(
-            "host_loop= is deprecated; "
-            "pass backend='host' | 'jit' | 'pallas' | 'sharded'",
-            DeprecationWarning,
-            stacklevel=3,
-        )
-        if backend is None:
-            backend = "host" if host_loop else "jit"
-    if delta is None:
-        delta = "auto"
-    return delta, backend
 
 
 class Solver:

@@ -293,14 +293,20 @@ class TestShardedService:
     def test_serve_graph_sharded_halo_matches_jit(self):
         from repro.launch.serve_graph import GraphService
 
+        from repro.launch.service import QueryRequest
+
         kwargs = dict(n_workers=N_WORKERS, delta=32, batch_size=2, min_chunk=8)
         base = GraphService(GRAPH_S, **kwargs)
         sharded = GraphService(
             GRAPH_S, backend="sharded", frontier="halo", compact_every=4, **kwargs
         )
-        d_base = base.sssp([0, 7])
-        d_shard = sharded.sssp([0, 7])
-        np.testing.assert_array_equal(d_base, d_shard)
+        for svc in (base, sharded):
+            for s in (0, 7):
+                assert svc.submit(QueryRequest(algo="sssp", payload=s)).accepted
+        d_base = {r.payload: r.x for r in base.drain()}
+        d_shard = {r.payload: r.x for r in sharded.drain()}
+        for s in (0, 7):
+            np.testing.assert_array_equal(d_base[s], d_shard[s])
 
 
 # --------------------------------------------------------------------------- #

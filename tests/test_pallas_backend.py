@@ -235,10 +235,18 @@ class TestServeGraphPallas:
     def test_service_on_pallas_matches_jit(self):
         from repro.launch.serve_graph import GraphService
 
+        from repro.launch.service import QueryRequest
+
         kwargs = dict(n_workers=N_WORKERS, delta=32, batch_size=2, min_chunk=8)
         base = GraphService(GRAPH_S, **kwargs)
         pallas = GraphService(GRAPH_S, backend="pallas", **kwargs)
-        np.testing.assert_array_equal(base.sssp([0, 7]), pallas.sssp([0, 7]))
+        for svc in (base, pallas):
+            for s in (0, 7):
+                assert svc.submit(QueryRequest(algo="sssp", payload=s)).accepted
+        d_base = {r.payload: r.x for r in base.drain()}
+        d_pallas = {r.payload: r.x for r in pallas.drain()}
+        for s in (0, 7):
+            np.testing.assert_array_equal(d_base[s], d_pallas[s])
 
     def test_cli_accepts_pallas(self):
         from repro.launch.serve_graph import main

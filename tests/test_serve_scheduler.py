@@ -1,0 +1,292 @@
+"""Serving tier: BatchStepper, ContinuousScheduler, load generator.
+
+Acceptance-criteria coverage for the continuous-batching tier:
+
+* slot-in bit-identity — a query admitted mid-flight into an open batch
+  retires with exactly the state a fresh ``solve_batch`` of that query alone
+  returns (the freeze-at-convergence guarantee), for min-plus SSSP *and*
+  plus-times PPR (where frozen vs kept-iterating genuinely differ);
+* queue invariants — no accepted request is ever dropped, FIFO holds within
+  a request class, and backpressure rejects are deterministic in the submit
+  sequence;
+* the seeded Poisson load generator and both replay disciplines are
+  bit-deterministic (same seed → same trace; same trace → same report).
+"""
+
+import numpy as np
+import pytest
+
+from repro.graphs.generators import make_graph
+from repro.launch.serve_graph import GraphService
+from repro.launch.service import (
+    ClassPolicy,
+    ContinuousScheduler,
+    QueryRequest,
+    load_traces,
+    poisson_trace,
+    replay_continuous,
+    replay_fixed,
+    save_traces,
+)
+from repro.solve import (
+    BatchStepper,
+    Solver,
+    multi_source_x0,
+    ppr_problem,
+    ppr_teleport,
+    solve_batch,
+    sssp_problem,
+)
+
+GRAPH_S = make_graph("kron", scale=8, efactor=8, kind="sssp")
+GRAPH_PR = make_graph("twitter", scale=8, efactor=8, kind="pagerank")
+
+
+def sssp_service(**kw):
+    kw.setdefault("n_workers", 4)
+    kw.setdefault("delta", 32)
+    kw.setdefault("batch_size", 4)
+    kw.setdefault("min_chunk", 8)
+    kw.setdefault("algos", ("sssp",))
+    return GraphService(GRAPH_S, **kw)
+
+
+def ppr_service(**kw):
+    kw.setdefault("n_workers", 4)
+    kw.setdefault("delta", 32)
+    kw.setdefault("batch_size", 4)
+    kw.setdefault("min_chunk", 8)
+    kw.setdefault("algos", ("ppr",))
+    return GraphService(GRAPH_PR, **kw)
+
+
+class TestBatchStepper:
+    def test_lone_query_matches_solve_batch(self):
+        solver = Solver(GRAPH_S, sssp_problem(), n_workers=4, delta=32, min_chunk=8)
+        ref = solve_batch(solver, multi_source_x0(GRAPH_S, [0]))
+        st = BatchStepper(solver, capacity=4)
+        st.admit(multi_source_x0(GRAPH_S, [0])[0], tag="a")
+        retired = []
+        while not retired:
+            retired = st.run(4)
+        (row,) = retired
+        assert row.converged and row.rounds == ref.rounds
+        np.testing.assert_array_equal(row.x, ref.x[0])
+
+    def test_free_slots_ride_along_preconverged(self):
+        """Occupancy 1 of 4: empty slots must not block retirement."""
+        solver = Solver(GRAPH_S, sssp_problem(), n_workers=4, delta=32, min_chunk=8)
+        st = BatchStepper(solver, capacity=4)
+        assert st.free_slots == 4
+        st.admit(multi_source_x0(GRAPH_S, [7])[0], tag="x")
+        retired = st.run(1000)
+        assert len(retired) == 1 and retired[0].converged
+        assert st.occupancy == 0 and st.free_slots == 4
+
+    def test_admit_full_raises(self):
+        solver = Solver(GRAPH_S, sssp_problem(), n_workers=4, delta=32, min_chunk=8)
+        st = BatchStepper(solver, capacity=2)
+        for s in (0, 1):
+            st.admit(multi_source_x0(GRAPH_S, [s])[0], tag=s)
+        with pytest.raises(ValueError, match="no free slots"):
+            st.admit(multi_source_x0(GRAPH_S, [2])[0], tag=2)
+
+    def test_budget_exhausted_retires_unconverged(self):
+        solver = Solver(GRAPH_S, sssp_problem(), n_workers=4, delta=32, min_chunk=8)
+        st = BatchStepper(solver, capacity=2, max_rounds=1)
+        st.admit(multi_source_x0(GRAPH_S, [0])[0], tag="t")
+        retired = st.run(1)
+        assert len(retired) == 1 and not retired[0].converged
+        assert retired[0].rounds == 1
+
+
+class TestSlotInBitIdentity:
+    """The tentpole guarantee: mid-flight admission never changes answers."""
+
+    def test_sssp_staggered_admissions(self):
+        solver = Solver(GRAPH_S, sssp_problem(), n_workers=4, delta=32, min_chunk=8)
+        sources = [0, 7, 33]
+        refs = {s: solve_batch(solver, multi_source_x0(GRAPH_S, [s])) for s in sources}
+        st = BatchStepper(solver, capacity=4)
+        done = {}
+        for s in sources:  # admit one new query per quantum, mid-flight
+            st.admit(multi_source_x0(GRAPH_S, [s])[0], tag=s)
+            for row in st.run(2):
+                done[row.tag] = row
+        while st.occupancy:
+            for row in st.run(2):
+                done[row.tag] = row
+        assert set(done) == set(sources)
+        for s in sources:
+            assert done[s].converged
+            assert done[s].rounds == refs[s].rounds
+            np.testing.assert_array_equal(done[s].x, refs[s].x[0])
+
+    def test_ppr_staggered_admissions(self):
+        """plus-times is where freeze-at-convergence is load-bearing: without
+        it, a retired row would keep refining while its batchmates run."""
+        solver = Solver(GRAPH_PR, ppr_problem(), n_workers=4, delta=32, min_chunk=8)
+        seeds = [3, 11, 40]
+        x0 = np.full((1, GRAPH_PR.n), 1.0 / GRAPH_PR.n, np.float32)
+        refs = {
+            s: solve_batch(solver, x0, q=ppr_teleport(GRAPH_PR, [s]))
+            for s in seeds
+        }
+        st = BatchStepper(solver, capacity=4)
+        done = {}
+        for s in seeds:
+            st.admit(x0[0], q=ppr_teleport(GRAPH_PR, [s])[0], tag=s)
+            for row in st.run(3):
+                done[row.tag] = row
+        while st.occupancy:
+            for row in st.run(3):
+                done[row.tag] = row
+        for s in seeds:
+            assert done[s].converged
+            assert done[s].rounds == refs[s].rounds
+            np.testing.assert_array_equal(done[s].x, refs[s].x[0])
+
+
+class TestSchedulerInvariants:
+    def test_no_request_dropped(self):
+        svc = sssp_service(batch_size=2, queue_capacity=32)
+        ids = []
+        for v in range(11):
+            adm = svc.submit(QueryRequest(algo="sssp", payload=v))
+            assert adm.accepted
+            ids.append(adm.request_id)
+        results = svc.drain()
+        assert sorted(r.request_id for r in results) == sorted(ids)
+        assert all(r.converged for r in results)
+        st = svc.scheduler.stats()
+        assert st["counters"]["accepted"] == st["counters"]["completed"] == 11
+        assert st["queue_depth"] == 0 and st["in_flight"] == 0
+
+    def test_fifo_within_class(self):
+        svc = sssp_service(batch_size=2, queue_capacity=32)
+        ids = [
+            svc.submit(QueryRequest(algo="sssp", payload=v)).request_id
+            for v in range(9)
+        ]
+        results = svc.drain()
+        by_seq = [r.request_id for r in sorted(results, key=lambda r: r.admit_seq)]
+        assert by_seq == ids  # one class, one lane: admission order = FIFO
+
+    def test_backpressure_deterministic(self):
+        svc = sssp_service(batch_size=2, queue_capacity=3)
+        outcomes = [
+            svc.submit(QueryRequest(algo="sssp", payload=v)).accepted
+            for v in range(8)
+        ]
+        # queue bounds admission before any pump: exactly capacity accepted
+        assert outcomes == [True] * 3 + [False] * 5
+        assert svc.scheduler.rejections == {"queue_full": 5}
+        assert len(svc.drain()) == 3
+
+    def test_rejection_reasons(self):
+        svc = sssp_service()
+        sched = ContinuousScheduler({"road": svc}, queue_capacity=4)
+        cases = [
+            (QueryRequest(algo="sssp", payload=0, graph="nope"), "unknown_graph"),
+            (QueryRequest(algo="ppr", payload=0, graph="road"), "unsupported_algo"),
+            (
+                QueryRequest(algo="sssp", payload=0, graph="road", request_class="vip"),
+                "unknown_class",
+            ),
+            (
+                QueryRequest(algo="sssp", payload=GRAPH_S.n, graph="road"),
+                "payload_out_of_range",
+            ),
+        ]
+        for req, reason in cases:
+            adm = sched.submit(req)
+            assert not adm.accepted and adm.reason == reason
+
+    def test_results_bit_identical_to_fresh_solve(self):
+        svc = sssp_service(batch_size=2)
+        for v in (0, 5, 9):
+            assert svc.submit(QueryRequest(algo="sssp", payload=v)).accepted
+        for r in svc.drain():
+            ref = solve_batch(svc.solver("sssp"), multi_source_x0(GRAPH_S, [r.payload]))
+            assert r.rounds == ref.rounds
+            np.testing.assert_array_equal(r.x, ref.x[0])
+
+    def test_class_policy_routing(self):
+        classes = {
+            "cheap": ClassPolicy(name="cheap", slot_rounds=2, delta=16),
+            "deep": ClassPolicy(name="deep", slot_rounds=8, delta=64),
+        }
+        road = sssp_service(classes=classes)
+        social = ppr_service(classes=classes)
+        sched = ContinuousScheduler(
+            {"road": road, "social": social}, classes=classes, queue_capacity=8
+        )
+        sched.submit(QueryRequest(algo="sssp", payload=1, graph="road"))
+        sched.submit(QueryRequest(algo="ppr", payload=1, graph="social"))
+        results = {r.algo: r for r in sched.drain()}
+        assert results["sssp"].request_class == "deep"
+        assert results["ppr"].request_class == "cheap"
+        assert results["sssp"].delta == 64  # class δ overrides the service's
+        assert results["ppr"].delta == 16
+        assert set(sched.stats()["lanes"]) == {
+            "road/sssp/deep",
+            "social/ppr/cheap",
+        }
+
+    def test_clock_fields_consistent(self):
+        svc = sssp_service(batch_size=2)
+        for v in range(5):
+            svc.submit(QueryRequest(algo="sssp", payload=v))
+        for r in svc.drain():
+            assert 0 <= r.submitted_clock <= r.admitted_clock <= r.finished_clock
+            assert r.queue_rounds >= 0 and r.service_rounds >= 1
+
+
+class TestLoadgen:
+    def test_seeded_trace_deterministic(self):
+        kw = dict(seed=3, graph_for={"sssp": ("road",), "ppr": ("social",)})
+        t1 = poisson_trace(0.2, 100, 256, **kw)
+        t2 = poisson_trace(0.2, 100, 256, **kw)
+        assert t1 == t2
+        assert t1 != poisson_trace(0.2, 100, 256, seed=4, graph_for=kw["graph_for"])
+        assert all((e.graph == "road") == (e.algo == "sssp") for e in t1.events)
+
+    def test_trace_roundtrip(self, tmp_path):
+        tr = poisson_trace(0.3, 50, 256, seed=1)
+        path = save_traces(tmp_path / "t.json", [tr])
+        (back,) = load_traces(path)
+        assert back == tr
+
+    def test_replay_continuous_deterministic(self):
+        tr = poisson_trace(
+            0.15, 80, 256, seed=5, graph_for={"sssp": ("default",)}, mix=(("sssp", 1),)
+        )
+
+        def run():
+            sched = ContinuousScheduler(
+                {"default": sssp_service(batch_size=2)}, queue_capacity=8
+            )
+            rep = dict(replay_continuous(sched, tr)["report"])
+            rep.pop("wall_s")
+            return rep
+
+        assert run() == run()
+
+    def test_fixed_vs_continuous_same_offered_load(self):
+        tr = poisson_trace(
+            0.15, 80, 256, seed=5, graph_for={"sssp": ("default",)}, mix=(("sssp", 1),)
+        )
+        sched = ContinuousScheduler(
+            {"default": sssp_service(batch_size=2)}, queue_capacity=8
+        )
+        cont = replay_continuous(sched, tr)["report"]
+        fixed = replay_fixed(
+            {"default": sssp_service(batch_size=2)},
+            tr,
+            batch_size=2,
+            queue_capacity=8,
+        )["report"]
+        assert cont["offered"] == fixed["offered"] == len(tr.events)
+        assert cont["completed"] + cont["rejected"] == cont["offered"]
+        assert fixed["completed"] + fixed["rejected"] == fixed["offered"]
+        assert cont["unconverged"] == 0

@@ -8,7 +8,9 @@ Acceptance-criteria coverage for the unified API:
   builds and zero retraces (trace-count assertions);
 * ``solve_batch(Q=1)`` is bit-identical to the unbatched path, and each
   query of a multi-query batch matches its unbatched reference;
-* the deprecated ``mode=`` / ``host_loop=`` surface warns but still works.
+* the PR-2 ``mode=`` / ``host_loop=`` kwargs are gone (TypeError), and the
+  deprecated ``GraphService.sssp()/.ppr()`` sugar warns but still answers
+  through the typed serving tier.
 """
 
 import numpy as np
@@ -222,23 +224,20 @@ class TestProblemSpecs:
 
 
 class TestLegacySurface:
-    def test_mode_warns_and_matches_new_api(self):
-        with pytest.warns(DeprecationWarning, match="mode= is deprecated"):
-            r_old = pagerank(GRAPH_PR, P=4, mode="delayed", delta=64, min_chunk=16)
-        r_new = Solver(
-            GRAPH_PR,
-            pagerank_problem(),
-            n_workers=4,
-            delta=64,
-            backend="host",
-            min_chunk=16,
-        ).solve()
-        np.testing.assert_array_equal(r_old.x, r_new.x)
-        assert r_old.rounds == r_new.rounds
+    """PR-2's ``mode=``/``host_loop=`` kwargs are retired, not deprecated."""
 
-    def test_host_loop_warns(self):
-        with pytest.warns(DeprecationWarning, match="host_loop= is deprecated"):
+    def test_mode_kwarg_gone(self):
+        with pytest.raises(TypeError, match="mode"):
+            pagerank(GRAPH_PR, P=4, mode="delayed", delta=64, min_chunk=16)
+
+    def test_host_loop_kwarg_gone(self):
+        with pytest.raises(TypeError, match="host_loop"):
             sssp(GRAPH_S, P=4, delta=32, host_loop=False, min_chunk=8)
+
+    def test_resolve_legacy_args_gone(self):
+        import repro.solve
+
+        assert not hasattr(repro.solve, "resolve_legacy_args")
 
     def test_new_style_no_warning(self):
         import warnings
@@ -253,10 +252,18 @@ class TestLegacySurface:
                 min_chunk=16,
             )
 
-    def test_delayed_mode_still_requires_delta(self):
-        with pytest.warns(DeprecationWarning):
-            with pytest.raises(ValueError, match="needs δ"):
-                pagerank(GRAPH_PR, P=4, mode="delayed")
+    def test_wrapper_matches_new_api(self):
+        r_old = pagerank(GRAPH_PR, P=4, delta=64, min_chunk=16)
+        r_new = Solver(
+            GRAPH_PR,
+            pagerank_problem(),
+            n_workers=4,
+            delta=64,
+            backend="host",
+            min_chunk=16,
+        ).solve()
+        np.testing.assert_array_equal(r_old.x, r_new.x)
+        assert r_old.rounds == r_new.rounds
 
 
 class TestServeGraphDriver:
@@ -269,17 +276,34 @@ class TestServeGraphDriver:
             lat = report["latency_s"][algo]
             stats = report["stats"][algo]
             assert len(lat) == 2
-            # warm batch reuses the cold batch's schedule and executable
+            # warm waves reuse the cold wave's schedule and executable
             assert stats["schedule_builds"] == 1
             assert stats["compiles"] == 1
 
-    def test_service_pads_short_batches(self):
+    def test_deprecated_sugar_answers_through_the_tier(self):
         from repro.launch.serve_graph import GraphService
 
         service = GraphService(GRAPH_S, n_workers=4, delta=32, batch_size=4)
-        d = service.sssp([0])
+        with pytest.warns(DeprecationWarning, match="sssp.. is deprecated"):
+            d = service.sssp([0])
         assert d.shape == (1, GRAPH_S.n)
         ref = Solver(GRAPH_S, sssp_problem(), n_workers=4, delta=32).solve(
             backend="jit"
         )
         np.testing.assert_array_equal(d[0], ref.x)
+
+    def test_legacy_sugar_rejects_empty_and_splits_oversize(self):
+        from repro.launch.serve_graph import GraphService
+
+        service = GraphService(GRAPH_S, n_workers=4, delta=32, batch_size=2)
+        with pytest.raises(ValueError, match="empty query list"):
+            with pytest.warns(DeprecationWarning):
+                service.sssp([])
+        # k > batch_size splits across queue slots instead of raising
+        sources = [0, 3, 9, 21, 40]
+        with pytest.warns(DeprecationWarning):
+            d = service.sssp(sources)
+        assert d.shape == (len(sources), GRAPH_S.n)
+        for row, s in zip(d, sources):
+            ref = solve_batch(service.solver("sssp"), multi_source_x0(GRAPH_S, [s]))
+            np.testing.assert_array_equal(row, ref.x[0])
