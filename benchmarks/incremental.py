@@ -1,0 +1,303 @@
+"""Incremental re-solve benchmark: replay a streaming edge-update trace.
+
+Replays the committed update trace (``benchmarks/traces/incremental_smoke.json``)
+through two solvers per workload sharing one mutating graph:
+
+* **incremental** — ``Solver.resolve(updates=batch)``: apply the batch,
+  repair the previous fixed point (``repro.evolve``), converge;
+* **cold**        — ``Solver.apply_updates(batch)`` then a from-scratch
+  ``solve()`` on the same mutated snapshot (the counterfactual).
+
+Every event checks the incremental result against the cold one (bit-exact
+for min-plus, allclose for plus-times) and records both round counts.  The
+summary buckets p50/p99 rounds by batch size; the committed win condition —
+median incremental rounds strictly below median cold rounds over the
+*small* events (total ops ≤ ``small_frac`` of the initial edge count) —
+is a boolean the regression guard enforces, and ``--assert-gate`` turns a
+violation into a nonzero exit for CI.  All reported fields except the
+``*_wall_s`` timings are deterministic functions of the trace.
+
+    PYTHONPATH=src python -m benchmarks.incremental \\
+        --trace benchmarks/traces/incremental_smoke.json --assert-gate
+
+Regenerate the committed trace with ``--write-trace`` after changing scale
+or batch sizes (then re-commit ``results/incremental.json``).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+
+from benchmarks.common import write_json_atomic
+from repro.evolve import EdgeBatch
+from repro.graphs.generators import make_graph
+from repro.solve import Solver, pagerank_problem, sssp_problem
+
+RESULTS = Path(__file__).resolve().parents[1] / "results"
+TRACES = Path(__file__).resolve().parent / "traces" / "incremental_smoke.json"
+
+DAMPING = 0.85
+
+
+# --------------------------------------------------------------------- #
+# trace generation (--write-trace)
+# --------------------------------------------------------------------- #
+def _edge_list(g):
+    dst = np.repeat(np.arange(g.n, dtype=np.int64), np.diff(g.indptr))
+    return g.indices.astype(np.int64), dst
+
+
+def _sssp_event(g, k: int, rng) -> tuple[dict, object]:
+    """Mixed insert/delete/reweight batch with GAP-style integer weights."""
+    src, dst = _edge_list(g)
+    n_del = k // 2
+    n_rw = k // 4
+    n_ins = k - n_del - n_rw
+    pick = rng.choice(g.nnz, size=n_del + n_rw, replace=False)
+    deletes = [[int(src[e]), int(dst[e])] for e in pick[:n_del]]
+    reweights = [
+        [int(src[e]), int(dst[e]), int(rng.integers(1, 256))] for e in pick[n_del:]
+    ]
+    keys = set((dst * g.n + src).tolist())
+    inserts: list[list[int]] = []
+    while len(inserts) < n_ins:
+        s, d = (int(v) for v in rng.integers(0, g.n, size=2))
+        key = d * g.n + s
+        if s == d or key in keys:
+            continue
+        keys.add(key)
+        inserts.append([s, d, int(rng.integers(1, 256))])
+    ev = {
+        "batch_size": k,
+        "inserts": inserts,
+        "deletes": deletes,
+        "reweights": reweights,
+    }
+    g2, _ = g.apply_updates(
+        EdgeBatch.from_ops(inserts=inserts, deletes=deletes, reweights=reweights)
+    )
+    return ev, g2
+
+
+def _pagerank_event(g, k: int, rng) -> tuple[dict, object]:
+    """Mass-conserving deletes: every touched source's surviving out-edges
+    are reweighted to ``damping / outdeg_new`` so the graph stays a scaled
+    column-stochastic operator (the perturbation is local, not a global
+    damping change)."""
+    src, dst = _edge_list(g)
+    pick = rng.choice(g.nnz, size=k, replace=False)
+    gone = np.zeros(g.nnz, dtype=bool)
+    gone[pick] = True
+    deletes = [[int(src[e]), int(dst[e])] for e in pick]
+    reweights = []
+    for s in np.unique(src[pick]):
+        kept = np.flatnonzero((src == s) & ~gone)
+        for e in kept:
+            reweights.append([int(s), int(dst[e]), DAMPING / len(kept)])
+    ev = {"batch_size": k, "inserts": [], "deletes": deletes, "reweights": reweights}
+    g2, _ = g.apply_updates(EdgeBatch.from_ops(deletes=deletes, reweights=reweights))
+    return ev, g2
+
+
+def write_trace(args) -> dict:
+    rng = np.random.default_rng(args.seed)
+    sizes = [int(s) for s in args.batch_sizes.split(",")]
+    trace = {
+        "meta": {
+            "graph": args.graph,
+            "scale": args.scale,
+            "efactor": args.efactor,
+            "graph_seed": args.graph_seed,
+            "seed": args.seed,
+            "delta": args.delta,
+            "workers": args.workers,
+            "small_frac": args.small_frac,
+        },
+        "workloads": {},
+    }
+    for wname, kind in (("sssp", "sssp"), ("pagerank", "pagerank")):
+        g = make_graph(
+            args.graph,
+            scale=args.scale,
+            efactor=args.efactor,
+            kind=kind,
+            seed=args.graph_seed,
+        )
+        events = []
+        for size in sizes:
+            for _ in range(args.events_per_size):
+                make_event = _sssp_event if kind == "sssp" else _pagerank_event
+                ev, g = make_event(g, size, rng)
+                events.append(ev)
+        trace["workloads"][wname] = {
+            "kind": kind,
+            # an argmax-degree source: kron graphs have isolated vertices,
+            # so a fixed source id would often solve an empty problem
+            "source": int(np.argmax(g.out_degree)) if kind == "sssp" else None,
+            "events": events,
+        }
+    path = Path(args.trace)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(json.dumps(trace, indent=1))
+    print(f"wrote {path}")
+    return trace
+
+
+# --------------------------------------------------------------------- #
+# replay
+# --------------------------------------------------------------------- #
+def _batch_of(ev: dict) -> EdgeBatch:
+    return EdgeBatch.from_ops(
+        inserts=[tuple(t) for t in ev["inserts"]],
+        deletes=[tuple(t) for t in ev["deletes"]],
+        reweights=[tuple(t) for t in ev["reweights"]],
+    )
+
+
+def _quantiles(vals) -> dict:
+    arr = np.asarray(vals, dtype=np.float64)
+    return {"p50": float(np.median(arr)), "p99": float(np.quantile(arr, 0.99))}
+
+
+def replay_workload(wname: str, wl: dict, meta: dict, backend: str) -> dict:
+    kind = wl["kind"]
+    g = make_graph(
+        meta["graph"],
+        scale=meta["scale"],
+        efactor=meta["efactor"],
+        kind=kind,
+        seed=meta["graph_seed"],
+    )
+    nnz0 = g.nnz
+    if kind == "sssp":
+        problem = sssp_problem(source=int(wl["source"]))
+    else:
+        problem = pagerank_problem(damping=DAMPING)
+    mk = lambda: Solver(  # noqa: E731
+        g, problem, n_workers=meta["workers"], delta=meta["delta"], backend=backend
+    )
+    inc, cold = mk(), mk()
+    r0 = inc.solve()
+    c0 = cold.solve()
+    rows = []
+    for ev in wl["events"]:
+        batch = _batch_of(ev)
+        t0 = time.perf_counter()
+        ri = inc.resolve(updates=batch)
+        inc_wall = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        cold.apply_updates(batch)
+        rc = cold.solve()
+        cold_wall = time.perf_counter() - t0
+        xi, xc = np.asarray(ri.x), np.asarray(rc.x)
+        if kind == "sssp":
+            match = bool(np.array_equal(xi, xc))
+        else:
+            # each run stops at L1 residual ≤ tol, i.e. within tol/(1-d) of
+            # the fixed point — two converged states differ by ≤ 2·tol/(1-d)
+            match = bool(np.abs(xi - xc).sum() <= 2 * problem.tol / (1 - DAMPING))
+        ops = batch.size
+        rows.append(
+            {
+                "batch_size": ev["batch_size"],
+                "ops": ops,
+                "small": ops <= meta["small_frac"] * nnz0,
+                "affected_rows": int(inc._last_report.affected_rows.size),
+                "inc_rounds": int(ri.rounds),
+                "cold_rounds": int(rc.rounds),
+                "match": match,
+                "inc_wall_s": inc_wall,
+                "cold_wall_s": cold_wall,
+            }
+        )
+    by_size: dict[str, dict] = {}
+    for size in sorted({r["batch_size"] for r in rows}):
+        sub = [r for r in rows if r["batch_size"] == size]
+        by_size[str(size)] = {
+            "events": len(sub),
+            "inc_rounds": _quantiles([r["inc_rounds"] for r in sub]),
+            "cold_rounds": _quantiles([r["cold_rounds"] for r in sub]),
+            "inc_wall_s": _quantiles([r["inc_wall_s"] for r in sub]),
+            "cold_wall_s": _quantiles([r["cold_wall_s"] for r in sub]),
+        }
+    small = [r for r in rows if r["small"]]
+    inc_p50 = float(np.median([r["inc_rounds"] for r in small]))
+    cold_p50 = float(np.median([r["cold_rounds"] for r in small]))
+    print(
+        f"{wname}: n={g.n} nnz={nnz0} cold0={c0.rounds}r  "
+        f"small-batch p50 inc={inc_p50:.1f}r cold={cold_p50:.1f}r  "
+        f"matches={sum(r['match'] for r in rows)}/{len(rows)}"
+    )
+    return {
+        "n": g.n,
+        "edges": nnz0,
+        "initial_cold_rounds": int(c0.rounds),
+        "initial_inc_solver_rounds": int(r0.rounds),
+        "events": rows,
+        "by_batch_size": by_size,
+        "small_batch_inc_rounds_p50": inc_p50,
+        "small_batch_cold_rounds_p50": cold_p50,
+        "all_match": all(r["match"] for r in rows),
+        "beats_cold": inc_p50 < cold_p50,
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--trace", default=str(TRACES))
+    ap.add_argument("--out", default=str(RESULTS / "incremental.json"))
+    ap.add_argument("--backend", default="jit", choices=["jit", "host", "sharded"])
+    ap.add_argument("--write-trace", action="store_true")
+    ap.add_argument("--graph", default="kron")
+    ap.add_argument("--scale", type=int, default=10)
+    ap.add_argument("--efactor", type=int, default=8)
+    ap.add_argument("--graph-seed", type=int, default=6)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--delta", type=int, default=128)
+    ap.add_argument("--workers", type=int, default=4)
+    ap.add_argument("--batch-sizes", default="4,16,64")
+    ap.add_argument("--events-per-size", type=int, default=5)
+    ap.add_argument(
+        "--small-frac",
+        type=float,
+        default=0.01,
+        help="events with total ops ≤ this fraction of the initial edge "
+        "count define the small-batch win condition",
+    )
+    ap.add_argument(
+        "--assert-gate",
+        action="store_true",
+        help="fail (exit 1) unless every workload matched the cold solve "
+        "and beat it on small-batch median rounds (the CI gate)",
+    )
+    args = ap.parse_args(argv)
+
+    if args.write_trace:
+        trace = write_trace(args)
+    else:
+        trace = json.loads(Path(args.trace).read_text())
+
+    meta = trace["meta"]
+    report = {"trace": Path(args.trace).name, "meta": meta, "workloads": {}}
+    for wname, wl in trace["workloads"].items():
+        report["workloads"][wname] = replay_workload(wname, wl, meta, args.backend)
+    report["gate"] = {
+        "all_match": all(w["all_match"] for w in report["workloads"].values()),
+        "incremental_beats_cold": all(
+            w["beats_cold"] for w in report["workloads"].values()
+        ),
+    }
+    write_json_atomic(args.out, report)
+    print(f"wrote {args.out}  gate={report['gate']}")
+    if args.assert_gate and not all(report["gate"].values()):
+        raise SystemExit(f"incremental gate failed: {report['gate']}")
+    return report
+
+
+if __name__ == "__main__":
+    main()

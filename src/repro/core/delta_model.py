@@ -29,7 +29,13 @@ from repro.core.access_matrix import access_matrix, locality_fraction
 from repro.graphs.formats import CSRGraph
 from repro.graphs.partition import balanced_blocks
 
-__all__ = ["DeltaModel", "fit_delta_model", "refit_delta_model", "TPUCostParams"]
+__all__ = [
+    "DeltaModel",
+    "fit_delta_model",
+    "refit_delta_model",
+    "refit_delta_models",
+    "TPUCostParams",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -183,3 +189,27 @@ def refit_delta_model(model: DeltaModel, observations) -> DeltaModel:
     return dataclasses.replace(
         model, r_sync=max(float(r_sync), 1.0), r_async=max(float(r_async), 1.0)
     )
+
+
+def refit_delta_models(model: DeltaModel, rows) -> dict:
+    """Per-regime refits from tagged observation rows.
+
+    ``rows`` are :meth:`repro.persist.store.SolverCache.load_observations`
+    dicts (each carrying ``delta``, ``rounds``, ``regime``).  Incremental
+    warm restarts converge in far fewer rounds than cold solves at the same δ,
+    so one pooled fit would drag the cold curve down and push the incremental
+    curve up; instead each regime refits independently, seeded from the same
+    base ``model`` (whose anchors keep a sparsely observed regime well-posed).
+    Returns ``{regime: refitted_model}`` — only regimes with ≥ 1 usable
+    observation appear.
+    """
+    by_regime: dict[str, list] = {}
+    for row in rows:
+        by_regime.setdefault(row.get("regime", "cold"), []).append(
+            (row["delta"], row["rounds"])
+        )
+    return {
+        regime: refit_delta_model(model, pairs)
+        for regime, pairs in by_regime.items()
+        if any(r > 0 for _, r in pairs)
+    }

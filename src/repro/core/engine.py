@@ -41,6 +41,9 @@ __all__ = [
     "round_fn_pallas_q",
     "make_solve_fn",
     "make_solve_fn_q",
+    "make_solve_fn_q_dyn",
+    "round_fn_q_dyn",
+    "schedule_args",
     "host_loop",
     "execute_solve_fn",
     "run_host",
@@ -271,6 +274,78 @@ def round_fn_pallas_q(
     from repro.kernels.round_block import fused_round_fn_q
 
     return fused_round_fn_q(sched, semiring, row_update, interpret=interpret)
+
+
+def schedule_args(sched: DeviceSchedule) -> tuple:
+    """The schedule's *data* arrays, in :func:`round_fn_q_dyn` argument order.
+
+    Everything else on a :class:`DeviceSchedule` — ``n``, ``P``, ``delta``,
+    ``S``, ``M`` — is shape metadata that must stay static for the compiled
+    round; these four arrays are the edge content that an
+    :class:`repro.graphs.updates.EdgeBatch` can change without changing
+    shapes, so the dynamic round takes them as traced inputs.
+    """
+    return sched.src, sched.val, sched.dst_local, sched.rows
+
+
+def round_fn_q_dyn(sched: DeviceSchedule, semiring: Semiring, row_update) -> Callable:
+    """``(x_ext, q, src, val, dst_local, rows) -> x_ext``: schedule-as-data round.
+
+    Same commit-step semantics as :func:`round_fn_q`, but the schedule arrays
+    arrive as traced arguments instead of closure constants — ``sched`` only
+    pins the static shape metadata ``(S, P, M, delta, n)``.  This is the
+    evolving-graph hot path: after ``Solver.apply_updates`` patches a
+    schedule's stripes in place, the same compiled executable replays with the
+    new arrays (mirroring how ``sharded_round_fn_q`` already treats its plan),
+    so small edge batches never pay a retrace.
+    """
+
+    def body(x_ext, q, src, val, dst_local, rows):
+        dyn = dataclasses.replace(
+            sched, src=src, val=val, dst_local=dst_local, rows=rows
+        )
+        step = partial(
+            _commit_step, sched=dyn, semiring=semiring, row_update=row_update, q=q
+        )
+        return jax.lax.fori_loop(0, sched.S, step, x_ext)
+
+    return body
+
+
+def make_solve_fn_q_dyn(
+    sched: DeviceSchedule,
+    semiring: Semiring,
+    row_update,
+    residual_fn,
+) -> Callable:
+    """``(x_ext, q, src, val, dst_local, rows, tol, max_rounds) -> carry``.
+
+    The fused while-loop of :func:`make_solve_fn_q` over the dynamic round:
+    one compiled executable per ``(S, P, M, delta)`` shape class serves every
+    same-shape mutation of the graph.
+    """
+    rnd = round_fn_q_dyn(sched, semiring, row_update)
+
+    def solve_loop(x_ext, q, src, val, dst_local, rows, tol, max_rounds):
+        def cond(carry):
+            _, _, rounds, converged = carry
+            return jnp.logical_and(rounds < max_rounds, jnp.logical_not(converged))
+
+        def body(carry):
+            x, _, rounds, _ = carry
+            x_new = rnd(x, q, src, val, dst_local, rows)
+            res = residual_fn(x[:-1], x_new[:-1]).astype(jnp.float32)
+            return x_new, res, rounds + 1, res <= tol
+
+        init = (
+            x_ext,
+            jnp.asarray(np.inf, jnp.float32),
+            jnp.asarray(0, jnp.int32),
+            jnp.asarray(False),
+        )
+        return jax.lax.while_loop(cond, body, init)
+
+    return solve_loop
 
 
 def make_solve_fn_q(

@@ -40,11 +40,14 @@ from repro.dist.compat import mesh_axis_sizes, shard_map
 
 __all__ = [
     "FrontierPlan",
+    "assemble_frontier_plan",
+    "build_plan_shard",
     "frontier_plan_args",
     "frontier_round_ext_fn",
     "frontier_sharded_round_fn",
     "input_specs_for_engine",
     "make_frontier_plan",
+    "plan_shard_bounds",
     "sharded_round_fn",
     "sharded_round_fn_q",
 ]
@@ -249,6 +252,55 @@ class FrontierPlan:
         return jnp.concatenate([owned, dump])
 
 
+def plan_shard_bounds(sched: DeviceSchedule, n_shards: int) -> np.ndarray:
+    """Shard vertex bounds ``vb (D + 1,)`` for ``sched`` over ``n_shards``."""
+    if sched.block_bounds is None:
+        raise ValueError("sched has no block_bounds (rebuild via make_schedule)")
+    bounds = np.asarray(sched.block_bounds, dtype=np.int64)
+    D = int(n_shards)
+    if sched.P % D != 0:
+        raise ValueError(f"P={sched.P} not divisible by D={D}")
+    P_loc = sched.P // D
+    vb = bounds[::P_loc]
+    assert vb.shape == (D + 1,) and vb[-1] == sched.n
+    return vb
+
+
+def build_plan_shard(
+    sched: DeviceSchedule, vb_lo: int, vb_hi: int, w0: int, w1: int
+) -> dict:
+    """One shard's plan piece: halo set + local index arrays (host numpy).
+
+    The unit of targeted plan invalidation: it reads only the shard's own
+    worker slices of the schedule (``src``/``dst_local``/``rows`` columns
+    ``[w0, w1)``) and its owned interval ``[vb_lo, vb_hi)``, so it can be
+    content-addressed (:func:`repro.persist.keys.plan_shard_fingerprint`) and
+    reused when a mutation leaves those workers' stripes unchanged.  Dump
+    slots are stored as ``-1`` sentinels because the real dump index ``L - 1``
+    depends on *every* shard's halo size — :func:`assemble_frontier_plan`
+    substitutes it.
+    """
+    src_d = np.asarray(sched.src)[:, w0:w1, :].astype(np.int64)
+    real_d = np.asarray(sched.dst_local)[:, w0:w1, :] < sched.delta
+    remote = real_d & ((src_d < vb_lo) | (src_d >= vb_hi))
+    halo = np.unique(src_d[remote])
+    owned_d = int(vb_hi - vb_lo)
+
+    loc = np.full(src_d.shape, -1, dtype=np.int64)
+    own = real_d & (src_d >= vb_lo) & (src_d < vb_hi)
+    loc[own] = src_d[own] - vb_lo
+    rem = real_d & ~own
+    if halo.size:
+        loc[rem] = owned_d + np.searchsorted(halo, src_d[rem])
+    rr = np.asarray(sched.rows)[:, w0:w1, :].astype(np.int64)
+    rows_loc = np.where(rr >= sched.n, -1, rr - vb_lo)
+    return {
+        "halo": halo,
+        "src_loc": loc.astype(np.int32),
+        "rows_loc": rows_loc.astype(np.int32),
+    }
+
+
 def make_frontier_plan(sched: DeviceSchedule, n_shards: int) -> FrontierPlan:
     """Build the owner-computes halo plan for ``sched`` over ``n_shards``.
 
@@ -258,47 +310,49 @@ def make_frontier_plan(sched: DeviceSchedule, n_shards: int) -> FrontierPlan:
     never drift): shard ``d``'s halo is every real source vertex its workers
     gather that lies outside its owned range.
     """
-    if sched.block_bounds is None:
-        raise ValueError("sched has no block_bounds (rebuild via make_schedule)")
-    src = np.asarray(sched.src)
-    dst_local = np.asarray(sched.dst_local)
-    rows = np.asarray(sched.rows)
-    bounds = np.asarray(sched.block_bounds, dtype=np.int64)
-    S, P_total, _ = src.shape
-    delta, n, D = sched.delta, sched.n, int(n_shards)
-    if P_total % D != 0:
-        raise ValueError(f"P={P_total} not divisible by D={D}")
-    P_loc = P_total // D
-    vb = bounds[::P_loc]
-    assert vb.shape == (D + 1,) and vb[-1] == n
-    owned = np.diff(vb)
-    real = dst_local < delta  # padding edges carry dst_local == delta
+    D = int(n_shards)
+    vb = plan_shard_bounds(sched, D)
+    P_loc = sched.P // D
+    pieces = [
+        build_plan_shard(
+            sched, int(vb[d]), int(vb[d + 1]), d * P_loc, (d + 1) * P_loc
+        )
+        for d in range(D)
+    ]
+    return assemble_frontier_plan(sched, D, pieces)
 
-    halo: list[np.ndarray] = []
-    for d in range(D):
-        ws = slice(d * P_loc, (d + 1) * P_loc)
-        s_d = src[:, ws, :].astype(np.int64)
-        remote = real[:, ws, :] & ((s_d < vb[d]) | (s_d >= vb[d + 1]))
-        halo.append(np.unique(s_d[remote]))
+
+def assemble_frontier_plan(
+    sched: DeviceSchedule, n_shards: int, pieces: list
+) -> FrontierPlan:
+    """Stitch per-shard pieces into a :class:`FrontierPlan`.
+
+    ``pieces[d]`` is :func:`build_plan_shard`'s dict (freshly built or loaded
+    from the content-addressed store).  Everything global — ``L``, ``H``, the
+    send/recv exchange indices, ``gather_index``, ``owned_flat`` — is
+    recomputed here from the halos plus the schedule's ``rows``; that is the
+    cheap, shard-coupled part, so it is never cached piecewise.  Output is
+    bit-identical to the monolithic plan build.
+    """
+    rows = np.asarray(sched.rows)
+    S = sched.S
+    delta, n, D = sched.delta, sched.n, int(n_shards)
+    P_loc = sched.P // D
+    vb = plan_shard_bounds(sched, D)
+    owned = np.diff(vb)
+
+    halo = [np.asarray(p["halo"], dtype=np.int64) for p in pieces]
     halo_sizes = np.array([h.size for h in halo], dtype=np.int64)
     L = int((owned + halo_sizes).max()) + 1 if D else 1
     dump = L - 1
 
-    src_loc = np.full(src.shape, dump, dtype=np.int32)
-    rows_loc = np.empty(rows.shape, dtype=np.int32)
-    for d in range(D):
+    src_loc = np.empty((S, sched.P, sched.M), dtype=np.int32)
+    rows_loc = np.empty((S, sched.P, delta), dtype=np.int32)
+    for d, p in enumerate(pieces):
         ws = slice(d * P_loc, (d + 1) * P_loc)
-        s_d = src[:, ws, :].astype(np.int64)
-        r_d = real[:, ws, :]
-        own = r_d & (s_d >= vb[d]) & (s_d < vb[d + 1])
-        loc = np.full(s_d.shape, dump, dtype=np.int64)
-        loc[own] = s_d[own] - vb[d]
-        rem = r_d & ~own
-        if halo[d].size:
-            loc[rem] = owned[d] + np.searchsorted(halo[d], s_d[rem])
-        src_loc[:, ws, :] = loc
-        rr = rows[:, ws, :].astype(np.int64)
-        rows_loc[:, ws, :] = np.where(rr >= n, dump, rr - vb[d])
+        sl, rl = p["src_loc"], p["rows_loc"]
+        src_loc[:, ws, :] = np.where(sl < 0, dump, sl)
+        rows_loc[:, ws, :] = np.where(rl < 0, dump, rl)
 
     # Boundary traffic: per (step, shard), the committed rows some other
     # shard keeps a halo copy of.  H pads to the worst (step, shard) cell.

@@ -1,0 +1,36 @@
+"""Incremental solving on evolving graphs.
+
+The subsystem spans four layers (each living with the machinery it extends,
+re-exported here as the one façade):
+
+1. **mutation** — :class:`~repro.graphs.updates.EdgeBatch` +
+   ``CSRGraph.apply_updates``: typed insert/delete/reweight batches applied
+   incrementally, reporting the affected-vertex frontier;
+2. **restart** — :mod:`repro.evolve.restart`: repair the previous fixed point
+   into a valid warm state (delta-accumulative for plus-times, monotone repair
+   with the deletion cone re-raised for min-plus), consumed by
+   ``Solver.resolve(updates=...)``;
+3. **persistence** — targeted invalidation: per-worker schedule stripes and
+   per-shard plan pieces are content-addressed in :mod:`repro.persist`, so a
+   mutation rebuilds only the touched blocks;
+4. **serving** — ``UpdateRequest`` lifecycle in
+   :class:`repro.launch.service.ContinuousScheduler`: batches apply at round
+   boundaries against quiesced lanes, so in-flight queries always retire on a
+   consistent snapshot.
+"""
+
+from repro.evolve.restart import (
+    minplus_certificate_repair,
+    minplus_cone_repair,
+    warm_start_state,
+)
+from repro.graphs.updates import EdgeBatch, UpdateReport, apply_edge_batch
+
+__all__ = [
+    "EdgeBatch",
+    "UpdateReport",
+    "apply_edge_batch",
+    "minplus_certificate_repair",
+    "minplus_cone_repair",
+    "warm_start_state",
+]

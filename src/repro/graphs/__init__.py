@@ -8,10 +8,14 @@ from repro.graphs.partition import (
     greedy_degree_blocks,
     make_partition,
 )
+from repro.graphs.updates import EdgeBatch, UpdateReport, apply_edge_batch
 
 __all__ = [
     "CSRGraph",
+    "EdgeBatch",
     "StripeSchedule",
+    "UpdateReport",
+    "apply_edge_batch",
     "build_stripe_schedule",
     "make_graph",
     "GRAPH_GENERATORS",

@@ -23,7 +23,13 @@ from functools import cached_property
 
 import numpy as np
 
-__all__ = ["CSRGraph", "StripeSchedule", "build_stripe_schedule"]
+__all__ = [
+    "CSRGraph",
+    "StripeSchedule",
+    "assemble_stripe_schedule",
+    "build_stripe_schedule",
+    "build_worker_stripe",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -102,6 +108,19 @@ class CSRGraph:
     def with_values(self, values: np.ndarray, name: str | None = None) -> "CSRGraph":
         assert values.shape[0] == self.nnz
         return dataclasses.replace(self, values=values, name=name or self.name)
+
+    def apply_updates(self, batch):
+        """Apply an :class:`repro.graphs.updates.EdgeBatch` incrementally.
+
+        Returns ``(new_graph, report)`` where ``report`` is an
+        :class:`repro.graphs.updates.UpdateReport` carrying the
+        affected-vertex frontier and the displaced old values (so
+        ``batch.inverse(report)`` is the exact undo).  The vertex set is
+        immutable — only edges change.
+        """
+        from repro.graphs.updates import apply_edge_batch
+
+        return apply_edge_batch(self, batch)
 
     def stats(self) -> dict:
         ind = self.in_degree
@@ -183,50 +202,84 @@ def build_stripe_schedule(
     (``x ⊗ pad_val = ⊕-identity``): ``0`` for plus-times, ``+INF`` for
     min-plus.
     """
-    n = graph.n
     block_bounds = np.asarray(block_bounds, dtype=np.int64)
-    P = block_bounds.shape[0] - 1
-    block_sizes = np.diff(block_bounds)
-    B = int(block_sizes.max())
+    B = int(np.diff(block_bounds).max())
     delta = int(min(delta, B))
     assert delta >= 1
     S = -(-B // delta)  # ceil
+    stripes = [
+        build_worker_stripe(
+            graph, int(block_bounds[w]), int(block_bounds[w + 1]), S, delta, pad_val
+        )
+        for w in range(block_bounds.shape[0] - 1)
+    ]
+    return assemble_stripe_schedule(graph, block_bounds, delta, pad_val, stripes)
 
-    # Edge count per (step, worker) cell.
-    counts = np.zeros((S, P), dtype=np.int64)
+
+def build_worker_stripe(
+    graph: CSRGraph, lo: int, hi: int, S: int, delta: int, pad_val
+) -> dict:
+    """One worker's stripe arrays for block ``[lo, hi)`` at natural width.
+
+    The unit of targeted schedule invalidation: its content depends only on
+    the block's own rows (``indptr[lo:hi+1]`` relative slices, the in-edge
+    sources/values of those rows), ``n``, ``S``, ``delta``, and ``pad_val`` —
+    so a stripe can be content-addressed and reused across graph mutations
+    that never touch this block.  Arrays are ``(S, M_w)`` with the worker's
+    own padded width ``M_w``; :func:`assemble_stripe_schedule` pads to the
+    global ``M`` with the same fill convention, bit-identically to a
+    monolithic build.
+    """
     indptr = graph.indptr
-    for w in range(P):
-        lo, hi = block_bounds[w], block_bounds[w + 1]
-        for s in range(S):
-            r0 = min(lo + s * delta, hi)
-            r1 = min(lo + (s + 1) * delta, hi)
-            counts[s, w] = indptr[r1] - indptr[r0]
-    M = int(counts.max()) if counts.size else 0
-    M = max(M, 1)
+    r0s = [min(lo + s * delta, hi) for s in range(S)]
+    r1s = [min(lo + (s + 1) * delta, hi) for s in range(S)]
+    counts = [int(indptr[r1] - indptr[r0]) for r0, r1 in zip(r0s, r1s)]
+    M_w = max(counts) if counts else 0
+
+    src = np.zeros((S, M_w), dtype=np.int32)
+    val = np.full((S, M_w), pad_val, dtype=graph.values.dtype)
+    dst_local = np.full((S, M_w), delta, dtype=np.int32)  # dump slot
+    rows = np.full((S, delta), graph.n, dtype=np.int32)  # dump slot of frontier
+    for s, (r0, r1) in enumerate(zip(r0s, r1s)):
+        if r1 <= r0:
+            continue
+        e0, e1 = indptr[r0], indptr[r1]
+        m = e1 - e0
+        src[s, :m] = graph.indices[e0:e1]
+        val[s, :m] = graph.values[e0:e1]
+        # destination row within the cell for each edge
+        row_of_edge = np.repeat(np.arange(r0, r1), np.diff(indptr[r0 : r1 + 1])) - r0
+        dst_local[s, :m] = row_of_edge.astype(np.int32)
+        rows[s, : r1 - r0] = np.arange(r0, r1, dtype=np.int32)
+    return {"src": src, "val": val, "dst_local": dst_local, "rows": rows}
+
+
+def assemble_stripe_schedule(
+    graph: CSRGraph, block_bounds: np.ndarray, delta: int, pad_val, stripes: list
+) -> StripeSchedule:
+    """Pad per-worker stripes to the global ``M`` and stack the schedule.
+
+    ``stripes[w]`` is :func:`build_worker_stripe`'s dict for worker ``w``
+    (freshly built or loaded from the content-addressed store); the output is
+    bit-identical to the monolithic :func:`build_stripe_schedule`.
+    """
+    block_bounds = np.asarray(block_bounds, dtype=np.int64)
+    P = block_bounds.shape[0] - 1
+    n = graph.n
+    S = stripes[0]["src"].shape[0] if stripes else 1
+    M = max(1, max(st["src"].shape[1] for st in stripes)) if stripes else 1
 
     val_dtype = graph.values.dtype
     src = np.zeros((S, P, M), dtype=np.int32)
     val = np.full((S, P, M), pad_val, dtype=val_dtype)
     dst_local = np.full((S, P, M), delta, dtype=np.int32)  # dump slot
-    rows = np.full((S, P, delta), n, dtype=np.int32)  # dump slot of frontier
-
-    for w in range(P):
-        lo, hi = block_bounds[w], block_bounds[w + 1]
-        for s in range(S):
-            r0 = min(lo + s * delta, hi)
-            r1 = min(lo + (s + 1) * delta, hi)
-            if r1 <= r0:
-                continue
-            e0, e1 = indptr[r0], indptr[r1]
-            m = e1 - e0
-            src[s, w, :m] = graph.indices[e0:e1]
-            val[s, w, :m] = graph.values[e0:e1]
-            # destination row within the cell for each edge
-            row_of_edge = (
-                np.repeat(np.arange(r0, r1), np.diff(indptr[r0 : r1 + 1])) - r0
-            )
-            dst_local[s, w, :m] = row_of_edge.astype(np.int32)
-            rows[s, w, : r1 - r0] = np.arange(r0, r1, dtype=np.int32)
+    rows = np.full((S, P, delta), n, dtype=np.int32)
+    for w, st in enumerate(stripes):
+        m = st["src"].shape[1]
+        src[:, w, :m] = st["src"]
+        val[:, w, :m] = st["val"]
+        dst_local[:, w, :m] = st["dst_local"]
+        rows[:, w, :] = st["rows"]
 
     return StripeSchedule(
         n=n,

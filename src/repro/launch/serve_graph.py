@@ -90,6 +90,7 @@ class GraphService:
         cache_dir=None,
         reprobe_every: int | None = None,
         queue_capacity: int = 64,
+        per_graph_quota: int | None = None,
         classes: dict[str, ClassPolicy] | None = None,
         algos: tuple[str, ...] = ("sssp", "ppr"),
     ):
@@ -105,6 +106,7 @@ class GraphService:
         self.cache_dir = cache_dir
         self.reprobe_every = reprobe_every
         self.queue_capacity = queue_capacity
+        self.per_graph_quota = per_graph_quota
         self.classes = classes
         self.algos = tuple(algos)
         self._solvers: dict[str, Solver] = {}
@@ -151,12 +153,41 @@ class GraphService:
                 {"default": self},
                 classes=classes,
                 queue_capacity=self.queue_capacity,
+                per_graph_quota=self.per_graph_quota,
             )
         return self._scheduler
 
     def submit(self, req: QueryRequest) -> Admission:
         """Admit one request (or reject with a reason) — never blocks."""
         return self.scheduler.submit(req)
+
+    def submit_update(self, req) -> Admission:
+        """Admit one edge-update batch; it applies at a quiesced round
+        boundary (see :meth:`ContinuousScheduler.submit_update`)."""
+        return self.scheduler.submit_update(req)
+
+    def take_update_results(self) -> list:
+        """Applied-update lifecycle records (cleared on read)."""
+        return self.scheduler.take_update_results()
+
+    def apply_updates(self, batch):
+        """Mutate the resident graph in place (synchronous path).
+
+        Every warm solver re-solves incrementally from here on
+        (``Solver.resolve`` semantics); schedules are patched stripe-wise
+        rather than rebuilt.  The serving tier calls this from the
+        scheduler's quiesced round boundary — direct callers must ensure no
+        queries are in flight.  Returns the
+        :class:`~repro.graphs.updates.UpdateReport` of the applied batch.
+        """
+        report = None
+        for sv in self._solvers.values():
+            report = sv.apply_updates(batch)
+        if self._solvers:
+            self.graph = next(iter(self._solvers.values())).graph
+        else:
+            self.graph, report = self.graph.apply_updates(batch)
+        return report
 
     def pump(self) -> list[QueryResult]:
         """Run one scheduling quantum; return the queries that retired."""

@@ -9,6 +9,8 @@ from repro.launch.service.types import (
     ClassPolicy,
     QueryRequest,
     QueryResult,
+    UpdateRequest,
+    UpdateResult,
     default_class_for,
 )
 from repro.launch.service.scheduler import AdmissionQueue, ContinuousScheduler
@@ -33,6 +35,8 @@ __all__ = [
     "QueryResult",
     "Trace",
     "TraceEvent",
+    "UpdateRequest",
+    "UpdateResult",
     "default_class_for",
     "load_traces",
     "poisson_trace",

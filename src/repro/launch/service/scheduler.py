@@ -35,6 +35,8 @@ from repro.launch.service.types import (
     ClassPolicy,
     QueryRequest,
     QueryResult,
+    UpdateRequest,
+    UpdateResult,
     default_class_for,
 )
 from repro.solve.batch import BatchStepper
@@ -86,6 +88,17 @@ class AdmissionQueue:
                 kept.append(item)
         self._q = kept
         return taken
+
+
+class _PendingUpdate:
+    """Book-keeping for one accepted update batch while its graph quiesces."""
+
+    __slots__ = ("req", "submitted_clock", "submit_wall")
+
+    def __init__(self, req: UpdateRequest, clock: int, wall: float):
+        self.req = req
+        self.submitted_clock = clock
+        self.submit_wall = wall
 
 
 class _Pending:
@@ -147,6 +160,16 @@ class ContinuousScheduler:
       :data:`~repro.launch.service.types.DEFAULT_CLASSES`.
     * ``queue_capacity`` — bound on queued (not yet slotted-in) requests;
       beyond it :meth:`submit` rejects with ``"queue_full"``.
+    * ``per_graph_quota`` — per-tenant admission bound: queued queries plus
+      pending update batches for one graph; beyond it :meth:`submit` /
+      :meth:`submit_update` reject with ``"quota_exceeded"`` (checked before
+      the global ``queue_full``, so one tenant can't starve the rest).
+
+    Edge-update batches travel :meth:`submit_update` →
+    :meth:`take_update_results`: accepted :class:`UpdateRequest`\\ s queue
+    per graph and apply inside :meth:`pump` only when that graph's lanes are
+    quiescent — queries admitted before the update retire on the old
+    snapshot, queries submitted after it stay queued until it applies.
 
     ``submit()`` answers immediately with an :class:`Admission`;
     :meth:`pump` executes one scheduling quantum across all lanes (slot in
@@ -161,18 +184,24 @@ class ContinuousScheduler:
         *,
         classes: dict[str, ClassPolicy] | None = None,
         queue_capacity: int = 64,
+        per_graph_quota: int | None = None,
     ):
         if not isinstance(services, dict):
             services = {"default": services}
         if not services:
             raise ValueError("at least one resident GraphService is required")
+        if per_graph_quota is not None and per_graph_quota < 1:
+            raise ValueError(f"per_graph_quota must be >= 1, got {per_graph_quota}")
         self.services = dict(services)
         self.classes = dict(DEFAULT_CLASSES)
         if classes:
             self.classes.update(classes)
         self.queue = AdmissionQueue(queue_capacity)
+        self.per_graph_quota = per_graph_quota
         self._lanes: dict[tuple[str, str, str], _Lane] = {}
         self._pending: dict[str, _Pending] = {}
+        self._pending_updates: dict[str, deque[tuple[str, _PendingUpdate]]] = {}
+        self._update_results: list[UpdateResult] = []
         self._next_id = 0
         self._next_admit_seq = 0
         self.clock_rounds = 0
@@ -183,6 +212,8 @@ class ContinuousScheduler:
             "completed": 0,
             "unconverged": 0,
             "pumps": 0,
+            "updates_submitted": 0,
+            "updates_applied": 0,
         }
         self.rejections: dict[str, int] = {}
 
@@ -195,6 +226,12 @@ class ContinuousScheduler:
     def resolve_class(self, req: QueryRequest) -> str:
         cls = req.request_class
         return default_class_for(req.algo) if cls == "auto" else cls
+
+    def _graph_load(self, graph: str) -> int:
+        """Admitted-but-unapplied work for one tenant (the quota metric):
+        queued queries plus pending update batches."""
+        queued = sum(1 for _, r in self.queue.items() if r.graph == graph)
+        return queued + len(self._pending_updates.get(graph, ()))
 
     def submit(self, req: QueryRequest) -> Admission:
         """Admit or reject one request — constant-time, never blocks."""
@@ -209,6 +246,11 @@ class ContinuousScheduler:
         payload = int(req.payload)
         if not 0 <= payload < service.graph.n:
             return self._reject("payload_out_of_range")
+        if (
+            self.per_graph_quota is not None
+            and self._graph_load(req.graph) >= self.per_graph_quota
+        ):
+            return self._reject("quota_exceeded")
         if self.queue.full:
             return self._reject("queue_full")
         request_id = f"q{self._next_id:06d}"
@@ -222,6 +264,81 @@ class ContinuousScheduler:
             accepted=True, request_id=request_id, queue_depth=len(self.queue)
         )
 
+    # ----------------------------------------------------------- updates #
+    def submit_update(self, req: UpdateRequest) -> Admission:
+        """Admit one edge-update batch (or reject with a reason).
+
+        Accepted batches join their graph's FIFO update queue and apply at
+        the next :meth:`pump` boundary where that graph's lanes are
+        quiescent; queries submitted *after* an update stay queued until it
+        applies (the snapshot barrier), so results never mix graph versions.
+        """
+        self.counters["updates_submitted"] += 1
+        service = self.services.get(req.graph)
+        if service is None:
+            return self._reject("unknown_graph")
+        verts = req.batch.all_vertices()
+        if verts.size and (verts.min() < 0 or verts.max() >= service.graph.n):
+            return self._reject("payload_out_of_range")
+        if (
+            self.per_graph_quota is not None
+            and self._graph_load(req.graph) >= self.per_graph_quota
+        ):
+            return self._reject("quota_exceeded")
+        request_id = f"u{self._next_id:06d}"
+        self._next_id += 1
+        self._pending_updates.setdefault(req.graph, deque()).append(
+            (request_id, _PendingUpdate(req, self.clock_rounds, time.perf_counter()))
+        )
+        self.counters["accepted"] += 1
+        return Admission(
+            accepted=True, request_id=request_id, queue_depth=len(self.queue)
+        )
+
+    def _apply_ready_updates(self):
+        """Apply queued update batches whose graph's lanes are all quiescent.
+
+        Runs at the top of every :meth:`pump` — a deterministic round
+        boundary: every in-flight query has either retired or sits frozen at
+        a quantum edge *on the pre-update snapshot's lanes*, which are
+        dropped and lazily rebuilt against the mutated solver only once
+        occupancy reaches zero.
+        """
+        for graph in list(self._pending_updates):
+            busy = any(
+                lane.stepper.occupancy > 0
+                for key, lane in self._lanes.items()
+                if key[0] == graph
+            )
+            if busy:
+                continue
+            service = self.services[graph]
+            queued = self._pending_updates.pop(graph)
+            for key in [k for k in self._lanes if k[0] == graph]:
+                del self._lanes[key]
+            for request_id, pend in queued:
+                report = service.apply_updates(pend.req.batch)
+                self.counters["updates_applied"] += 1
+                self._update_results.append(
+                    UpdateResult(
+                        request_id=request_id,
+                        graph=graph,
+                        inserted=int(report.inserted),
+                        deleted=int(report.deleted),
+                        reweighted=int(report.reweighted),
+                        affected_rows=int(report.affected_rows.size),
+                        submitted_clock=pend.submitted_clock,
+                        applied_clock=self.clock_rounds,
+                        latency_s=time.perf_counter() - pend.submit_wall,
+                    )
+                )
+
+    def take_update_results(self) -> list[UpdateResult]:
+        """Applied-update lifecycle records (cleared on read)."""
+        out = self._update_results
+        self._update_results = []
+        return out
+
     # -------------------------------------------------------------- pump #
     def _lane_for(self, req: QueryRequest) -> _Lane:
         key = (req.graph, req.algo, self.resolve_class(req))
@@ -232,16 +349,24 @@ class ContinuousScheduler:
         return lane
 
     def _admit_from_queue(self):
-        """Slot queued requests into free lane slots, FIFO within class."""
+        """Slot queued requests into free lane slots, FIFO within class.
+
+        Graphs with pending updates are barriered: their queued queries stay
+        in the queue (and no new lanes materialize for them) until the
+        update applies, so every admitted query runs on one graph version.
+        """
         # Materialize lanes for whatever is queued (deterministic creation
         # order: queue scan order), then fill each lane's free slots.
         for _, req in self.queue.items():
-            self._lane_for(req)
+            if req.graph not in self._pending_updates:
+                self._lane_for(req)
         for key, lane in self._lanes.items():
             free = lane.stepper.free_slots
             if free == 0:
                 continue
             graph, algo, cls = key
+            if graph in self._pending_updates:
+                continue
 
             def match(r, g=graph, a=algo, c=cls):
                 return r.graph == g and r.algo == a and self.resolve_class(r) == c
@@ -254,8 +379,9 @@ class ContinuousScheduler:
                 self._next_admit_seq += 1
 
     def pump(self) -> list[QueryResult]:
-        """One scheduling quantum: slot in, run every active lane, retire."""
+        """One scheduling quantum: apply ready updates, slot in, run, retire."""
         self.counters["pumps"] += 1
+        self._apply_ready_updates()
         self._admit_from_queue()
         results: list[QueryResult] = []
         for lane in self._lanes.values():
@@ -301,8 +427,14 @@ class ContinuousScheduler:
         return sum(lane.stepper.occupancy for lane in self._lanes.values())
 
     @property
+    def pending_updates(self) -> int:
+        return sum(len(q) for q in self._pending_updates.values())
+
+    @property
     def idle(self) -> bool:
-        return len(self.queue) == 0 and self.in_flight == 0
+        return (
+            len(self.queue) == 0 and self.in_flight == 0 and self.pending_updates == 0
+        )
 
     def drain(self, max_pumps: int = 100_000) -> list[QueryResult]:
         """Pump until queue and lanes are empty; return everything retired."""
@@ -323,6 +455,9 @@ class ContinuousScheduler:
             "clock_rounds": self.clock_rounds,
             "queue_depth": len(self.queue),
             "in_flight": self.in_flight,
+            "pending_updates": {
+                g: len(q) for g, q in self._pending_updates.items() if q
+            },
             "counters": dict(self.counters),
             "rejections": dict(self.rejections),
             "lanes": {

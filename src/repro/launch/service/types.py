@@ -26,6 +26,8 @@ __all__ = [
     "DEFAULT_CLASSES",
     "QueryRequest",
     "QueryResult",
+    "UpdateRequest",
+    "UpdateResult",
     "default_class_for",
 ]
 
@@ -55,8 +57,8 @@ class Admission:
 
     ``accepted=False`` always carries a ``reason`` (``"queue_full"``,
     ``"unknown_graph"``, ``"unsupported_algo"``, ``"unknown_class"``,
-    ``"payload_out_of_range"``); rejection is deterministic in the submit
-    sequence, never a timing accident.
+    ``"payload_out_of_range"``, ``"quota_exceeded"``); rejection is
+    deterministic in the submit sequence, never a timing accident.
     """
 
     accepted: bool
@@ -101,6 +103,49 @@ class QueryResult:
     def service_rounds(self) -> int:
         """Rounds from slot-in to retirement (includes quantum granularity)."""
         return self.finished_clock - self.admitted_clock
+
+
+@dataclasses.dataclass(frozen=True)
+class UpdateRequest:
+    """One edge-update batch against a resident graph.
+
+    ``batch`` is an :class:`repro.graphs.updates.EdgeBatch` (typed loosely
+    here so the wire types stay import-light).  Updates share the admission
+    contract with queries — ``submit_update()`` answers immediately with an
+    :class:`Admission` (``"unknown_graph"``, ``"payload_out_of_range"``,
+    ``"quota_exceeded"`` are the typed rejections) — but travel a separate
+    per-graph queue and apply only at a round boundary where the graph's
+    lanes are quiescent, so every in-flight query retires against the
+    snapshot it was admitted on.
+    """
+
+    batch: object
+    graph: str = "default"
+
+
+@dataclasses.dataclass
+class UpdateResult:
+    """One applied update batch: what changed and when (round clock).
+
+    ``barrier_rounds`` is the deterministic wait between submission and
+    application — the rounds the scheduler spent retiring in-flight queries
+    on the pre-update snapshot before the graph quiesced.
+    """
+
+    request_id: str
+    graph: str
+    inserted: int
+    deleted: int
+    reweighted: int
+    affected_rows: int  # destination rows whose in-edge lists changed
+    submitted_clock: int  # scheduler clock (rounds) at submit_update()
+    applied_clock: int  # ... at application (round boundary, lanes quiesced)
+    latency_s: float = 0.0
+
+    @property
+    def barrier_rounds(self) -> int:
+        """Rounds spent waiting for the graph's lanes to quiesce."""
+        return self.applied_clock - self.submitted_clock
 
 
 @dataclasses.dataclass(frozen=True)

@@ -37,9 +37,11 @@ __all__ = [
     "CACHE_FORMAT",
     "env_fingerprint",
     "graph_fingerprint",
+    "plan_shard_fingerprint",
     "problem_fingerprint",
     "row_update_digest",
     "solver_namespace",
+    "stripe_fingerprint",
 ]
 
 # Bump to retire every existing cache entry (layout or semantics change).
@@ -79,6 +81,56 @@ def graph_fingerprint(graph) -> str:
         np.ascontiguousarray(graph.indices).tobytes(),
         str(graph.values.dtype).encode(),
         np.ascontiguousarray(graph.values).tobytes(),
+    )
+
+
+def stripe_fingerprint(graph, lo: int, hi: int, S: int, delta: int, pad_val) -> str:
+    """Content key of one worker stripe — the unit of evolve-aware reuse.
+
+    Hashes exactly what :func:`repro.graphs.formats.build_worker_stripe`
+    reads: the block's *relative* indptr slice plus its in-edge sources and
+    values, the global ``n`` (source ids and the dump row reference it), the
+    shape knobs ``(S, delta)``, the pad value/dtype, and the environment.
+    Two graphs that differ only outside ``[lo, hi)`` produce the same digest
+    for this block, which is what lets a mutated graph's schedule reuse every
+    untouched stripe from the shared store.
+    """
+    indptr = np.asarray(graph.indptr)
+    e0, e1 = int(indptr[lo]), int(indptr[hi])
+    rel_ptr = indptr[lo : hi + 1] - e0
+    return _digest(
+        env_fingerprint().encode(),
+        str(int(graph.n)).encode(),
+        str(int(lo)).encode(),
+        str(int(hi)).encode(),
+        str(int(S)).encode(),
+        str(int(delta)).encode(),
+        repr(pad_val).encode(),
+        str(graph.values.dtype).encode(),
+        np.ascontiguousarray(rel_ptr).tobytes(),
+        np.ascontiguousarray(graph.indices[e0:e1]).tobytes(),
+        np.ascontiguousarray(graph.values[e0:e1]).tobytes(),
+    )
+
+
+def plan_shard_fingerprint(sched, vb_lo: int, vb_hi: int, w0: int, w1: int) -> str:
+    """Content key of one frontier-plan shard piece (workers ``[w0, w1)``).
+
+    Hashes what :func:`repro.dist.engine_sharded.build_plan_shard` reads: the
+    shard's slices of the schedule's ``src``/``dst_local``/``rows`` arrays,
+    its owned vertex interval, and ``(n, delta)``.  The shard-local index
+    arrays (halo, src_loc, rows_loc) depend on nothing else, so a mutation
+    that leaves these workers' stripes byte-identical reuses the piece.
+    """
+    return _digest(
+        env_fingerprint().encode(),
+        str(int(sched.n)).encode(),
+        str(int(sched.delta)).encode(),
+        str(int(vb_lo)).encode(),
+        str(int(vb_hi)).encode(),
+        np.ascontiguousarray(np.asarray(sched.src)[:, w0:w1]).tobytes(),
+        np.ascontiguousarray(np.asarray(sched.dst_local)[:, w0:w1]).tobytes(),
+        np.ascontiguousarray(np.asarray(sched.rows)[:, w0:w1]).tobytes(),
     )
 
 

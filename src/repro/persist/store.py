@@ -150,6 +150,62 @@ class SolverCache:
             return None
 
     # ------------------------------------------------------------------ #
+    # shared per-worker stripes (content-addressed, cross-namespace)
+    # ------------------------------------------------------------------ #
+    # Stripes live OUTSIDE the namespace on purpose: a graph mutation changes
+    # the namespace (it hashes the whole graph), so per-namespace stripe
+    # storage would never be warm after an update.  The digest alone proves
+    # reusability (it hashes the block's own edge content + env), making the
+    # shared directory safe across graphs, problems, and solvers.
+
+    def _stripe_path(self, digest: str) -> Path:
+        return self.root / f"v{CACHE_FORMAT}" / "stripes" / f"{digest[:24]}.npz"
+
+    def save_stripe(self, digest: str, stripe: dict) -> None:
+        """Persist one worker stripe under its content digest (atomic)."""
+        path = self._stripe_path(digest)
+        try:
+            path.parent.mkdir(parents=True, exist_ok=True)
+        except OSError:  # pragma: no cover - best-effort persistence
+            return
+        _save_npz(path, stripe)
+
+    def load_stripe(self, digest: str) -> dict | None:
+        """The stripe dict for ``digest`` or ``None`` (corruption ⇒ miss)."""
+        try:
+            with np.load(self._stripe_path(digest), allow_pickle=False) as arrays:
+                out = {k: np.asarray(arrays[k]) for k in arrays.files}
+            if not {"src", "val", "dst_local", "rows"} <= out.keys():
+                return None
+            return out
+        except Exception:
+            return None
+
+    # ------------------------------------------------------------------ #
+    # shared frontier-plan shard pieces (content-addressed, cross-namespace)
+    # ------------------------------------------------------------------ #
+    def _plan_shard_path(self, digest: str) -> Path:
+        return self.root / f"v{CACHE_FORMAT}" / "planshards" / f"{digest[:24]}.npz"
+
+    def save_plan_shard(self, digest: str, piece: dict) -> None:
+        path = self._plan_shard_path(digest)
+        try:
+            path.parent.mkdir(parents=True, exist_ok=True)
+        except OSError:  # pragma: no cover - best-effort persistence
+            return
+        _save_npz(path, piece)
+
+    def load_plan_shard(self, digest: str) -> dict | None:
+        try:
+            with np.load(self._plan_shard_path(digest), allow_pickle=False) as arrays:
+                out = {k: np.asarray(arrays[k]) for k in arrays.files}
+            if not {"halo", "src_loc", "rows_loc"} <= out.keys():
+                return None
+            return out
+        except Exception:
+            return None
+
+    # ------------------------------------------------------------------ #
     # frontier halo plans
     # ------------------------------------------------------------------ #
     def _plan_path(self, delta: int, D: int) -> Path:
@@ -214,20 +270,43 @@ class SolverCache:
     # ------------------------------------------------------------------ #
     # δ-model + production observations
     # ------------------------------------------------------------------ #
-    def save_delta_model(self, model: DeltaModel, best_delta: int) -> None:
-        payload = {"best_delta": int(best_delta), "model": model.to_dict()}
+    def save_delta_model(
+        self, model: DeltaModel, best_delta: int, regime: str = "cold"
+    ) -> None:
+        """Persist one regime's model, preserving the other regime's section.
+
+        The cold regime keeps the legacy top-level keys (old caches stay
+        readable); any other regime writes ``<regime>_model`` /
+        ``<regime>_best_delta`` alongside.
+        """
+        path = self.dir / "delta_model.json"
         try:
-            _atomic_write_bytes(
-                self.dir / "delta_model.json", json.dumps(payload, indent=1).encode()
-            )
+            payload = json.loads(path.read_text())
+        except Exception:
+            payload = {}
+        if regime == "cold":
+            payload["best_delta"] = int(best_delta)
+            payload["model"] = model.to_dict()
+        else:
+            payload[f"{regime}_best_delta"] = int(best_delta)
+            payload[f"{regime}_model"] = model.to_dict()
+        try:
+            _atomic_write_bytes(path, json.dumps(payload, indent=1).encode())
         except OSError:  # pragma: no cover - best-effort persistence
             pass
 
-    def load_delta_model(self) -> tuple[DeltaModel, int] | None:
-        """``(model, best_delta)`` as last fitted/migrated, or ``None``."""
+    def load_delta_model(
+        self, regime: str = "cold"
+    ) -> tuple[DeltaModel, int] | None:
+        """``(model, best_delta)`` for ``regime`` as last fitted, or ``None``."""
         try:
             payload = json.loads((self.dir / "delta_model.json").read_text())
-            return DeltaModel.from_dict(payload["model"]), int(payload["best_delta"])
+            if regime == "cold":
+                model, best = payload["model"], payload["best_delta"]
+            else:
+                model = payload[f"{regime}_model"]
+                best = payload[f"{regime}_best_delta"]
+            return DeltaModel.from_dict(model), int(best)
         except Exception:
             return None
 
@@ -244,14 +323,21 @@ class SolverCache:
         total_time_s: float,
         backend: str,
         kind: str = "solve",
+        regime: str = "cold",
     ) -> None:
-        """Append one production ``(δ, rounds, time)`` datapoint (JSONL)."""
+        """Append one production ``(δ, rounds, time)`` datapoint (JSONL).
+
+        ``regime`` separates cold solves from incremental warm restarts —
+        incremental round counts are far lower for the same δ, so mixing the
+        regimes in one fit would bias both curves.
+        """
         row = {
             "delta": int(delta),
             "rounds": int(rounds),
             "total_time_s": float(total_time_s),
             "backend": backend,
             "kind": kind,
+            "regime": regime,
         }
         path = self.dir / "observations.jsonl"
         try:
@@ -282,6 +368,7 @@ class SolverCache:
                         "total_time_s": float(row["total_time_s"]),
                         "backend": row.get("backend", "?"),
                         "kind": row.get("kind", "solve"),
+                        "regime": row.get("regime", "cold"),
                     }
                 )
             except (ValueError, KeyError, TypeError):

@@ -24,6 +24,7 @@ device).
 
 from __future__ import annotations
 
+import dataclasses
 import math
 import time
 
@@ -31,7 +32,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.delta_model import fit_delta_model, refit_delta_model
+from repro.core.delta_model import fit_delta_model, refit_delta_models
 from repro.core.engine import (
     MIN_CHUNK,
     DeviceSchedule,
@@ -40,10 +41,17 @@ from repro.core.engine import (
     host_loop,
     make_schedule,
     make_solve_fn_q,
+    make_solve_fn_q_dyn,
     round_fn_pallas_q,
     round_fn_q,
+    round_fn_q_dyn,
+    schedule_args,
 )
-from repro.graphs.formats import CSRGraph
+from repro.graphs.formats import (
+    CSRGraph,
+    assemble_stripe_schedule,
+    build_worker_stripe,
+)
 from repro.graphs.partition import PARTITION_METHODS, Partition
 from repro.solve.problem import Problem
 
@@ -117,6 +125,7 @@ class Solver:
         self.tol = problem.tol if tol is None else tol
         self.max_rounds = problem.max_rounds if max_rounds is None else max_rounds
         self.delta_model = None  # set by the first δ="auto" probe
+        self.delta_model_incremental = None  # per-regime fit (evolving graphs)
 
         self._mesh = mesh
         sr = problem.semiring
@@ -139,14 +148,21 @@ class Solver:
         self._bounds = None
         self._partition = None
         self._auto_delta = None
+        self._auto_delta_incremental = None
         self._schedules: dict[int, DeviceSchedule] = {}
         self._plans: dict[tuple, object] = {}
         self._compiled: dict[tuple, object] = {}
         self._last_compile_s = 0.0
+        self._last_x = None  # fixed point of the most recent solve (host copy)
+        self._last_report = None  # UpdateReport of the most recent apply_updates
         self.stats = {
             "solves": 0,
             "schedule_builds": 0,
             "plan_builds": 0,
+            "stripe_builds": 0,
+            "stripe_loads": 0,
+            "plan_shard_builds": 0,
+            "plan_shard_loads": 0,
             "traces": 0,
             "compiles": 0,
             "compile_time_s": 0.0,
@@ -155,31 +171,36 @@ class Solver:
         self.reprobe_every = reprobe_every
         self._obs_since_refit = 0
         self._reprobing = False
+        self._cache_dir = cache_dir
+        if problem.takes_query:
+            self._q_template = (
+                problem.default_query(graph)
+                if problem.default_query is not None
+                else np.zeros((graph.n,), dtype=sr.dtype)
+            )
+        else:
+            self._q_template = _NO_QUERY
         self.persist = None
         if cache_dir is not None:
-            from repro.persist import SolverCache
-
-            if problem.takes_query:
-                q_template = (
-                    problem.default_query(graph)
-                    if problem.default_query is not None
-                    else np.zeros((graph.n,), dtype=sr.dtype)
-                )
-            else:
-                q_template = _NO_QUERY
-            self.persist = SolverCache.for_solver(
-                cache_dir,
-                self._sched_graph,
-                problem,
-                self._row_update_q,
-                q_template,
-                n_workers,
-                partition_method,
-                min_chunk,
-                self.tol,
-                self.max_rounds,
-            )
+            self.persist = self._make_persist()
             self._warm_from_persist()
+
+    def _make_persist(self):
+        """The content-addressed store namespace for the *current* graph."""
+        from repro.persist import SolverCache
+
+        return SolverCache.for_solver(
+            self._cache_dir,
+            self._sched_graph,
+            self.problem,
+            self._row_update_q,
+            self._q_template,
+            self.n_workers,
+            self.partition_method,
+            self.min_chunk,
+            self.tol,
+            self.max_rounds,
+        )
 
     def _warm_from_persist(self):
         """Load the δ-model eagerly — the one entry with no lazy fallback.
@@ -196,6 +217,10 @@ class Solver:
             self.delta_model, best = loaded
             self._auto_delta = int(min(best, self.block_size))
             self.stats["cache_loads"] += 1
+        loaded_inc = self.persist.load_delta_model(regime="incremental")
+        if loaded_inc is not None:
+            self.delta_model_incremental, best_inc = loaded_inc
+            self._auto_delta_incremental = int(min(best_inc, self.block_size))
 
     # ------------------------------------------------------------------ #
     # δ resolution + schedule/plan caches
@@ -306,25 +331,31 @@ class Solver:
         try:
             old = self.resolve_delta("auto")  # probes or loads the base model
             obs = self.persist.load_observations()
-            pairs = [(o["delta"], o["rounds"]) for o in obs]
-            self.delta_model = refit_delta_model(self.delta_model, pairs)
+            models = refit_delta_models(self.delta_model, obs)
+            self.delta_model = models.get("cold", self.delta_model)
             new = int(min(self.delta_model.best_delta(), self.block_size))
             self._auto_delta = new
             self._obs_since_refit = 0
             self.persist.save_delta_model(self.delta_model, new)
+            if "incremental" in models:
+                inc = models["incremental"]
+                self.delta_model_incremental = inc
+                inc_best = int(min(inc.best_delta(), self.block_size))
+                self._auto_delta_incremental = inc_best
+                self.persist.save_delta_model(inc, inc_best, regime="incremental")
             return old, new
         finally:
             self._reprobing = False
 
     def _record_observation(
         self, delta: int, rounds: int, total_time_s: float, backend: str,
-        kind: str = "solve",
+        kind: str = "solve", regime: str = "cold",
     ):
         """Log one observed (δ, rounds, time); maybe trigger a refit."""
         if self.persist is None:
             return
         self.persist.record_observation(
-            delta, rounds, total_time_s, backend=backend, kind=kind
+            delta, rounds, total_time_s, backend=backend, kind=kind, regime=regime
         )
         self._obs_since_refit += 1
         if (
@@ -339,7 +370,17 @@ class Solver:
             self.reprobe_delta()
 
     def schedule(self, delta=None) -> DeviceSchedule:
-        """The cached device schedule for ``delta`` (build on first use)."""
+        """The cached device schedule for ``delta`` (build on first use).
+
+        Resolution order: in-memory → whole-schedule npz → **per-worker
+        stripes** from the shared content-addressed store (evolving-graph
+        path: after a mutation the namespace changes, so the whole-schedule
+        entry misses, but every stripe whose block the batch didn't touch
+        still hits by content digest — only the touched stripes build cold).
+        ``schedule_builds`` counts schedules with ≥ 1 cold stripe, preserving
+        the warm-start gate's "zero builds" meaning; ``stripe_builds`` /
+        ``stripe_loads`` break the same event down per worker.
+        """
         delta_eff = self.resolve_delta(delta)
         sched = self._schedules.get(delta_eff)
         if sched is None and self.persist is not None:
@@ -347,6 +388,8 @@ class Solver:
             if sched is not None:
                 self._schedules[delta_eff] = sched
                 self.stats["cache_loads"] += 1
+        if sched is None and self.persist is not None:
+            sched = self._schedule_from_stripes(delta_eff)
         if sched is None:
             sched = make_schedule(
                 self._sched_graph,
@@ -363,10 +406,73 @@ class Solver:
                 self.persist.save_schedule(sched)
         return sched
 
+    def _schedule_from_stripes(self, delta_eff: int) -> DeviceSchedule:
+        """Assemble the schedule stripe-by-stripe through the shared store."""
+        from repro.persist.keys import stripe_fingerprint
+
+        bounds = self.bounds
+        pad_val = self.problem.semiring.pad_edge_val
+        B = self.block_size
+        delta_eff = int(min(delta_eff, B))
+        S = -(-B // delta_eff)  # ceil — same clamp as build_stripe_schedule
+        stripes, built = [], 0
+        for w in range(self.n_workers):
+            lo, hi = int(bounds[w]), int(bounds[w + 1])
+            digest = stripe_fingerprint(
+                self._sched_graph, lo, hi, S, delta_eff, pad_val
+            )
+            stripe = self.persist.load_stripe(digest)
+            if stripe is None:
+                stripe = build_worker_stripe(
+                    self._sched_graph, lo, hi, S, delta_eff, pad_val
+                )
+                self.persist.save_stripe(digest, stripe)
+                self.stats["stripe_builds"] += 1
+                built += 1
+            else:
+                self.stats["stripe_loads"] += 1
+            stripes.append(stripe)
+        host = assemble_stripe_schedule(
+            self._sched_graph, bounds, delta_eff, pad_val, stripes
+        )
+        sched = DeviceSchedule(
+            n=host.n,
+            P=host.P,
+            delta=host.delta,
+            S=host.S,
+            M=host.M,
+            src=jnp.asarray(host.src),
+            val=jnp.asarray(host.val),
+            dst_local=jnp.asarray(host.dst_local),
+            rows=jnp.asarray(host.rows),
+            edges=host.edges,
+            padding_overhead=host.padding_overhead,
+            block_bounds=np.asarray(host.block_bounds),
+        )
+        self._schedules[delta_eff] = sched
+        if built:
+            self.stats["schedule_builds"] += 1
+        else:
+            self.stats["cache_loads"] += 1
+        self.persist.save_schedule(sched)
+        return sched
+
     def frontier_plan(self, sched: DeviceSchedule):
-        """The cached owner-computes halo plan for ``sched`` on this mesh."""
+        """The cached owner-computes halo plan for ``sched`` on this mesh.
+
+        Mirrors :meth:`schedule`'s tiers: in-memory → whole-plan npz →
+        per-shard pieces from the shared content-addressed store (only the
+        shards whose workers a mutation touched rebuild; the global assembly
+        — exchange indices, gather maps — is recomputed cheaply either way).
+        ``plan_builds`` counts plans with ≥ 1 cold shard.
+        """
         from repro.dist.compat import mesh_axis_sizes
-        from repro.dist.engine_sharded import make_frontier_plan
+        from repro.dist.engine_sharded import (
+            assemble_frontier_plan,
+            build_plan_shard,
+            make_frontier_plan,
+            plan_shard_bounds,
+        )
 
         D = mesh_axis_sizes(self._default_mesh())[self.mesh_axis]
         key = (sched.delta, D)
@@ -376,6 +482,35 @@ class Solver:
             if plan is not None:
                 self._plans[key] = plan
                 self.stats["cache_loads"] += 1
+        if plan is None and self.persist is not None and sched.P % D == 0:
+            from repro.persist.keys import plan_shard_fingerprint
+
+            vb = plan_shard_bounds(sched, D)
+            P_loc = sched.P // D
+            pieces, built = [], 0
+            for d in range(D):
+                w0, w1 = d * P_loc, (d + 1) * P_loc
+                digest = plan_shard_fingerprint(
+                    sched, int(vb[d]), int(vb[d + 1]), w0, w1
+                )
+                piece = self.persist.load_plan_shard(digest)
+                if piece is None:
+                    piece = build_plan_shard(
+                        sched, int(vb[d]), int(vb[d + 1]), w0, w1
+                    )
+                    self.persist.save_plan_shard(digest, piece)
+                    self.stats["plan_shard_builds"] += 1
+                    built += 1
+                else:
+                    self.stats["plan_shard_loads"] += 1
+                pieces.append(piece)
+            plan = assemble_frontier_plan(sched, D, pieces)
+            self._plans[key] = plan
+            if built:
+                self.stats["plan_builds"] += 1
+            else:
+                self.stats["cache_loads"] += 1
+            self.persist.save_plan(plan)
         if plan is None:
             plan = make_frontier_plan(sched, D)
             self._plans[key] = plan
@@ -477,8 +612,14 @@ class Solver:
         frontier: str | None = None,
         tol: float | None = None,
         max_rounds: int | None = None,
+        regime: str = "cold",
     ) -> EngineResult:
-        """Run to convergence; returns the engine's instrumented result."""
+        """Run to convergence; returns the engine's instrumented result.
+
+        ``regime`` tags the persisted observation row (``"cold"`` for from-
+        scratch solves, ``"incremental"`` when :meth:`resolve` seeds from a
+        prior fixed point) so the δ-model learns each curve separately.
+        """
         backend = backend or self.default_backend
         if backend not in BACKENDS:
             raise ValueError(f"backend must be one of {BACKENDS}, got {backend!r}")
@@ -497,28 +638,56 @@ class Solver:
             else:
                 rnd = self._compiled_round(sched, x_ext, q, "sharded", frontier)
             result = self._host_loop(sched, rnd, x_ext, tol, max_rounds)
+        self._last_x = np.asarray(result.x)
         self._record_observation(
-            sched.delta, result.rounds, result.total_time_s, backend
+            sched.delta, result.rounds, result.total_time_s, backend, regime=regime
         )
         return result
 
     def _solve_fused(self, backend, sched, x_ext, q, tol, max_rounds) -> EngineResult:
-        """The fused ``lax.while_loop`` path: ``backend ∈ {"jit", "pallas"}``."""
+        """The fused ``lax.while_loop`` path: ``backend ∈ {"jit", "pallas"}``.
+
+        The jit backend compiles the *dynamic-schedule* loop — schedule
+        arrays are call arguments, keyed by their shape class ``(δ, S, M)``
+        — so an :meth:`apply_updates` that patches stripes in place replays
+        the same executable with the new arrays, zero retraces.  The pallas
+        kernel bakes the schedule into its grid, so it keeps the closure
+        form (mutation drops its cache entry).
+        """
         sr = self.problem.semiring
-        fn = self.compile_cached(
-            (backend, sched.delta),
-            make_solve_fn_q(
-                sched,
-                sr,
-                self._row_update_q,
-                self.problem.residual,
-                round_builder=_FUSED_ROUND_BUILDERS[backend],
-            ),
-            x_ext,
-            q,
-            jnp.asarray(tol, jnp.float32),
-            jnp.asarray(max_rounds, jnp.int32),
-        )
+        if backend == "jit":
+            sargs = schedule_args(sched)
+            fn = self.compile_cached(
+                ("dyn", backend, sched.delta, sched.S, sched.M),
+                make_solve_fn_q_dyn(
+                    sched, sr, self._row_update_q, self.problem.residual
+                ),
+                x_ext,
+                q,
+                *sargs,
+                jnp.asarray(tol, jnp.float32),
+                jnp.asarray(max_rounds, jnp.int32),
+            )
+            compiled = fn
+
+            def fn(x, qq, t, m):
+                return compiled(x, qq, *sargs, t, m)
+
+        else:
+            fn = self.compile_cached(
+                (backend, sched.delta),
+                make_solve_fn_q(
+                    sched,
+                    sr,
+                    self._row_update_q,
+                    self.problem.residual,
+                    round_builder=_FUSED_ROUND_BUILDERS[backend],
+                ),
+                x_ext,
+                q,
+                jnp.asarray(tol, jnp.float32),
+                jnp.asarray(max_rounds, jnp.int32),
+            )
         return execute_solve_fn(
             fn,
             sched,
@@ -533,11 +702,21 @@ class Solver:
     def _compiled_round(self, sched, x_ext, q, backend, frontier="replicated"):
         """Cached compiled one-round ``x_ext -> x_ext`` for host/pallas/sharded."""
         sr = self.problem.semiring
-        if backend in ("host", "pallas"):
-            builder = round_fn_q if backend == "host" else round_fn_pallas_q
+        if backend == "host":
+            # dynamic form: survives same-shape schedule mutations, like jit
+            sargs = schedule_args(sched)
             rnd = self.compile_cached(
-                (backend, "round", sched.delta),
-                builder(sched, sr, self._row_update_q),
+                ("dyn", "host", "round", sched.delta, sched.S, sched.M),
+                round_fn_q_dyn(sched, sr, self._row_update_q),
+                x_ext,
+                q,
+                *sargs,
+            )
+            return lambda x: rnd(x, q, *sargs)
+        if backend == "pallas":
+            rnd = self.compile_cached(
+                ("pallas", "round", sched.delta),
+                round_fn_pallas_q(sched, sr, self._row_update_q),
                 x_ext,
                 q,
             )
@@ -589,6 +768,206 @@ class Solver:
             tol,
             max_rounds,
             compile_time_s=self._last_compile_s,
+        )
+
+    # ------------------------------------------------------------------ #
+    # evolving graphs: apply_updates + incremental resolve
+    # ------------------------------------------------------------------ #
+    def apply_updates(self, batch):
+        """Mutate the bound graph in place; returns the ``UpdateReport``.
+
+        Rebinds the problem's row update and edge values to the new graph and
+        invalidates **only** what the batch touched: cached schedules keep
+        every stripe whose worker block the affected rows miss (patched in
+        place, same shapes — the dyn-keyed executables replay without a
+        retrace); halo plans and non-dyn executables drop (their index
+        arrays / baked constants are stale); the persist namespace re-derives
+        from the new graph content, carrying the fitted δ-models over and
+        pushing the rebuilt stripes into the shared store so a restarted
+        process stays warm everywhere the batch didn't reach.
+
+        The partition bounds are **pinned** across updates: recomputing a
+        degree-sensitive partition on the mutated graph would shift every
+        block boundary and invalidate all stripes for a one-row change.
+        """
+        bounds = self.bounds  # pin pre-mutation bounds before swapping graphs
+        new_graph, report = self.graph.apply_updates(batch)
+        self.graph = new_graph
+        problem = self.problem
+        self._sched_graph = (
+            new_graph.with_values(problem.edge_values(new_graph))
+            if problem.edge_values is not None
+            else new_graph
+        )
+        self._row_update = problem.make_row_update(new_graph)
+        if problem.takes_query:
+            self._row_update_q = self._row_update
+        else:
+            base = self._row_update
+
+            def _row_update_q(old, reduced, rows, q):
+                return base(old, reduced, rows)
+
+            self._row_update_q = _row_update_q
+        self._bounds = bounds
+        self._partition = None
+        self._plans = {}
+        self._compiled = {
+            k: v for k, v in self._compiled.items() if k and k[0] == "dyn"
+        }
+        if self.persist is not None:
+            old_persist = self.persist
+            self.persist = self._make_persist()
+            # The observation log follows the *logical* graph across
+            # mutations: reprobe_delta needs rounds-vs-δ data accumulated
+            # over many small batches, each of which re-derives the
+            # namespace but barely moves the curve being fitted.
+            old_obs = old_persist.dir / "observations.jsonl"
+            new_obs = self.persist.dir / "observations.jsonl"
+            if old_obs.exists() and not new_obs.exists():
+                try:
+                    new_obs.write_bytes(old_obs.read_bytes())
+                except OSError:
+                    pass
+            if self.delta_model is not None and self._auto_delta is not None:
+                self.persist.save_delta_model(self.delta_model, self._auto_delta)
+            if (
+                self.delta_model_incremental is not None
+                and self._auto_delta_incremental is not None
+            ):
+                self.persist.save_delta_model(
+                    self.delta_model_incremental,
+                    self._auto_delta_incremental,
+                    regime="incremental",
+                )
+        self._patch_schedules(report)
+        self._last_report = report
+        return report
+
+    def _touched_workers(self, affected_rows) -> np.ndarray:
+        """Worker blocks containing any affected destination row."""
+        affected = np.asarray(affected_rows, dtype=np.int64)
+        if affected.size == 0:
+            return np.zeros(0, dtype=np.int64)
+        return np.unique(np.searchsorted(self.bounds, affected, side="right") - 1)
+
+    def _patch_schedules(self, report):
+        """Rebuild only the touched workers' stripes of every cached schedule.
+
+        A stripe that outgrows the schedule's padded width ``M`` forces that
+        δ's schedule to drop for a lazy full rebuild (global re-padding would
+        touch every worker anyway); otherwise the patched arrays keep their
+        shapes, which is what lets the dyn executables replay compile-free.
+        """
+        from repro.persist.keys import stripe_fingerprint
+
+        bounds = self.bounds
+        pad_val = self.problem.semiring.pad_edge_val
+        touched = self._touched_workers(report.affected_rows)
+        for delta_eff, sched in list(self._schedules.items()):
+            stripes, fits = {}, True
+            for w in touched:
+                lo, hi = int(bounds[w]), int(bounds[w + 1])
+                st = build_worker_stripe(
+                    self._sched_graph, lo, hi, sched.S, delta_eff, pad_val
+                )
+                if st["src"].shape[1] > sched.M:
+                    fits = False
+                    break
+                stripes[int(w)] = st
+            if not fits:
+                del self._schedules[delta_eff]
+                continue
+            src = np.asarray(sched.src).copy()
+            val = np.asarray(sched.val).copy()
+            dst_local = np.asarray(sched.dst_local).copy()
+            for w, st in stripes.items():
+                m = st["src"].shape[1]
+                src[:, w, :] = 0
+                src[:, w, :m] = st["src"]
+                val[:, w, :] = pad_val
+                val[:, w, :m] = st["val"]
+                dst_local[:, w, :] = delta_eff
+                dst_local[:, w, :m] = st["dst_local"]
+                # rows[:, w] is untouched: it depends only on (lo, hi, δ, n)
+            self._schedules[delta_eff] = dataclasses.replace(
+                sched,
+                src=jnp.asarray(src),
+                val=jnp.asarray(val),
+                dst_local=jnp.asarray(dst_local),
+                edges=self._sched_graph.nnz,
+                padding_overhead=src.size / max(self._sched_graph.nnz, 1),
+            )
+            if self.persist is not None:
+                for w, st in stripes.items():
+                    digest = stripe_fingerprint(
+                        self._sched_graph,
+                        int(bounds[w]),
+                        int(bounds[w + 1]),
+                        sched.S,
+                        delta_eff,
+                        pad_val,
+                    )
+                    self.persist.save_stripe(digest, st)
+
+    def resolve(
+        self,
+        updates=None,
+        *,
+        x0=None,
+        q=None,
+        delta=None,
+        backend: str | None = None,
+        frontier: str | None = None,
+        tol: float | None = None,
+        max_rounds: int | None = None,
+    ) -> EngineResult:
+        """Incremental re-solve after ``updates`` (an ``EdgeBatch``), seeded
+        from the previous fixed point.
+
+        Applies the batch via :meth:`apply_updates`, repairs the prior fixed
+        point into a valid warm state (:mod:`repro.evolve.restart` — the
+        delete-edge invalidation cone is re-raised for min-plus problems
+        before any re-lowering), and converges on the mutated graph.  The
+        result equals a cold :meth:`solve` on the mutated graph within tol
+        (bit-exact labels for min-plus) in typically far fewer rounds.
+
+        ``x0=`` overrides the warm seed (defaults to this solver's last
+        solve's fixed point).  With ``updates=None`` this is a plain warm
+        re-solve.  ``delta=None``/``"auto"`` prefers the incremental-regime
+        δ* once :meth:`reprobe_delta` has fitted one.
+        """
+        if x0 is None and self._last_x is None:
+            raise ValueError(
+                "resolve() warm-starts from the previous fixed point — "
+                "call solve() first or pass x0="
+            )
+        report = None
+        if updates is not None:
+            report = self.apply_updates(updates)
+        x_prev = np.asarray(x0) if x0 is not None else self._last_x
+        from repro.evolve.restart import warm_start_state
+
+        y = warm_start_state(
+            self.problem,
+            self.graph,
+            self._sched_graph,
+            x_prev,
+            batch=updates,
+            report=report,
+        )
+        if (delta is None and self.default_delta == "auto") or delta == "auto":
+            if self._auto_delta_incremental is not None:
+                delta = self._auto_delta_incremental
+        return self.solve(
+            y,
+            q=q,
+            delta=delta,
+            backend=backend,
+            frontier=frontier,
+            tol=tol,
+            max_rounds=max_rounds,
+            regime="incremental",
         )
 
     def solve_batch(

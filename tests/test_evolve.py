@@ -1,0 +1,409 @@
+"""Evolving graphs: EdgeBatch application, warm restart, targeted invalidation.
+
+Acceptance-criteria coverage for ``repro.evolve``:
+
+* correctness gate — for every problem family (pagerank, ppr, sssp, cc,
+  jacobi) and every update kind (insert, delete, reweight),
+  ``Solver.resolve(updates=...)`` converges to the cold-solve fixed point on
+  the mutated graph: bit-exact labels for min-plus, within the residual
+  bound for plus-times — plus a hypothesis property test over random mixed
+  batches;
+* efficiency gate — incremental re-solves of small batches take strictly
+  fewer rounds (median) than cold solves of the same mutated snapshots, and
+  a restarted process pointed at the same cache rebuilds only the schedule
+  stripes whose rows a mutation touched (the rest load);
+* the per-regime δ-model: observations are tagged ``cold``/``incremental``
+  and refit into separate round-count curves.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.algorithms.jacobi import jacobi_graph
+from repro.core.delta_model import fit_delta_model, refit_delta_models
+from repro.evolve import EdgeBatch, warm_start_state
+from repro.graphs.formats import CSRGraph
+from repro.graphs.generators import make_graph
+from repro.solve import (
+    Solver,
+    cc_problem,
+    jacobi_problem,
+    pagerank_problem,
+    ppr_problem,
+    ppr_teleport,
+    sssp_problem,
+)
+
+try:
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - hypothesis is a dev dependency
+    HAVE_HYPOTHESIS = False
+
+RNG = np.random.default_rng(11)
+
+
+def _edge_list(g):
+    dst = np.repeat(np.arange(g.n, dtype=np.int64), np.diff(g.indptr))
+    return g.indices.astype(np.int64), dst
+
+
+def _pick_edges(g, k, rng, symmetric=False):
+    """k distinct existing edges; with ``symmetric`` both directions exist
+    and only the canonical (src < dst) representative is returned."""
+    src, dst = _edge_list(g)
+    if symmetric:
+        cand = np.flatnonzero(src < dst)
+    else:
+        cand = np.arange(g.nnz)
+    pick = rng.choice(cand, size=k, replace=False)
+    return [(int(src[e]), int(dst[e])) for e in pick]
+
+
+def _fresh_pairs(g, k, rng, forbid_self=True, symmetric=False):
+    """k (src, dst) pairs absent from the graph (both directions if
+    ``symmetric``)."""
+    src, dst = _edge_list(g)
+    keys = set((dst * g.n + src).tolist())
+    out = []
+    while len(out) < k:
+        s, d = (int(v) for v in rng.integers(0, g.n, size=2))
+        if forbid_self and s == d:
+            continue
+        if d * g.n + s in keys or (symmetric and s * g.n + d in keys):
+            continue
+        keys.add(d * g.n + s)
+        if symmetric:
+            keys.add(s * g.n + d)
+        out.append((s, d))
+    return out
+
+
+def _symmetric_graph(scale=7, seed=3) -> CSRGraph:
+    base = make_graph("kron", scale=scale, efactor=8, kind="sssp", seed=seed)
+    src, dst = _edge_list(base)
+    keep = src != dst
+    src, dst = src[keep], dst[keep]
+    return CSRGraph.from_edges(
+        base.n,
+        np.concatenate([src, dst]),
+        np.concatenate([dst, src]),
+        np.zeros(2 * src.size, dtype=np.int32),
+        name="sym",
+    )
+
+
+def _jacobi_system(n=96, seed=5):
+    rng = np.random.default_rng(seed)
+    m = 3 * n
+    rows = rng.integers(0, n, m)
+    cols = rng.integers(0, n, m)
+    keep = rows != cols
+    rows, cols = rows[keep], cols[keep]
+    key = rows * n + cols
+    _, first = np.unique(key, return_index=True)
+    rows, cols = rows[first], cols[first]
+    vals = rng.uniform(-1.0, 1.0, rows.size)
+    row_sum = np.zeros(n)
+    np.add.at(row_sum, rows, np.abs(vals))
+    diag = 2.0 * (row_sum + 1.0)  # strictly diagonally dominant
+    b = rng.uniform(-1.0, 1.0, n)
+    return rows, cols, vals, diag, b
+
+
+class _Case:
+    """One problem family: its graph, problem, query, and batch builders."""
+
+    def __init__(self, name):
+        self.name = name
+        rng = np.random.default_rng(17)
+        if name in ("pagerank", "ppr"):
+            self.g = make_graph("kron", scale=7, efactor=8, kind="pagerank", seed=1)
+            self.problem = pagerank_problem() if name == "pagerank" else ppr_problem()
+            self.q = (
+                ppr_teleport(self.g, [int(np.argmax(self.g.out_degree))])[0]
+                if name == "ppr"
+                else None
+            )
+            ins_val = rw_val = lambda old=None: 0.05  # noqa: E731
+        elif name == "sssp":
+            self.g = make_graph("kron", scale=7, efactor=8, kind="sssp", seed=1)
+            self.problem = sssp_problem(source=int(np.argmax(self.g.out_degree)))
+            self.q = None
+            ins_val = rw_val = lambda old=None: int(rng.integers(1, 256))  # noqa: E731
+        elif name == "cc":
+            self.g = _symmetric_graph()
+            self.problem = cc_problem()
+            self.q = None
+            ins_val = rw_val = lambda old=None: 0  # noqa: E731
+        else:  # jacobi
+            rows, cols, vals, diag, b = _jacobi_system()
+            self.g = jacobi_graph(len(diag), rows, cols, vals, diag)
+            self.problem = jacobi_problem(diag, b)
+            self.q = None
+            ins_val = rw_val = lambda old=None: 0.02  # noqa: E731
+        self._rng = rng
+        self._ins_val = ins_val
+        self._rw_val = rw_val
+        self.symmetric = name == "cc"
+
+    def batch(self, kind: str) -> EdgeBatch:
+        rng = self._rng
+        if kind == "insert":
+            pairs = _fresh_pairs(self.g, 3, rng, symmetric=self.symmetric)
+            ops = [(s, d, self._ins_val()) for s, d in pairs]
+            if self.symmetric:
+                ops += [(d, s, v) for s, d, v in ops]
+            return EdgeBatch.from_ops(inserts=ops)
+        if kind == "delete":
+            pairs = _pick_edges(self.g, 3, rng, symmetric=self.symmetric)
+            if self.symmetric:
+                pairs = pairs + [(d, s) for s, d in pairs]
+            return EdgeBatch.from_ops(deletes=pairs)
+        pairs = _pick_edges(self.g, 3, rng, symmetric=self.symmetric)
+        ops = [(s, d, self._rw_val()) for s, d in pairs]
+        if self.symmetric:
+            ops += [(d, s, v) for s, d, v in ops]
+        return EdgeBatch.from_ops(reweights=ops)
+
+
+def _solver(g, problem, **kw):
+    kw.setdefault("n_workers", 4)
+    kw.setdefault("delta", 16)
+    kw.setdefault("backend", "host")
+    return Solver(g, problem, **kw)
+
+
+def _assert_fixed_points_match(problem, xi, xc):
+    xi, xc = np.asarray(xi), np.asarray(xc)
+    if problem.semiring.name == "min_plus":
+        np.testing.assert_array_equal(xi, xc)
+    else:
+        # each run stops within tol of the fixed point in the L1 residual
+        # metric; 20·tol bounds the gap between two converged states for
+        # every contraction factor used here
+        assert np.abs(xi - xc).sum() <= 20 * problem.tol
+
+
+class TestResolveMatchesCold:
+    """Correctness gate: incremental == cold on the mutated graph."""
+
+    @pytest.mark.parametrize("kind", ["insert", "delete", "reweight"])
+    @pytest.mark.parametrize("name", ["pagerank", "ppr", "sssp", "cc", "jacobi"])
+    def test_resolve_matches_cold(self, name, kind):
+        case = _Case(name)
+        inc = _solver(case.g, case.problem)
+        inc.solve(q=case.q) if case.q is not None else inc.solve()
+        batch = case.batch(kind)
+        ri = (
+            inc.resolve(updates=batch, q=case.q)
+            if case.q is not None
+            else inc.resolve(updates=batch)
+        )
+        cold = _solver(inc.graph, case.problem)
+        rc = cold.solve(q=case.q) if case.q is not None else cold.solve()
+        assert ri.converged and rc.converged
+        _assert_fixed_points_match(case.problem, ri.x, rc.x)
+
+    def test_resolve_requires_prior_fixed_point(self):
+        case = _Case("sssp")
+        sv = _solver(case.g, case.problem)
+        with pytest.raises(ValueError, match="warm-starts"):
+            sv.resolve(updates=case.batch("delete"))
+
+    def test_resolve_without_updates_is_warm_resolve(self):
+        case = _Case("sssp")
+        sv = _solver(case.g, case.problem)
+        r0 = sv.solve()
+        r1 = sv.resolve()
+        assert r1.rounds <= 1 + 0 * r0.rounds  # already at the fixed point
+        np.testing.assert_array_equal(r0.x, r1.x)
+
+    def test_minplus_delete_cone_reraised(self):
+        """A delete that invalidates downstream labels must re-raise them:
+        the warm state is never below the new fixed point."""
+        case = _Case("sssp")
+        inc = _solver(case.g, case.problem)
+        x_prev = np.asarray(inc.solve().x)
+        batch = case.batch("delete")
+        g2, report = inc.graph.apply_updates(batch)
+        ev = case.problem.edge_values
+        sched2 = g2.with_values(ev(g2)) if ev is not None else g2
+        y = warm_start_state(
+            case.problem, g2, sched2, x_prev, batch=batch, report=report
+        )
+        x_new = np.asarray(_solver(g2, case.problem).solve().x)
+        assert np.all(y.astype(np.int64) >= x_new.astype(np.int64))
+
+
+if HAVE_HYPOTHESIS:
+    _G_PROP = make_graph("kron", scale=6, efactor=8, kind="sssp", seed=2)
+    _PROB_PROP = sssp_problem(source=int(np.argmax(_G_PROP.out_degree)))
+    _X_STAR = np.asarray(
+        Solver(_G_PROP, _PROB_PROP, n_workers=2, delta=8, backend="host").solve().x
+    )
+
+    @given(st.integers(0, 2**31 - 1), st.integers(1, 12))
+    @settings(
+        deadline=None, max_examples=10, suppress_health_check=[HealthCheck.too_slow]
+    )
+    def test_resolve_matches_cold_on_random_batches(seed, k):
+        """Random mixed insert/delete/reweight batches: bit-exact labels."""
+        rng = np.random.default_rng(seed)
+        g = _G_PROP
+        n_del = rng.integers(0, k + 1)
+        n_rw = rng.integers(0, k + 1 - n_del)
+        n_ins = k - n_del - n_rw
+        picked = _pick_edges(g, int(n_del + n_rw), rng)
+        deletes = picked[: int(n_del)]
+        reweights = [(s, d, int(rng.integers(1, 256))) for s, d in picked[int(n_del) :]]
+        inserts = [
+            (s, d, int(rng.integers(1, 256)))
+            for s, d in _fresh_pairs(g, int(n_ins), rng)
+        ]
+        batch = EdgeBatch.from_ops(
+            inserts=inserts, deletes=deletes, reweights=reweights
+        )
+        inc = Solver(g, _PROB_PROP, n_workers=2, delta=8, backend="host")
+        ri = inc.resolve(updates=batch, x0=_X_STAR)
+        rc = Solver(inc.graph, _PROB_PROP, n_workers=2, delta=8, backend="host").solve()
+        np.testing.assert_array_equal(np.asarray(ri.x), np.asarray(rc.x))
+
+
+class TestEfficiencyGates:
+    def test_small_batches_beat_cold_median_rounds(self):
+        g = make_graph("kron", scale=8, efactor=8, kind="sssp", seed=6)
+        prob = sssp_problem(source=int(np.argmax(g.out_degree)))
+        inc = _solver(g, prob, n_workers=4, delta=32)
+        inc.solve()
+        rng = np.random.default_rng(0)
+        inc_rounds, cold_rounds = [], []
+        for _ in range(3):
+            batch = EdgeBatch.from_ops(deletes=_pick_edges(inc.graph, 8, rng))
+            ri = inc.resolve(updates=batch)
+            rc = _solver(inc.graph, prob, n_workers=4, delta=32).solve()
+            np.testing.assert_array_equal(np.asarray(ri.x), np.asarray(rc.x))
+            inc_rounds.append(ri.rounds)
+            cold_rounds.append(rc.rounds)
+        assert np.median(inc_rounds) < np.median(cold_rounds)
+
+    def test_restarted_process_rebuilds_only_touched_stripes(self, tmp_path):
+        """Cross-process targeted invalidation: after an out-of-band mutation
+        touching one worker's rows, a fresh solver on the same cache loads
+        every other worker's stripe and builds exactly the touched one."""
+        g = make_graph("kron", scale=7, efactor=8, kind="sssp", seed=6)
+        prob = sssp_problem(source=int(np.argmax(g.out_degree)))
+        kw = dict(
+            n_workers=4,
+            delta=16,
+            backend="host",
+            partition_method="equal",  # degree-insensitive: bounds survive
+            cache_dir=tmp_path,
+        )
+        s1 = Solver(g, prob, **kw)
+        s1.solve()
+        assert s1.stats["stripe_builds"] == 4
+        assert s1.stats["stripe_loads"] == 0
+        bounds = s1.bounds
+        src, dst = _edge_list(g)
+        block0 = np.flatnonzero(dst < bounds[1])  # rows owned by worker 0
+        pick = block0[:2]
+        batch = EdgeBatch.from_ops(deletes=[(int(src[e]), int(dst[e])) for e in pick])
+        g2, report = g.apply_updates(batch)
+        assert np.all(report.affected_rows < bounds[1])
+        s2 = Solver(g2, prob, **kw)  # "restarted process"
+        r2 = s2.solve()
+        assert s2.stats["stripe_builds"] == 1  # only worker 0 rebuilt
+        assert s2.stats["stripe_loads"] == 3  # the rest came from the store
+        rc = _solver(g2, prob, n_workers=4, delta=16, partition_method="equal").solve()
+        np.testing.assert_array_equal(np.asarray(r2.x), np.asarray(rc.x))
+
+    def test_in_process_mutation_persists_touched_stripes(self, tmp_path):
+        """apply_updates patches schedules in place AND refreshes the stripe
+        store, so the next process is warm for the mutated graph too."""
+        g = make_graph("kron", scale=7, efactor=8, kind="sssp", seed=6)
+        prob = sssp_problem(source=int(np.argmax(g.out_degree)))
+        kw = dict(
+            n_workers=4,
+            delta=16,
+            backend="host",
+            partition_method="equal",
+            cache_dir=tmp_path,
+        )
+        s1 = Solver(g, prob, **kw)
+        s1.solve()
+        rng = np.random.default_rng(3)
+        batch = EdgeBatch.from_ops(deletes=_pick_edges(g, 2, rng))
+        s1.resolve(updates=batch)
+        s2 = Solver(s1.graph, prob, **kw)
+        s2.solve()
+        assert s2.stats["stripe_builds"] == 0  # every stripe served warm
+        assert s2.stats["stripe_loads"] == 4
+
+
+class TestUpdatePrimitives:
+    def test_apply_updates_keeps_partition_and_patches_schedule(self):
+        case = _Case("sssp")
+        sv = _solver(case.g, case.problem)
+        r0 = sv.solve()
+        bounds_before = sv.bounds.copy()
+        batch = case.batch("delete")
+        report = sv.apply_updates(batch)
+        assert report.deleted == batch.n_deletes
+        np.testing.assert_array_equal(sv.bounds, bounds_before)
+        rc = _solver(sv.graph, case.problem).solve()
+        r1 = sv.solve()  # cold solve on the patched schedule
+        np.testing.assert_array_equal(np.asarray(r1.x), np.asarray(rc.x))
+        assert r0.converged and r1.converged
+
+    def test_dyn_backend_replays_compiled_loop_after_mutation(self):
+        """The jit backend's dynamic-schedule executable survives
+        apply_updates: same (δ, S, M) shape class → zero new traces."""
+        case = _Case("sssp")
+        sv = Solver(case.g, case.problem, n_workers=4, delta=16, backend="jit")
+        sv.solve()
+        traces_before = sv.stats["traces"]
+        batch = case.batch("reweight")
+        ri = sv.resolve(updates=batch)
+        assert sv.stats["traces"] == traces_before
+        rc = _solver(sv.graph, case.problem).solve()
+        np.testing.assert_array_equal(np.asarray(ri.x), np.asarray(rc.x))
+
+
+class TestPerRegimeDeltaModel:
+    def test_observations_tagged_and_refit_per_regime(self, tmp_path):
+        g = make_graph("kron", scale=7, efactor=8, kind="sssp", seed=6)
+        prob = sssp_problem(source=int(np.argmax(g.out_degree)))
+        sv = Solver(g, prob, n_workers=4, delta=16, backend="host", cache_dir=tmp_path)
+        sv.solve()
+        rng = np.random.default_rng(1)
+        sv.resolve(updates=EdgeBatch.from_ops(deletes=_pick_edges(sv.graph, 2, rng)))
+        rows = sv.persist.load_observations()
+        regimes = {r["regime"] for r in rows}
+        assert regimes == {"cold", "incremental"}
+        model = fit_delta_model(g, P=4, r_sync=8, r_async=12)
+        models = refit_delta_models(model, rows)
+        assert set(models) == {"cold", "incremental"}
+        # the incremental curve learns the cheaper re-solves
+        assert models["incremental"].rounds(16) < models["cold"].rounds(16)
+
+    def test_regime_models_roundtrip_store(self, tmp_path):
+        g = make_graph("kron", scale=7, efactor=8, kind="sssp", seed=6)
+        prob = sssp_problem(source=0)
+        sv = Solver(g, prob, n_workers=4, delta=16, backend="host", cache_dir=tmp_path)
+        model = fit_delta_model(g, P=4, r_sync=8, r_async=12)
+        inc_model = dataclasses.replace(model, r_sync=2.0, r_async=3.0)
+        sv.persist.save_delta_model(model, 64)
+        sv.persist.save_delta_model(inc_model, 16, regime="incremental")
+        got_cold = sv.persist.load_delta_model()
+        got_inc = sv.persist.load_delta_model(regime="incremental")
+        assert got_cold is not None and got_cold[1] == 64
+        assert got_inc is not None and got_inc[1] == 16
+        assert got_inc[0].r_sync == 2.0
+        # regime keys are additive: writing one never clobbers the other
+        sv.persist.save_delta_model(inc_model, 32, regime="incremental")
+        assert sv.persist.load_delta_model()[1] == 64

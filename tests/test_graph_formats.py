@@ -1,0 +1,136 @@
+"""CSRGraph construction edge cases: from_edges, with_values, apply_updates.
+
+The mutation layer (``repro.evolve``) leans on CSR canonical order — edges
+sorted by ``dst * n + src``, stable — far harder than the static pipeline
+ever did, so the constructors' corner semantics (duplicate edges, self
+loops, isolated vertices, the empty graph) are pinned here, along with the
+``apply_updates`` / ``inverse`` bit-identical round trip they enable.
+"""
+
+import numpy as np
+import pytest
+
+from repro.evolve import EdgeBatch
+from repro.graphs.formats import CSRGraph
+from repro.graphs.generators import make_graph
+
+
+class TestFromEdges:
+    def test_duplicate_edges_keep_first_occurrence(self):
+        g = CSRGraph.from_edges(
+            4,
+            src=[0, 0, 1, 0],
+            dst=[1, 1, 2, 1],
+            values=np.array([10.0, 20.0, 30.0, 40.0], np.float32),
+        )
+        assert g.nnz == 2  # (0->1) deduped, (1->2) kept
+        e = g.indptr[1]
+        assert g.indices[e] == 0 and g.values[e] == 10.0  # first occurrence wins
+
+    def test_dedup_false_keeps_parallel_edges(self):
+        g = CSRGraph.from_edges(4, src=[0, 0], dst=[1, 1], dedup=False)
+        assert g.nnz == 2
+        assert np.array_equal(g.indices[g.indptr[1] : g.indptr[2]], [0, 0])
+
+    def test_self_loops_preserved(self):
+        g = CSRGraph.from_edges(3, src=[1, 0], dst=[1, 2])
+        assert g.nnz == 2
+        assert g.indices[g.indptr[1] : g.indptr[2]].tolist() == [1]
+
+    def test_isolated_vertices_have_empty_rows(self):
+        g = CSRGraph.from_edges(5, src=[0], dst=[4])
+        assert g.n == 5 and g.nnz == 1
+        assert np.array_equal(np.diff(g.indptr), [0, 0, 0, 0, 1])
+        assert g.in_degree.tolist() == [0, 0, 0, 0, 1]
+        assert g.out_degree.tolist() == [1, 0, 0, 0, 0]
+
+    def test_empty_graph(self):
+        g = CSRGraph.from_edges(3, src=[], dst=[])
+        assert g.n == 3 and g.nnz == 0
+        assert np.array_equal(g.indptr, np.zeros(4, dtype=np.int64))
+
+    def test_default_values_are_unit_float32(self):
+        g = CSRGraph.from_edges(3, src=[0, 1], dst=[1, 2])
+        assert g.values.dtype == np.float32
+        assert np.array_equal(g.values, np.ones(2, np.float32))
+
+    def test_canonical_order_is_dst_major_src_minor(self):
+        g = CSRGraph.from_edges(4, src=[3, 1, 2, 0], dst=[2, 2, 1, 1])
+        # within each destination row, sources ascend
+        for v in range(g.n):
+            row = g.indices[g.indptr[v] : g.indptr[v + 1]]
+            assert np.array_equal(row, np.sort(row))
+
+
+class TestWithValues:
+    def test_replaces_values_keeps_topology(self):
+        g = CSRGraph.from_edges(3, src=[0, 1], dst=[1, 2])
+        w = np.array([5, 7], np.int32)
+        g2 = g.with_values(w, name="reweighted")
+        assert g2.name == "reweighted"
+        assert np.array_equal(g2.values, w)
+        assert g2.indptr is g.indptr and g2.indices is g.indices
+
+    def test_wrong_length_rejected(self):
+        g = CSRGraph.from_edges(3, src=[0, 1], dst=[1, 2])
+        with pytest.raises(AssertionError):
+            g.with_values(np.ones(3, np.float32))
+
+
+class TestApplyUpdatesRoundTrip:
+    def test_inverse_restores_graph_bit_identically(self):
+        g = make_graph("kron", scale=7, efactor=8, kind="sssp", seed=4)
+        src = g.indices.astype(np.int64)
+        dst = np.repeat(np.arange(g.n, dtype=np.int64), np.diff(g.indptr))
+        rng = np.random.default_rng(0)
+        pick = rng.choice(g.nnz, size=6, replace=False)
+        keys = set((dst * g.n + src).tolist())
+        inserts = []
+        while len(inserts) < 3:
+            s, d = (int(v) for v in rng.integers(0, g.n, size=2))
+            if s == d or d * g.n + s in keys:
+                continue
+            keys.add(d * g.n + s)
+            inserts.append((s, d, int(rng.integers(1, 256))))
+        batch = EdgeBatch.from_ops(
+            inserts=inserts,
+            deletes=[(int(src[e]), int(dst[e])) for e in pick[:3]],
+            reweights=[
+                (int(src[e]), int(dst[e]), int(rng.integers(1, 256))) for e in pick[3:]
+            ],
+        )
+        g2, report = g.apply_updates(batch)
+        assert g2.nnz == g.nnz  # +3 inserts, -3 deletes
+        g3, _ = g2.apply_updates(batch.inverse(report))
+        np.testing.assert_array_equal(g3.indptr, g.indptr)
+        np.testing.assert_array_equal(g3.indices, g.indices)
+        np.testing.assert_array_equal(g3.values, g.values)
+
+    def test_strict_semantics_reject_bad_ops(self):
+        g = CSRGraph.from_edges(3, src=[0], dst=[1], values=np.ones(1, np.float32))
+        with pytest.raises(ValueError):
+            g.apply_updates(EdgeBatch.from_ops(inserts=[(0, 1, 2.0)]))  # exists
+        with pytest.raises(ValueError):
+            g.apply_updates(EdgeBatch.from_ops(deletes=[(1, 2)]))  # missing
+        with pytest.raises(ValueError):
+            g.apply_updates(EdgeBatch.from_ops(reweights=[(2, 0, 1.0)]))  # missing
+
+    def test_empty_graph_accepts_insert_only_batches(self):
+        g = CSRGraph.from_edges(4, src=[], dst=[])
+        g2, report = g.apply_updates(
+            EdgeBatch.from_ops(inserts=[(0, 1, 1.0), (1, 2, 1.0)])
+        )
+        assert g2.nnz == 2 and report.inserted == 2
+        with pytest.raises(ValueError):
+            g.apply_updates(EdgeBatch.from_ops(deletes=[(0, 1)]))
+
+    def test_affected_rows_are_exactly_the_touched_destinations(self):
+        g = CSRGraph.from_edges(
+            5, src=[0, 1, 2], dst=[1, 2, 3], values=np.ones(3, np.float32)
+        )
+        _, report = g.apply_updates(
+            EdgeBatch.from_ops(
+                inserts=[(3, 4, 1.0)], deletes=[(0, 1)], reweights=[(1, 2, 9.0)]
+            )
+        )
+        assert report.affected_rows.tolist() == [1, 2, 4]

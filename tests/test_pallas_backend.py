@@ -217,7 +217,9 @@ class TestCache:
         solver.solve(backend="jit")
         solver.solve(backend="pallas")
         d = solver.schedule().delta
-        assert ("jit", d) in solver._compiled
+        # jit compiles the shape-polymorphic dynamic-schedule loop (survives
+        # apply_updates); pallas keys on the concrete schedule
+        assert any(k[0] == "dyn" and k[1] == "jit" for k in solver._compiled)
         assert ("pallas", d) in solver._compiled
         assert solver.stats["compiles"] == 2
         # schedule is shared: one stripe build serves both round flavours

@@ -117,12 +117,18 @@ class TestInvalidation:
         other.solve()
         assert_cold(other)
 
-    def test_problem_fingerprint_mismatch_is_cold(self, tmp_path):
+    def test_problem_fingerprint_mismatch_recompiles(self, tmp_path):
         pr_solver(tmp_path).solve()
         # same problem name, different row-update closure constant (teleport)
         other = pr_solver(tmp_path, problem=pagerank_problem(damping=0.9))
         other.solve()
-        assert_cold(other)
+        # the compiled loop bakes the constant in: always a cold retrace
+        assert other.stats["traces"] >= 1
+        assert other.stats["compiles"] >= 1
+        # the schedule holds only graph bytes — the content-addressed stripe
+        # store may (and does) share it across problem namespaces
+        assert other.stats["schedule_builds"] == 0
+        assert other.stats["stripe_loads"] == other.n_workers
 
     def test_version_bump_is_cold(self, tmp_path, monkeypatch):
         cold = pr_solver(tmp_path)

@@ -16,12 +16,14 @@ Acceptance-criteria coverage for the continuous-batching tier:
 import numpy as np
 import pytest
 
+from repro.evolve import EdgeBatch
 from repro.graphs.generators import make_graph
 from repro.launch.serve_graph import GraphService
 from repro.launch.service import (
     ClassPolicy,
     ContinuousScheduler,
     QueryRequest,
+    UpdateRequest,
     load_traces,
     poisson_trace,
     replay_continuous,
@@ -290,3 +292,121 @@ class TestLoadgen:
         assert cont["completed"] + cont["rejected"] == cont["offered"]
         assert fixed["completed"] + fixed["rejected"] == fixed["offered"]
         assert cont["unconverged"] == 0
+
+
+def _delete_batch(g, k=1, seed=0):
+    """k existing edges of ``g`` as a delete batch."""
+    rng = np.random.default_rng(seed)
+    dst = np.repeat(np.arange(g.n, dtype=np.int64), np.diff(g.indptr))
+    pick = rng.choice(g.nnz, size=k, replace=False)
+    return EdgeBatch.from_ops(
+        deletes=[(int(g.indices[e]), int(dst[e])) for e in pick]
+    )
+
+
+class TestUpdateLifecycle:
+    def test_update_applies_at_idle_round_boundary(self):
+        service = sssp_service()
+        g = service.graph
+        v = int(np.argmax(g.out_degree))
+        batch = _delete_batch(g)
+        adm = service.submit_update(UpdateRequest(batch=batch))
+        assert adm.accepted and adm.request_id.startswith("u")
+        assert not service.scheduler.idle  # pending update counts
+        service.submit(QueryRequest(algo="sssp", payload=v))
+        results = service.drain()
+        (ur,) = service.take_update_results()
+        assert (ur.inserted, ur.deleted, ur.reweighted) == (0, 1, 0)
+        assert ur.affected_rows == 1
+        assert ur.applied_clock >= ur.submitted_clock
+        g2, _ = g.apply_updates(batch)
+        ref = solve_batch(
+            Solver(g2, sssp_problem(), n_workers=4, delta=32, min_chunk=8),
+            multi_source_x0(g2, [v]),
+        )
+        np.testing.assert_array_equal(results[0].x, ref.x[0])
+        assert service.scheduler.idle
+        assert service.take_update_results() == []  # cleared on read
+
+    def test_inflight_queries_retire_on_pre_update_snapshot(self):
+        # 2-round quanta keep the first query in flight across several pumps
+        service = sssp_service(compact_every=2)
+        g = service.graph
+        v = int(np.argmax(g.out_degree))
+        a1 = service.submit(QueryRequest(algo="sssp", payload=v))
+        early = service.pump()
+        assert service.scheduler.in_flight == 1
+        batch = _delete_batch(g)
+        service.submit_update(UpdateRequest(batch=batch))
+        a2 = service.submit(QueryRequest(algo="sssp", payload=v))
+        results = {r.request_id: r for r in early + service.drain()}
+        (ur,) = service.take_update_results()
+        old_ref = solve_batch(
+            Solver(g, sssp_problem(), n_workers=4, delta=32, min_chunk=8),
+            multi_source_x0(g, [v]),
+        )
+        g2, _ = g.apply_updates(batch)
+        new_ref = solve_batch(
+            Solver(g2, sssp_problem(), n_workers=4, delta=32, min_chunk=8),
+            multi_source_x0(g2, [v]),
+        )
+        np.testing.assert_array_equal(results[a1.request_id].x, old_ref.x[0])
+        np.testing.assert_array_equal(results[a2.request_id].x, new_ref.x[0])
+        # the barrier is visible in the round clock: the update waited for
+        # the in-flight query to retire before applying
+        assert ur.applied_clock >= results[a1.request_id].finished_clock
+        assert ur.barrier_rounds > 0
+
+    def test_update_rejection_reasons(self):
+        service = sssp_service()
+        g = service.graph
+        sched = service.scheduler
+        bad_graph = sched.submit_update(
+            UpdateRequest(batch=_delete_batch(g), graph="nope")
+        )
+        assert (bad_graph.accepted, bad_graph.reason) == (False, "unknown_graph")
+        oob = sched.submit_update(
+            UpdateRequest(batch=EdgeBatch.from_ops(deletes=[(0, g.n + 3)]))
+        )
+        assert (oob.accepted, oob.reason) == (False, "payload_out_of_range")
+        assert sched.rejections == {"unknown_graph": 1, "payload_out_of_range": 1}
+
+    def test_per_graph_quota_spans_queries_and_updates(self):
+        service = sssp_service(queue_capacity=64, per_graph_quota=3)
+        g = service.graph
+        v = int(np.argmax(g.out_degree))
+        adms = [
+            service.submit(QueryRequest(algo="sssp", payload=v)) for _ in range(5)
+        ]
+        assert [a.accepted for a in adms] == [True] * 3 + [False] * 2
+        assert {a.reason for a in adms[3:]} == {"quota_exceeded"}
+        over = service.submit_update(UpdateRequest(batch=_delete_batch(g)))
+        assert (over.accepted, over.reason) == (False, "quota_exceeded")
+        service.drain()  # quota frees as queued work is admitted
+        again = service.submit_update(UpdateRequest(batch=_delete_batch(g)))
+        assert again.accepted
+        service.drain()
+        assert len(service.take_update_results()) == 1
+
+    def test_updates_fifo_per_graph(self):
+        service = sssp_service()
+        g = service.graph
+        b1 = _delete_batch(g, k=1, seed=0)
+        g2, _ = g.apply_updates(b1)
+        b2 = _delete_batch(g2, k=2, seed=1)
+        u1 = service.submit_update(UpdateRequest(batch=b1))
+        u2 = service.submit_update(UpdateRequest(batch=b2))
+        service.drain()
+        ur = service.take_update_results()
+        assert [r.request_id for r in ur] == [u1.request_id, u2.request_id]
+        assert [r.deleted for r in ur] == [1, 2]
+        assert service.graph.nnz == g.nnz - 3
+
+    def test_counters_track_update_lifecycle(self):
+        service = sssp_service()
+        service.submit_update(UpdateRequest(batch=_delete_batch(service.graph)))
+        c = service.scheduler.counters
+        assert c["updates_submitted"] == 1 and c["updates_applied"] == 0
+        service.drain()
+        c = service.scheduler.counters
+        assert c["updates_applied"] == 1
