@@ -133,6 +133,11 @@ def main(argv=None):
     local = rows["local_none"]["collective_bytes"]
     commit = rows["commit_none"]["collective_bytes"] - local
     commit_i8 = rows["commit_int8"]["collective_bytes"] - local
+    # The int8 row counts the collectives the HLO actually runs, so since the
+    # pod reduction moved into the integer domain this is true wire cost —
+    # s8 elements on the DCN all-reduce — not f32 plus extra quant ops.
+    i8_frac = commit_i8 / commit if commit else float("nan")
+    print(f"\nint8 commit wire = {i8_frac:.3f}× f32 commit wire")
     print("\nAmortised per-step collective bytes (GiB) vs δ:")
     print(f"{'δ':>4s} {'f32 commit':>12s} {'int8 commit':>12s}")
     table = []
@@ -141,7 +146,13 @@ def main(argv=None):
         i8b = local + commit_i8 / d
         table.append({"delta": d, "f32_gib": f32b / 2**30, "int8_gib": i8b / 2**30})
         print(f"{d:4d} {f32b/2**30:12.2f} {i8b/2**30:12.2f}")
-    out = {"smoke": smoke, "phases": rows, "amortised": table}
+    out = {
+        "smoke": smoke,
+        "phases": rows,
+        "amortised": table,
+        "int8_commit_wire_frac_of_f32": i8_frac,
+        "int8_commit_wire_below_f32": bool(commit_i8 < commit),
+    }
     write_json_atomic(RESULTS / "delayed_commit_dryrun.json", out)
     return out
 

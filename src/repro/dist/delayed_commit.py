@@ -48,7 +48,10 @@ class DelayedCommitConfig:
 
     ``compress`` ∈ {"none", "int8", "topk"} is applied per pod to the flushed
     delta (wire compression over DCN); ``topk_frac`` is the kept fraction for
-    "topk".
+    "topk".  ``"int8"`` sums quantized codes across pods *in int8 on the
+    wire* (shared per-leaf scale, per-pod clip to ±(127 // n_pods) so the
+    sum is exact) and dequantizes after the reduction; the per-pod error
+    feedback keeps whatever the codes could not represent.
     """
 
     n_pods: int = 2
@@ -104,18 +107,17 @@ def pod_prefix_specs(specs):
 
 
 def _compress_pod_deltas(tree, cc: DelayedCommitConfig):
-    """Per-pod wire compression of delta leaves shaped (n_pods, *param)."""
+    """Per-pod wire compression of delta leaves shaped (n_pods, *param).
+
+    Value-domain modes only ("none" sends f32 verbatim, "topk" sparsifies but
+    still sends f32 survivors).  ``"int8"`` is *not* here: dequantizing per
+    pod before the mean would put f32 back on the DCN wire, so the int8 path
+    reduces in the integer domain inside ``commit`` itself.
+    """
     if cc.compress == "none":
         return tree
     if cc.compress == "int8":
-
-        def int8(d):
-            flat = d.reshape(d.shape[0], -1)
-            scale = jnp.maximum(jnp.abs(flat).max(axis=1), 1e-12) / 127.0
-            q = jnp.clip(jnp.round(flat / scale[:, None]), -127, 127)
-            return (q * scale[:, None]).reshape(d.shape)
-
-        return jax.tree.map(int8, tree)
+        raise ValueError("int8 deltas reduce in the wire domain — see commit()")
     if cc.compress == "topk":
 
         def topk(d):
@@ -161,7 +163,36 @@ def make_delayed_commit_step(
             lambda x, s: jax.lax.with_sharding_constraint(x, s), tree, specs
         )
 
+    def commit_int8(gp, dl):
+        # True int8 wire: quantize each pod's delta against a shared per-leaf
+        # scale, *sum the int8 codes across the pod axis* (the DCN collective
+        # ships 1-byte elements), and dequantize only after the reduction.
+        # Clipping each pod to ±(127 // n_pods) makes the int8 sum exact —
+        # |Σ q_p| ≤ n_pods · qcap ≤ 127 can never overflow — and each pod
+        # keeps what its own codes failed to represent as error feedback.
+        qcap = max(1, 127 // cc.n_pods)
+
+        def leaf(g, d):
+            # no reshapes: flattening a sharded leaf would force XLA to
+            # rematerialize (all-gather) the full delta in f32, defeating
+            # the wire win; elementwise ops preserve the pod-prefixed
+            # sharding so only the int8 codes cross the DCN.
+            scale = jnp.maximum(jnp.abs(d).max(), 1e-12) / qcap
+            q = jnp.clip(jnp.round(d / scale), -qcap, qcap).astype(jnp.int8)
+            total = q.sum(axis=0, dtype=jnp.int8)  # the one cross-pod reduce
+            avg = total.astype(F32) * scale / cc.n_pods
+            residual = d - (q.astype(F32) * scale).astype(d.dtype)
+            return g + avg.astype(g.dtype), residual.astype(d.dtype)
+
+        pairs = jax.tree.map(leaf, gp, dl)
+        is_pair = lambda x: isinstance(x, tuple)  # noqa: E731
+        new_gp = jax.tree.map(lambda p: p[0], pairs, is_leaf=is_pair)
+        residual = jax.tree.map(lambda p: p[1], pairs, is_leaf=is_pair)
+        return new_gp, residual
+
     def commit(gp, dl):
+        if cc.compress == "int8":
+            return commit_int8(gp, dl)
         committed = _compress_pod_deltas(dl, cc)
         avg = jax.tree.map(lambda c: c.mean(axis=0), committed)
         new_gp = jax.tree.map(jnp.add, gp, avg)

@@ -19,9 +19,25 @@ for the replicated path / owned frontier for the sharded one):
   committed value — exactly what the replicated round reads — so rounds stay
   bit-identical while the frontier spans devices.
 
+* **fused sharded frontier** (``frontier_pallas_round_fn``) — the same
+  owner-computes discipline with each shard's commit step fused into one
+  Pallas kernel (:func:`repro.kernels.round_block.fused_halo_step_fn`):
+  gather/⊗/segment-⊕/row-update/publish and the boundary-row selection all
+  run with the shard's frontier slice pinned in VMEM; only the boundary
+  all-gather runs in XLA between kernel invocations.  This is the paper's
+  thread-local buffer applied at both levels of the hierarchy at once —
+  VMEM within a chip, halo across chips.  ``halo_dtype ∈ {"f32","int8",
+  "fp8"}`` additionally quantizes the shipped boundary rows with per-shard
+  error-feedback residuals, so the gathered elements are genuinely 1-byte
+  on the wire (f32 stays bit-identical to the XLA rounds; low-precision
+  converges to the same fixed point within quantization tolerance).
+
 The schedule arrays are function arguments (not closure constants) so the
 worker axis can be sharded by ``shard_map`` in_specs and the whole round is
-AOT-lowerable from ``input_specs_for_engine``.
+AOT-lowerable from ``input_specs_for_engine``.  The *plan* arrays are kept
+shard-major (``(D, S, P_loc, ·)``, one block per shard) so plan assembly
+never materializes full ``(S, P, M)`` stripe monoliths host-side and the
+``shard_map`` in_specs slice them along the leading shard axis.
 """
 
 from __future__ import annotations
@@ -37,20 +53,58 @@ from jax.sharding import PartitionSpec as P
 from repro.core.engine import DeviceSchedule
 from repro.core.semiring import Semiring
 from repro.dist.compat import mesh_axis_sizes, shard_map
+from repro.kernels.round_block import fused_halo_step_fn
 
 __all__ = [
     "FrontierPlan",
+    "HALO_DTYPES",
     "assemble_frontier_plan",
     "build_plan_shard",
+    "frontier_ef_init",
+    "frontier_pallas_round_ext_fn",
+    "frontier_pallas_round_fn",
     "frontier_plan_args",
     "frontier_round_ext_fn",
     "frontier_sharded_round_fn",
     "input_specs_for_engine",
     "make_frontier_plan",
     "plan_shard_bounds",
+    "resolve_halo_dtype",
     "sharded_round_fn",
     "sharded_round_fn_q",
 ]
+
+#: Wire dtypes supported for the fused halo exchange.  ``"f32"`` ships the
+#: committed boundary rows verbatim (bit-identical rounds); ``"int8"`` /
+#: ``"fp8"`` quantize per (shard, commit) with an error-feedback residual so
+#: each gathered element is one byte on the wire.
+HALO_DTYPES = ("f32", "int8", "fp8")
+
+_HALO_QUANT = {
+    "int8": (jnp.int8, 127.0),
+    "fp8": (jnp.float8_e4m3fn, 448.0),
+}
+
+
+def resolve_halo_dtype(halo_dtype: str, semiring: Semiring) -> str:
+    """Validate ``halo_dtype`` against :data:`HALO_DTYPES` and the semiring.
+
+    Low-precision halo exchange quantizes in f32, so it is only defined for
+    floating-point semirings (min-plus runs on int32 where rounding a path
+    length would silently corrupt exactness).
+    """
+    if halo_dtype not in HALO_DTYPES:
+        raise ValueError(
+            f"halo_dtype={halo_dtype!r} not supported; choose from {HALO_DTYPES}"
+        )
+    if halo_dtype != "f32" and not jnp.issubdtype(
+        jnp.dtype(semiring.dtype), jnp.floating
+    ):
+        raise ValueError(
+            f"halo_dtype={halo_dtype!r} requires a floating-point semiring, "
+            f"got dtype={jnp.dtype(semiring.dtype).name}"
+        )
+    return halo_dtype
 
 
 def sharded_round_fn_q(
@@ -180,8 +234,8 @@ class FrontierPlan:
     vertex_bounds: np.ndarray  # (D + 1,) int64
     halo_sizes: np.ndarray  # (D,) int64 — |halo_in| per shard
     boundary_entries_per_round: int  # true (unpadded) halo rows shipped/round
-    src_loc: jnp.ndarray  # (S, P, M) int32 — per-shard local src indices
-    rows_loc: jnp.ndarray  # (S, P, delta) int32 — per-shard local row slots
+    src_loc: jnp.ndarray  # (D, S, P_loc, M) int32 — shard-major local src indices
+    rows_loc: jnp.ndarray  # (D, S, P_loc, delta) int32 — shard-major row slots
     send_idx: jnp.ndarray  # (S, D, H) int32 into the flat (P_loc·delta,) chunk
     recv_idx: jnp.ndarray  # (S, D, D·H) int32 into the local frontier
     gather_index: jnp.ndarray  # (D, L) int32 — global slot of each local slot
@@ -240,6 +294,8 @@ class FrontierPlan:
             or plan.recv_idx.shape != (S, D, D * H)
             or plan.gather_index.shape != (D, L)
             or plan.vertex_bounds.shape != (D + 1,)
+            or plan.src_loc.shape[:3] != (D, S, plan.P_loc)
+            or plan.rows_loc.shape != (D, S, plan.P_loc, plan.delta)
         ):
             raise ValueError("plan arrays inconsistent with (S, D, H, L)")
         return plan
@@ -346,13 +402,15 @@ def assemble_frontier_plan(
     L = int((owned + halo_sizes).max()) + 1 if D else 1
     dump = L - 1
 
-    src_loc = np.empty((S, sched.P, sched.M), dtype=np.int32)
-    rows_loc = np.empty((S, sched.P, delta), dtype=np.int32)
+    # Shard-major (D, S, P_loc, ·): each shard's block is written straight
+    # from its piece — no full-width (S, P, M) stripe monolith is ever
+    # materialized host-side, and shard_map in_specs slice axis 0 directly.
+    src_loc = np.empty((D, S, P_loc, sched.M), dtype=np.int32)
+    rows_loc = np.empty((D, S, P_loc, delta), dtype=np.int32)
     for d, p in enumerate(pieces):
-        ws = slice(d * P_loc, (d + 1) * P_loc)
         sl, rl = p["src_loc"], p["rows_loc"]
-        src_loc[:, ws, :] = np.where(sl < 0, dump, sl)
-        rows_loc[:, ws, :] = np.where(rl < 0, dump, rl)
+        src_loc[d] = np.where(sl < 0, dump, sl)
+        rows_loc[d] = np.where(rl < 0, dump, rl)
 
     # Boundary traffic: per (step, shard), the committed rows some other
     # shard keeps a halo copy of.  H pads to the worst (step, shard) cell.
@@ -438,16 +496,17 @@ def frontier_sharded_round_fn(
     delta, S = sched.delta, sched.S
 
     def body(x, src_loc, val, dst_local, rows_g, rows_loc, send_idx, recv_idx, q):
-        # Per-shard blocks: x (1, L); schedule cells (S, P_loc, ·);
-        # send (S, 1, H); recv (S, 1, D·H).
-        P_loc = src_loc.shape[1]
+        # Per-shard blocks: x (1, L); plan blocks (1, S, P_loc, ·); schedule
+        # cells (S, P_loc, ·); send (S, 1, H); recv (S, 1, D·H).
+        sl, rl = src_loc[0], rows_loc[0]
+        P_loc = sl.shape[1]
 
         def commit_step(s, xv):
-            src_s = jax.lax.dynamic_index_in_dim(src_loc, s, 0, keepdims=False)
+            src_s = jax.lax.dynamic_index_in_dim(sl, s, 0, keepdims=False)
             val_s = jax.lax.dynamic_index_in_dim(val, s, 0, keepdims=False)
             dst_s = jax.lax.dynamic_index_in_dim(dst_local, s, 0, keepdims=False)
             rg_s = jax.lax.dynamic_index_in_dim(rows_g, s, 0, keepdims=False)
-            rl_s = jax.lax.dynamic_index_in_dim(rows_loc, s, 0, keepdims=False)
+            rl_s = jax.lax.dynamic_index_in_dim(rl, s, 0, keepdims=False)
             snd_s = jax.lax.dynamic_index_in_dim(send_idx, s, 0, keepdims=False)[0]
             rcv_s = jax.lax.dynamic_index_in_dim(recv_idx, s, 0, keepdims=False)[0]
 
@@ -471,10 +530,11 @@ def frontier_sharded_round_fn(
         return jax.lax.fori_loop(0, S, commit_step, x[0])[None]
 
     cell = P(None, axis, None)
+    block = P(axis, None, None, None)
     return shard_map(
         body,
         mesh=mesh,
-        in_specs=(P(axis, None), cell, cell, cell, cell, cell, cell, cell, P()),
+        in_specs=(P(axis, None), block, cell, cell, cell, block, cell, cell, P()),
         out_specs=P(axis, None),
         check_vma=False,
     )
@@ -504,6 +564,182 @@ def frontier_round_ext_fn(
         x_out = rnd(x_loc, src_loc, val, dst_local, rows_g, rows_loc, send, recv, q)
         owned = x_out.reshape(-1)[oflat]
         return jnp.concatenate([owned, x_ext[-1:]])
+
+    return fn
+
+
+def frontier_ef_init(plan: FrontierPlan) -> jnp.ndarray:
+    """Zero error-feedback residuals ``(D, S, H)`` f32 for the quantized halo.
+
+    One residual per (shard, commit step, boundary row): whatever the
+    quantizer could not represent this round is added back to the same
+    boundary row's send value next round, so quantization error accumulates
+    into the iteration as bounded staleness instead of bias.  Harmless (all
+    zeros stay zero) when ``halo_dtype="f32"``.
+    """
+    return jnp.zeros((plan.D, plan.S, plan.H), jnp.float32)
+
+
+def frontier_pallas_round_fn(
+    sched: DeviceSchedule,
+    plan: FrontierPlan,
+    semiring: Semiring,
+    row_update,
+    mesh,
+    axis: str = "data",
+    halo_dtype: str = "f32",
+    interpret: bool | None = None,
+) -> Callable:
+    """Fused owner-computes round: one Pallas kernel per commit per shard.
+
+    Returns jit-able
+    ``(x_loc, ef, src_loc, val, dst_local, rows, rows_loc, send_idx, recv_idx,
+    q) -> (x_loc, ef)``.  Identical exchange discipline to
+    :func:`frontier_sharded_round_fn`, but each shard's commit step —
+    gather/⊗/segment-⊕/row-update/publish plus boundary-row selection — runs
+    as a single :func:`repro.kernels.round_block.fused_halo_step_fn` kernel
+    with the shard's ``(L,)`` frontier slice pinned in VMEM.  Only the
+    ``(D, H)`` boundary all-gather (and, quantized, a ``(D,)`` scale gather)
+    runs in XLA between kernel invocations; the cross-shard dependency of
+    commit ``s`` on commit ``s - 1`` makes that exchange irreducible.
+
+    ``halo_dtype="f32"`` is bit-identical per round to the XLA halo round
+    (and hence to every other backend).  ``"int8"`` / ``"fp8"`` quantize each
+    shard's send rows against a per-(shard, commit) max-abs scale with
+    error-feedback residuals ``ef`` carried across rounds — the all-gathered
+    payload is genuinely 1 byte/element on the wire, at the price of
+    quantization noise entering the iteration as extra staleness.
+    """
+    axis_size = mesh_axis_sizes(mesh)[axis]
+    if axis_size != plan.D:
+        raise ValueError(f"plan built for D={plan.D}, mesh axis |{axis}|={axis_size}")
+    resolve_halo_dtype(halo_dtype, semiring)
+    qinfo = _HALO_QUANT.get(halo_dtype)
+    S, H = sched.S, plan.H
+    step = fused_halo_step_fn(
+        semiring,
+        row_update,
+        P_loc=plan.P_loc,
+        M=sched.M,
+        delta=sched.delta,
+        L=plan.L,
+        H=H,
+        interpret=interpret,
+    )
+
+    def body(x, ef, src_loc, val, dst_local, rows_g, rows_loc, send_idx, recv_idx, q):
+        # Per-shard blocks: x (1, L); ef (1, S, H); plan blocks
+        # (1, S, P_loc, ·); schedule cells (S, P_loc, ·); send (S, 1, H);
+        # recv (S, 1, D·H).
+        sl, rl = src_loc[0], rows_loc[0]
+
+        def commit_step(s, carry):
+            xv, efv = carry
+            src_s = jax.lax.dynamic_index_in_dim(sl, s, 0, keepdims=False)
+            val_s = jax.lax.dynamic_index_in_dim(val, s, 0, keepdims=False)
+            dst_s = jax.lax.dynamic_index_in_dim(dst_local, s, 0, keepdims=False)
+            rg_s = jax.lax.dynamic_index_in_dim(rows_g, s, 0, keepdims=False)
+            rl_s = jax.lax.dynamic_index_in_dim(rl, s, 0, keepdims=False)
+            snd_s = jax.lax.dynamic_index_in_dim(send_idx, s, 0, keepdims=False)[0]
+            rcv_s = jax.lax.dynamic_index_in_dim(recv_idx, s, 0, keepdims=False)[0]
+
+            # Fused commit: publish locally, select boundary rows, in-place
+            # on the VMEM-resident frontier slice.
+            xv, send = step(xv, src_s, val_s, dst_s, rg_s, rl_s, snd_s, q)
+
+            if qinfo is None:
+                buf = jax.lax.all_gather(send, axis, axis=0, tiled=True)
+                xv = xv.at[rcv_s].set(
+                    buf.astype(xv.dtype), mode="drop", unique_indices=False
+                )
+                return xv, efv
+
+            qdtype, qmax = qinfo
+            ef_s = jax.lax.dynamic_index_in_dim(efv, s, 0, keepdims=False)
+            want = send.astype(jnp.float32) + ef_s
+            scale = jnp.maximum(jnp.max(jnp.abs(want)), 1e-30) / qmax
+            if qdtype == jnp.int8:
+                qv = jnp.clip(jnp.round(want / scale), -qmax, qmax).astype(qdtype)
+            else:
+                qv = jnp.clip(want / scale, -qmax, qmax).astype(qdtype)
+            # 1-byte elements on the wire; scales are a (D,) f32 side channel.
+            qbuf = jax.lax.all_gather(qv, axis, axis=0, tiled=True)
+            sbuf = jax.lax.all_gather(scale[None], axis, axis=0, tiled=True)
+            deq = qbuf.astype(jnp.float32) * jnp.repeat(sbuf, H)
+            efv = jax.lax.dynamic_update_index_in_dim(
+                efv, want - qv.astype(jnp.float32) * scale, s, 0
+            )
+            xv = xv.at[rcv_s].set(
+                deq.astype(xv.dtype), mode="drop", unique_indices=False
+            )
+            return xv, efv
+
+        xv, efv = jax.lax.fori_loop(0, S, commit_step, (x[0], ef[0]))
+        return xv[None], efv[None]
+
+    cell = P(None, axis, None)
+    block = P(axis, None, None, None)
+    return shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(
+            P(axis, None),
+            P(axis, None, None),
+            block,
+            cell,
+            cell,
+            cell,
+            block,
+            cell,
+            cell,
+            P(),
+        ),
+        out_specs=(P(axis, None), P(axis, None, None)),
+        check_vma=False,
+    )
+
+
+def frontier_pallas_round_ext_fn(
+    sched: DeviceSchedule,
+    plan: FrontierPlan,
+    semiring: Semiring,
+    row_update,
+    mesh,
+    axis: str = "data",
+    halo_dtype: str = "f32",
+    interpret: bool | None = None,
+) -> Callable:
+    """Global-frontier view of the fused halo round.
+
+    ``(x_ext, ef, q, *plan args) -> (x_ext, ef)`` — same scatter/gather
+    framing as :func:`frontier_round_ext_fn` (argument order after ``q``
+    matches :func:`frontier_plan_args`), with the error-feedback residuals
+    threaded through so callers carry them across rounds.
+    """
+    rnd = frontier_pallas_round_fn(
+        sched, plan, semiring, row_update, mesh, axis, halo_dtype, interpret
+    )
+
+    def fn(
+        x_ext,
+        ef,
+        q,
+        src_loc,
+        val,
+        dst_local,
+        rows_g,
+        rows_loc,
+        send,
+        recv,
+        gidx,
+        oflat,
+    ):
+        x_loc = x_ext[gidx]
+        x_out, ef_out = rnd(
+            x_loc, ef, src_loc, val, dst_local, rows_g, rows_loc, send, recv, q
+        )
+        owned = x_out.reshape(-1)[oflat]
+        return jnp.concatenate([owned, x_ext[-1:]]), ef_out
 
     return fn
 

@@ -30,6 +30,7 @@ __all__ = [
     "equal_blocks",
     "greedy_degree_blocks",
     "make_partition",
+    "refine_blocks",
 ]
 
 
@@ -82,10 +83,86 @@ def greedy_degree_blocks(graph: CSRGraph, P: int, alpha: float = 0.5) -> np.ndar
     return np.maximum.accumulate(bounds)
 
 
+def refine_blocks(
+    graph: CSRGraph, P: int, alpha: float = 0.5, passes: int = 4
+) -> np.ndarray:
+    """Boundary-refined contiguous blocks: bounds of shape (P + 1,).
+
+    Seeds with :func:`greedy_degree_blocks`, then runs Fiduccia–Mattheyses-
+    style single-vertex moves restricted to the contiguous layout: each cut
+    point may shift by one vertex at a time (the boundary vertex changes
+    block), accepted only when the move *strictly* reduces the directed edge
+    cut.  The gain of moving ``v`` from block A to adjacent block B is
+    ``|neighbors(v) ∩ A| − |neighbors(v) ∩ B|`` over in- and out-edges
+    (self-loops excluded): edges into the abandoned block become cut, edges
+    into the destination block heal.  Strict improvement guarantees both
+    termination (each move is −1 cut edge at least) and the invariant the
+    tests pin: **edge cut ≤ the greedy_degree seed's**.  Per pass, each cut
+    point walks at most a quarter of its span so one hub cannot drag a
+    boundary across the whole graph; blocks never shrink below one vertex
+    (empty seed blocks stay empty).
+    """
+    bounds = np.array(greedy_degree_blocks(graph, P, alpha), dtype=np.int64)
+    if graph.n == 0 or P <= 1:
+        return bounds
+    indptr = graph.indptr
+    in_nbrs = graph.indices.astype(np.int64)
+    # Reverse adjacency (out-edges), built once: edge e is (indices[e] →
+    # dst_of_edge[e]); stable-sorting by source groups each vertex's outs.
+    dst_of_edge = np.repeat(np.arange(graph.n, dtype=np.int64), np.diff(indptr))
+    order = np.argsort(in_nbrs, kind="stable")
+    out_nbrs = dst_of_edge[order]
+    out_ptr = np.concatenate(
+        [[0], np.cumsum(np.bincount(in_nbrs, minlength=graph.n))]
+    ).astype(np.int64)
+
+    def neighbors(v: int) -> np.ndarray:
+        nb = np.concatenate(
+            [
+                in_nbrs[indptr[v] : indptr[v + 1]],
+                out_nbrs[out_ptr[v] : out_ptr[v + 1]],
+            ]
+        )
+        return nb[nb != v]
+
+    def count_in(nb: np.ndarray, lo: int, hi: int) -> int:
+        return int(np.count_nonzero((nb >= lo) & (nb < hi)))
+
+    for _ in range(max(passes, 0)):
+        improved = False
+        for p in range(1, P):
+            max_shift = max(1, int(bounds[p + 1] - bounds[p - 1]) // 4)
+            for _ in range(max_shift):
+                b = int(bounds[p])
+                moved = False
+                if b - bounds[p - 1] >= 2:  # v = b−1 leaves block p−1 for p
+                    nb = neighbors(b - 1)
+                    gain = count_in(nb, int(bounds[p - 1]), b - 1) - count_in(
+                        nb, b, int(bounds[p + 1])
+                    )
+                    if gain < 0:
+                        bounds[p] = b - 1
+                        improved = moved = True
+                if not moved and bounds[p + 1] - b >= 2:  # v = b joins p−1
+                    nb = neighbors(b)
+                    gain = count_in(nb, b, int(bounds[p + 1])) - count_in(
+                        nb, int(bounds[p - 1]), b
+                    )
+                    if gain < 0:
+                        bounds[p] = b + 1
+                        improved = moved = True
+                if not moved:
+                    break
+        if not improved:
+            break
+    return bounds
+
+
 PARTITION_METHODS = {
     "equal": lambda g, P: equal_blocks(g.n, P),
     "balanced": balanced_blocks,
     "greedy_degree": greedy_degree_blocks,
+    "refine": refine_blocks,
 }
 
 

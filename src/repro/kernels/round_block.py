@@ -42,7 +42,12 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.semiring import Semiring
 
-__all__ = ["fused_round_fn", "fused_round_fn_q", "resolve_interpret"]
+__all__ = [
+    "fused_halo_step_fn",
+    "fused_round_fn",
+    "fused_round_fn_q",
+    "resolve_interpret",
+]
 
 # Version portability (same spirit as repro.dist.compat): the typed
 # compiler-params class is CompilerParams on current jax, TPUCompilerParams
@@ -181,6 +186,110 @@ def fused_round_fn_q(
         )(sched.src, sched.val, sched.dst_local, sched.rows, *c_in, *q_in, x_ext)
 
     return rnd
+
+
+def fused_halo_step_fn(
+    semiring: Semiring,
+    row_update,
+    *,
+    P_loc: int,
+    M: int,
+    delta: int,
+    L: int,
+    H: int,
+    interpret: bool | None = None,
+):
+    """One owner-computes halo commit step, fused into a single kernel.
+
+    Returns ``(x_loc, src_s, val_s, dst_s, rows_g_s, rows_loc_s, send_s, q)
+    -> (x_loc, send_vals)`` — the per-shard half of one commit step of
+    :func:`repro.dist.engine_sharded.frontier_pallas_round_fn`: gather,
+    ⊗, per-worker segment-⊕, ``row_update``, the owner-computes publish into
+    the shard's ``(L,)`` local frontier (input/output-aliased, so the
+    frontier never leaves VMEM inside the step), and the selection of the
+    ``(H,)`` boundary rows this commit must ship.  Only the all-gather of
+    those boundary rows stays outside the kernel — it is the one part of a
+    halo commit that must cross devices, so it is also the only part whose
+    intermediates touch HBM.
+
+    Unlike :func:`fused_round_fn_q` the grid holds a single step: shard ``e``
+    at step ``s`` reads remote boundary values committed at ``s - 1``, so a
+    cross-device exchange must run between commits and an all-``S`` fused
+    grid per shard cannot reproduce the reference order.  The engine calls
+    this kernel ``S`` times per round under ``lax.fori_loop``, exchanging
+    halos between invocations.
+
+    ``rows_loc_s`` are shard-local row slots (dump ``= L - 1``) used for the
+    read-modify-write; ``rows_g_s`` are the global row ids ``row_update``
+    sees (PPR teleports index ``q`` by global vertex).  ``send_s`` indexes
+    the flat ``(P_loc·δ,)`` committed chunk, exactly like the XLA halo
+    round's ``send_idx``.
+    """
+    interp = resolve_interpret(interpret)
+
+    def step(x_loc, src_s, val_s, dst_s, rows_g_s, rows_loc_s, send_s, q):
+        q_leaves, q_tree = jax.tree_util.tree_flatten(q)
+        q_avals = [
+            jax.ShapeDtypeStruct(jnp.shape(leaf), jnp.result_type(leaf))
+            for leaf in q_leaves
+        ]
+
+        def row_update_flat(old, reduced, rows, *leaves):
+            return row_update(
+                old, reduced, rows, jax.tree_util.tree_unflatten(q_tree, leaves)
+            )
+
+        jaxpr, consts = _trace_row_update(
+            row_update_flat, semiring, P_loc, delta, q_avals
+        )
+        c_shapes = [c.shape for c in consts]
+        c_in = [_at_least_1d(c) for c in consts]
+        q_in = [_at_least_1d(leaf) for leaf in q_leaves]
+        n_consts, n_q = len(c_in), len(q_in)
+
+        def kernel(*refs):
+            src_ref, val_ref, dst_ref, rg_ref, rl_ref, snd_ref = refs[:6]
+            c_refs = refs[6 : 6 + n_consts]
+            q_refs = refs[6 + n_consts : 6 + n_consts + n_q]
+            # x is aliased input ↔ output 0; send is output 1.
+            x_ref, send_ref = refs[-2], refs[-1]
+            src = src_ref[...]  # (P_loc, M) — owned + halo reads, all local
+            val = val_ref[...]
+            dst = dst_ref[...]
+            rows_g = rg_ref[...]  # (P_loc, delta) global ids for row_update
+            rows_l = rl_ref[...]  # (P_loc, delta) local slots (dump = L - 1)
+            x = x_ref[...]
+            contrib = semiring.mul(x[src], val)
+            seg = dst + (jnp.arange(P_loc, dtype=jnp.int32) * (delta + 1))[:, None]
+            reduced = semiring.segment_reduce(
+                contrib.reshape(-1), seg.reshape(-1), P_loc * (delta + 1)
+            ).reshape(P_loc, delta + 1)[:, :delta]
+            old = x[rows_l]
+            c_vals = [c[...].reshape(shape) for c, shape in zip(c_refs, c_shapes)]
+            leaves = [r[...].reshape(a.shape) for r, a in zip(q_refs, q_avals)]
+            (new,) = _eval_jaxpr(jaxpr, c_vals, old, reduced, rows_g, *leaves)
+            chunk = new.reshape(-1).astype(x_ref.dtype)
+            # Owner-computes publish: commit this shard's chunk in VMEM.
+            x_ref[rows_l.reshape(-1)] = chunk
+            # Boundary selection for the halo exchange, also in VMEM.
+            send_ref[...] = chunk[snd_ref[...]]
+
+        ins = (src_s, val_s, dst_s, rows_g_s, rows_loc_s, send_s, *c_in, *q_in, x_loc)
+        return pl.pallas_call(
+            kernel,
+            grid=(1,),
+            in_specs=[_full_spec(jnp.shape(a)) for a in ins],
+            out_specs=[_full_spec((L,)), _full_spec((H,))],
+            out_shape=[
+                jax.ShapeDtypeStruct((L,), semiring.dtype),
+                jax.ShapeDtypeStruct((H,), semiring.dtype),
+            ],
+            input_output_aliases={len(ins) - 1: 0},
+            interpret=interp,
+            **_sequential_grid_params(),
+        )(*ins)
+
+    return step
 
 
 def fused_round_fn(

@@ -35,7 +35,7 @@ from repro.launch.service.types import (
     QueryRequest,
     QueryResult,
 )
-from repro.solve import Solver, ppr_problem, sssp_problem
+from repro.solve import BACKEND_FRONTIERS, Solver, ppr_problem, sssp_problem
 
 __all__ = ["GraphService", "main"]
 
@@ -55,14 +55,19 @@ class GraphService:
     (``d / outdeg``), so one value covers both the link-follow mass and the
     teleport mass of every PPR query.
 
-    ``backend="pallas"`` serves every batch through the fused one-kernel
-    round (frontier VMEM-resident across all commit steps — the lowest
-    frontier HBM traffic on a single device); ``backend="sharded"`` serves
-    through the ``shard_map`` engine spanning the worker mesh
-    (``frontier="halo"`` keeps the frontier sharded with halo-exchange
-    commits — graphs larger than one device); ``compact_every`` sets the
-    scheduling quantum in rounds (how often converged queries retire and
-    queued ones slot in) for every request class.
+    ``backend`` × ``frontier`` validity is owned by one table
+    (``repro.solve.BACKEND_FRONTIERS``) — this service just passes both
+    through.  ``backend="pallas"`` serves every batch through the fused
+    one-kernel round (frontier VMEM-resident across all commit steps — the
+    lowest frontier HBM traffic on a single device); ``frontier="halo"``
+    keeps the frontier sharded with halo-exchange commits for graphs larger
+    than one device, served via ``backend="sharded"`` (lanes are batched
+    ``vmap`` loops, so the per-shard-fused ``pallas``+``halo`` path — the
+    single-query fastest configuration, with optional quantized
+    ``halo_dtype`` wire — lives in ``repro.solve.Solver``, not here).
+    ``compact_every`` sets the scheduling quantum in rounds (how often
+    converged queries retire and queued ones slot in) for every request
+    class.
 
     ``cache_dir`` makes the warm state survive the *process*: each solver
     persists its stripe schedules, δ-model, and AOT-exported executables to
@@ -277,7 +282,10 @@ def main(argv=None) -> dict:
     ap.add_argument("--repeats", type=int, default=3, help="waves per algo")
     ap.add_argument("--min-chunk", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--backend", choices=["jit", "pallas", "sharded"], default="jit")
+    # valid combinations come from the repro.solve.BACKEND_FRONTIERS table —
+    # the Solver rejects an unsupported pair with an exact message, so the
+    # CLI no longer hard-codes which backend a frontier belongs to
+    ap.add_argument("--backend", choices=sorted(BACKEND_FRONTIERS), default="jit")
     ap.add_argument("--frontier", choices=["replicated", "halo"], default="replicated")
     ap.add_argument(
         "--compact-every",

@@ -45,7 +45,8 @@ __all__ = [
 ]
 
 # Bump to retire every existing cache entry (layout or semantics change).
-CACHE_FORMAT = 1
+# 2: FrontierPlan src_loc/rows_loc went shard-major (D, S, P_loc, ·).
+CACHE_FORMAT = 2
 
 try:  # installed package
     import importlib.metadata

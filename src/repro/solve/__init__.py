@@ -15,7 +15,13 @@ from repro.solve.problem import (
     ppr_teleport,
     sssp_problem,
 )
-from repro.solve.solver import BACKENDS, FRONTIERS, Solver
+from repro.solve.solver import (
+    BACKEND_FRONTIERS,
+    BACKENDS,
+    FRONTIERS,
+    HALO_DTYPES,
+    Solver,
+)
 
 # Serving-tier wire types, re-exported for callers that speak the typed
 # request/response API.  Imported last: types.py is dependency-light, and by
@@ -23,8 +29,10 @@ from repro.solve.solver import BACKENDS, FRONTIERS, Solver
 from repro.launch.service.types import QueryRequest, QueryResult
 
 __all__ = [
+    "BACKEND_FRONTIERS",
     "BACKENDS",
     "FRONTIERS",
+    "HALO_DTYPES",
     "BatchResult",
     "BatchStepper",
     "Problem",

@@ -58,6 +58,13 @@ class BatchResult:
 def _batched_round(solver, sched, backend: str, frontier: str):
     """Build ``(X_ext, qb) -> X_ext`` running one round for all Q queries."""
     sr = solver.problem.semiring
+    if backend == "pallas" and frontier == "halo":
+        # vmapping a shard_map-of-pallas program is not supported; the
+        # sharded backend runs the same halo exchange (in XLA) batched.
+        raise ValueError(
+            "batched halo solves use backend='sharded', frontier='halo' "
+            "(backend='pallas' fuses per-shard kernels and cannot be vmapped)"
+        )
     if backend in ("jit", "pallas"):
         builder = round_fn_q if backend == "jit" else round_fn_pallas_q
         return jax.vmap(builder(sched, sr, solver._row_update_q), in_axes=(0, 0))

@@ -15,11 +15,14 @@ rounds (instrumented, per-round residuals), the fused ``lax.while_loop``
 device path (``"jit"`` iterates the XLA round; ``"pallas"`` iterates the
 one-kernel fused round from :mod:`repro.kernels.round_block`, which keeps
 the frontier VMEM-resident across all S commit steps), or the ``shard_map``
-multi-device engine from :mod:`repro.dist.engine_sharded`; for the sharded
-backend ``frontier`` selects between the replicated frontier
-(exactness-first, O(P·δ) wire per commit) and the owner-computes sharded
-frontier with halo exchange (O(boundary) wire, graphs larger than one
-device).
+multi-device engine from :mod:`repro.dist.engine_sharded`; ``frontier``
+selects between the replicated frontier (exactness-first, O(P·δ) wire per
+commit) and the owner-computes sharded frontier with halo exchange
+(O(boundary) wire, graphs larger than one device).  Valid combinations are
+the table :data:`BACKEND_FRONTIERS`; the fastest multi-device path is
+``backend="pallas", frontier="halo"`` — per-shard fused kernels under
+``shard_map`` — optionally with ``halo_dtype ∈ {"f32", "int8", "fp8"}``
+shrinking the per-commit halo wire ~4× via error-feedback quantization.
 """
 
 from __future__ import annotations
@@ -55,10 +58,24 @@ from repro.graphs.formats import (
 from repro.graphs.partition import PARTITION_METHODS, Partition
 from repro.solve.problem import Problem
 
-__all__ = ["Solver", "BACKENDS", "FRONTIERS"]
+__all__ = ["Solver", "BACKENDS", "BACKEND_FRONTIERS", "FRONTIERS", "HALO_DTYPES"]
 
 BACKENDS = ("host", "jit", "pallas", "sharded")
 FRONTIERS = ("replicated", "halo")
+
+#: The single source of truth for which frontier each backend supports.
+#: host/jit iterate single-device rounds and never shard the frontier;
+#: pallas runs halo via per-shard fused kernels under shard_map; sharded
+#: runs either discipline in plain XLA.
+BACKEND_FRONTIERS = {
+    "host": ("replicated",),
+    "jit": ("replicated",),
+    "pallas": ("replicated", "halo"),
+    "sharded": ("replicated", "halo"),
+}
+
+#: Wire dtypes for the fused halo exchange (pallas + halo only).
+HALO_DTYPES = ("f32", "int8", "fp8")
 
 # Round builders for the two fused-loop backends: same while-loop, same
 # convergence/residual/counter semantics — only the round implementation
@@ -95,6 +112,7 @@ class Solver:
         delta="auto",
         backend: str = "jit",
         frontier: str = "replicated",
+        halo_dtype: str = "f32",
         partition_method: str = "balanced",
         min_chunk: int = MIN_CHUNK,
         mesh=None,
@@ -107,6 +125,7 @@ class Solver:
         if backend not in BACKENDS:
             raise ValueError(f"backend must be one of {BACKENDS}, got {backend!r}")
         self._check_frontier(frontier)
+        self._check_halo_dtype(halo_dtype)
         if partition_method not in PARTITION_METHODS:
             raise ValueError(
                 f"partition_method must be one of {sorted(PARTITION_METHODS)}, "
@@ -119,6 +138,7 @@ class Solver:
         self.default_delta = delta
         self.default_backend = backend
         self.default_frontier = frontier
+        self.default_halo_dtype = halo_dtype
         self.partition_method = partition_method
         self.min_chunk = min_chunk
         self.mesh_axis = mesh_axis
@@ -257,6 +277,13 @@ class Solver:
         if frontier not in FRONTIERS:
             raise ValueError(f"frontier must be one of {FRONTIERS}, got {frontier!r}")
 
+    @staticmethod
+    def _check_halo_dtype(halo_dtype):
+        if halo_dtype not in HALO_DTYPES:
+            raise ValueError(
+                f"halo_dtype must be one of {HALO_DTYPES}, got {halo_dtype!r}"
+            )
+
     def resolve_delta(self, delta=None) -> int:
         """Normalize ``delta ∈ {None, 'sync', 'async', 'auto', int}`` to rows."""
         if delta is None:
@@ -274,24 +301,52 @@ class Solver:
         return int(min(max(int(delta), 1), B))
 
     def resolve_frontier(self, frontier=None, backend: str | None = None) -> str:
-        """Normalize the frontier knob; ``"halo"`` requires the sharded backend.
+        """Normalize the frontier knob against :data:`BACKEND_FRONTIERS`.
 
-        An *explicit* ``frontier="halo"`` with a non-sharded backend is an
-        error; a halo construction default silently falls back to replicated
-        for host/jit calls (the single-device rounds never shard the
-        frontier), so δ="auto" host probes keep working on halo solvers.
+        An *explicit* ``frontier`` a backend does not support is an error
+        naming the backends that do; an unsupported construction default
+        silently falls back to ``"replicated"`` (every backend's first entry)
+        so δ="auto" host probes keep working on halo solvers.
         """
         explicit = frontier is not None
         if frontier is None:
             frontier = self.default_frontier
         self._check_frontier(frontier)
-        if frontier == "halo" and backend is not None and backend != "sharded":
+        if backend is not None and frontier not in BACKEND_FRONTIERS[backend]:
             if explicit:
+                supported = [
+                    b for b in reversed(BACKENDS) if frontier in BACKEND_FRONTIERS[b]
+                ]
+                wants = " or ".join(f"backend={b!r}" for b in supported)
                 raise ValueError(
-                    f"frontier='halo' requires backend='sharded', got {backend!r}"
+                    f"frontier={frontier!r} requires {wants}, got {backend!r}"
                 )
             return "replicated"
         return frontier
+
+    def resolve_halo_dtype(
+        self, halo_dtype=None, backend: str | None = None, frontier: str | None = None
+    ) -> str:
+        """Normalize the halo wire dtype; quantization is pallas+halo only.
+
+        The quantized exchange lives in the fused halo round, so an
+        *explicit* low-precision ``halo_dtype`` on any other (backend,
+        frontier) pair is an error; a low-precision construction default
+        silently resolves to ``"f32"`` there (exact paths stay exact).
+        """
+        explicit = halo_dtype is not None
+        if halo_dtype is None:
+            halo_dtype = self.default_halo_dtype
+        self._check_halo_dtype(halo_dtype)
+        if halo_dtype != "f32" and not (backend == "pallas" and frontier == "halo"):
+            if explicit:
+                raise ValueError(
+                    f"halo_dtype={halo_dtype!r} requires backend='pallas', "
+                    f"frontier='halo'; got backend={backend!r}, "
+                    f"frontier={frontier!r}"
+                )
+            return "f32"
+        return halo_dtype
 
     def _probe_auto_delta(self) -> int:
         """Fit the δ cost model from two measured probes (sync + finest δ)."""
@@ -610,6 +665,7 @@ class Solver:
         delta=None,
         backend: str | None = None,
         frontier: str | None = None,
+        halo_dtype: str | None = None,
         tol: float | None = None,
         max_rounds: int | None = None,
         regime: str = "cold",
@@ -624,19 +680,22 @@ class Solver:
         if backend not in BACKENDS:
             raise ValueError(f"backend must be one of {BACKENDS}, got {backend!r}")
         frontier = self.resolve_frontier(frontier, backend)
+        halo_dtype = self.resolve_halo_dtype(halo_dtype, backend, frontier)
         tol = self.tol if tol is None else tol
         max_rounds = self.max_rounds if max_rounds is None else max_rounds
         sched = self.schedule(delta)
         x_ext = self._x_ext(x0)
         q = self.resolve_query(q)
         self.stats["solves"] += 1
-        if backend in _FUSED_ROUND_BUILDERS:
+        if backend in _FUSED_ROUND_BUILDERS and frontier != "halo":
             result = self._solve_fused(backend, sched, x_ext, q, tol, max_rounds)
         else:
             if backend == "host":
                 rnd = self._compiled_round(sched, x_ext, q, "host")
             else:
-                rnd = self._compiled_round(sched, x_ext, q, "sharded", frontier)
+                rnd = self._compiled_round(
+                    sched, x_ext, q, backend, frontier, halo_dtype
+                )
             result = self._host_loop(sched, rnd, x_ext, tol, max_rounds)
         self._last_x = np.asarray(result.x)
         self._record_observation(
@@ -699,9 +758,13 @@ class Solver:
             compile_time_s=self._last_compile_s,
         )
 
-    def _compiled_round(self, sched, x_ext, q, backend, frontier="replicated"):
+    def _compiled_round(
+        self, sched, x_ext, q, backend, frontier="replicated", halo_dtype="f32"
+    ):
         """Cached compiled one-round ``x_ext -> x_ext`` for host/pallas/sharded."""
         sr = self.problem.semiring
+        if backend == "pallas" and frontier == "halo":
+            return self._pallas_halo_round(sched, x_ext, q, halo_dtype)
         if backend == "host":
             # dynamic form: survives same-shape schedule mutations, like jit
             sargs = schedule_args(sched)
@@ -757,6 +820,57 @@ class Solver:
             portable=D == 1,
         )
         return lambda x: compiled(x, q, *args)
+
+    def _pallas_halo_round(self, sched, x_ext, q, halo_dtype):
+        """The fused halo round: per-shard Pallas kernels under shard_map.
+
+        The error-feedback residuals are loop state, not a function of ``x``,
+        so the returned callable carries them across rounds in a closure —
+        fresh zeros per call to :meth:`_compiled_round` (i.e. per solve), the
+        same lifetime a quantized iterative solve expects.  Cache key
+        ``("pallas-halo", δ, dtype, D)``; dropped (not dyn-keyed) on
+        :meth:`apply_updates`, exactly like the other baked-plan executables.
+        """
+        from repro.dist.compat import mesh_axis_sizes
+        from repro.dist.engine_sharded import (
+            frontier_ef_init,
+            frontier_pallas_round_ext_fn,
+            frontier_plan_args,
+            resolve_halo_dtype,
+        )
+
+        sr = self.problem.semiring
+        resolve_halo_dtype(halo_dtype, sr)
+        mesh = self._default_mesh()
+        D = mesh_axis_sizes(mesh)[self.mesh_axis]
+        plan = self.frontier_plan(sched)
+        fn = frontier_pallas_round_ext_fn(
+            sched,
+            plan,
+            sr,
+            self._row_update_q,
+            mesh,
+            axis=self.mesh_axis,
+            halo_dtype=halo_dtype,
+        )
+        args = frontier_plan_args(sched, plan)
+        ef0 = frontier_ef_init(plan)
+        compiled = self.compile_cached(
+            ("pallas-halo", sched.delta, halo_dtype, D),
+            fn,
+            x_ext,
+            ef0,
+            q,
+            *args,
+            portable=D == 1,
+        )
+        state = {"ef": ef0}
+
+        def rnd(x):
+            x, state["ef"] = compiled(x, state["ef"], q, *args)
+            return x
+
+        return rnd
 
     def _host_loop(self, sched, rnd, x_ext, tol, max_rounds) -> EngineResult:
         return host_loop(
@@ -1015,17 +1129,30 @@ class Solver:
         return self._mesh
 
     def round_callable(
-        self, delta=None, backend: str = "host", frontier: str | None = None, q=None
+        self,
+        delta=None,
+        backend: str = "host",
+        frontier: str | None = None,
+        q=None,
+        halo_dtype: str | None = None,
     ):
         """The cached compiled one-round ``x_ext -> x_ext`` (tests/benchmarks).
 
         ``backend`` is ``"host"`` (the single-device XLA round — also what
         the jit backend's fused loop iterates), ``"pallas"`` (the fused
-        one-kernel round the pallas backend iterates), or ``"sharded"``; for
-        the sharded backend ``frontier`` picks replicated vs halo.
+        one-kernel round the pallas backend iterates; with
+        ``frontier="halo"`` the per-shard fused halo round), or
+        ``"sharded"``; ``frontier`` picks replicated vs halo per
+        :data:`BACKEND_FRONTIERS`.
         """
         frontier = self.resolve_frontier(frontier, backend)
+        halo_dtype = self.resolve_halo_dtype(halo_dtype, backend, frontier)
         sched = self.schedule(delta)
         return self._compiled_round(
-            sched, self._x_ext(None), self.resolve_query(q), backend, frontier
+            sched,
+            self._x_ext(None),
+            self.resolve_query(q),
+            backend,
+            frontier,
+            halo_dtype,
         )

@@ -229,8 +229,16 @@ class TestCache:
         with pytest.raises(ValueError, match="backend must be one of"):
             Solver(GRAPH_S, sssp_problem(), backend="mosaic")
         solver = Solver(GRAPH_S, sssp_problem(), n_workers=N_WORKERS, delta=32)
+        # halo now composes with pallas (the fused sharded round) — only the
+        # single-device backends reject it
         with pytest.raises(ValueError, match="requires backend='sharded'"):
-            solver.solve(backend="pallas", frontier="halo")
+            solver.solve(backend="jit", frontier="halo")
+        r_halo = solver.solve(backend="pallas", frontier="halo")
+        r_jit = solver.solve(backend="jit")
+        np.testing.assert_array_equal(r_halo.x, r_jit.x)
+        # low-precision halo needs a floating semiring; sssp is min-plus int32
+        with pytest.raises(ValueError, match="floating-point semiring"):
+            solver.solve(backend="pallas", frontier="halo", halo_dtype="int8")
 
 
 class TestServeGraphPallas:

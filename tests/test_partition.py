@@ -135,6 +135,19 @@ class TestPartitioners:
             spreads[method] = per_block.max() / max(per_block.mean(), 1e-9)
         assert spreads["greedy_degree"] <= spreads["balanced"] * 1.05
 
+    @pytest.mark.parametrize("name", ["web", "urand"])
+    def test_refine_cut_at_most_greedy_degree(self, name):
+        """FM-style boundary refinement only ever accepts strict cut
+        improvements over its greedy_degree seed, so its edge cut can never
+        exceed the seed's — on the clustered (web) and random (urand)
+        generators alike."""
+        g = make_graph(name, scale=9, efactor=8, kind="pagerank")
+        for P in (4, 8):
+            seed_cut = make_partition(g, P, method="greedy_degree").edge_cut
+            refined = make_partition(g, P, method="refine")
+            assert refined.edge_cut <= seed_cut
+            assert (np.diff(refined.bounds) >= 0).all()
+
     def test_greedy_degree_rejects_bad_alpha(self):
         g = _random_graph(10, 20, 0)
         with pytest.raises(ValueError, match="alpha"):
