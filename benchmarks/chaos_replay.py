@@ -1,0 +1,280 @@
+"""Chaos-replay gate: injected faults must never change an answer.
+
+Replays the committed chaos trace (``benchmarks/traces/chaos_smoke.json``)
+through three fault domains and pins the recovery contract as committed
+booleans the regression guard (and ``--assert-gate``) enforces:
+
+* **serving** — two resident tenants (SSSP road / PPR social) answer the
+  trace's queries twice: fault-free, then under injected lane faults,
+  kernel-dispatch faults, and torn/corrupt/EIO cache I/O.  Every admitted
+  query must still retire with the **bit-identical** answer (zero typed
+  failures, zero silent losses — ``accepted == completed``).
+* **degrade** — a ``degrade=True`` solver hit by a pallas dispatch fault
+  must climb down the degradation ladder and return the bit-identical
+  fixed point, recording exactly the expected typed ``Degradation``.
+* **checkpoint** — a sharded solve on an 8-wide mesh is killed mid-flight
+  (injected ``solver.round`` fault with ``max_restores=0``); a fresh
+  solver on a **4-wide mesh** must resume from the committed snapshot and
+  land on the bit-identical fixed point, with recovery overhead (replayed
+  rounds) bounded by the checkpoint cadence.
+
+All reported fields are deterministic functions of the trace, so the whole
+report is CI-diffable::
+
+    PYTHONPATH=src python -m benchmarks.chaos_replay --assert-gate
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import tempfile
+from pathlib import Path
+
+# fixed 8-device host platform so mesh widths (and the committed report)
+# are identical locally and in CI
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax
+import numpy as np
+
+from benchmarks.common import write_json_atomic
+from repro.dist.compat import make_mesh
+from repro.ft.elastic import checkpointed_solve
+from repro.ft.inject import FaultPlan, InjectedFault, inject
+from repro.graphs.generators import make_graph
+from repro.launch.serve_graph import GraphService
+from repro.launch.service import QueryRequest
+from repro.launch.service.scheduler import ContinuousScheduler
+from repro.solve import Solver, sssp_problem
+
+RESULTS = Path(__file__).resolve().parents[1] / "results"
+TRACES = Path(__file__).resolve().parent / "traces" / "chaos_smoke.json"
+
+# two resident tenants, same shapes as the serve-load smoke: SSSP wants
+# length-valued edges, PPR wants pagerank-valued ones
+TENANTS = {"road": ("sssp", "sssp"), "social": ("ppr", "pagerank")}
+
+
+def build_services(args, cache_dir=None) -> dict:
+    services = {}
+    for tenant, (algo, kind) in TENANTS.items():
+        g = make_graph("kron", scale=args.scale, efactor=8, kind=kind)
+        services[tenant] = GraphService(
+            g,
+            n_workers=args.workers,
+            delta=args.delta,
+            batch_size=args.batch_size,
+            min_chunk=args.min_chunk,
+            algos=(algo,),
+            cache_dir=None if cache_dir is None else str(cache_dir),
+            degrade=True,
+        )
+    return services
+
+
+def run_queries(args, queries, plan=None):
+    """Submit the trace's queries, drain, and account for every admission."""
+    # a real cache dir in the chaos run so persist.write/read faults hit
+    # actual I/O paths (torn bytes on disk must read back as cache misses)
+    cache_dir = tempfile.mkdtemp(prefix="chaos_cache_") if plan else None
+    services = build_services(args, cache_dir=cache_dir)
+    sched = ContinuousScheduler(services, queue_capacity=args.queue_capacity)
+    ids = {}
+    results, failures = [], []
+    with inject(plan if plan is not None else FaultPlan()):
+        for i, q in enumerate(queries):
+            adm = sched.submit(
+                QueryRequest(algo=q["algo"], payload=q["payload"], graph=q["graph"])
+            )
+            assert adm.accepted, f"query {i} rejected: {adm.reason}"
+            ids[adm.request_id] = i
+        results = sched.drain()
+        failures = sched.take_failures()
+    answers = {ids[r.request_id]: r for r in results}
+    stats = sched.stats()
+    return answers, failures, stats
+
+
+def serving_section(args, trace) -> dict:
+    queries = trace["queries"]
+    baseline, base_failures, _ = run_queries(args, queries)
+    assert not base_failures, "fault-free replay must not fail queries"
+    plan = FaultPlan.from_json(trace["serving_faults"])
+    answers, failures, stats = run_queries(args, queries, plan=plan)
+
+    delivered = sorted(answers)
+    bit_identical = delivered == sorted(baseline) and all(
+        np.array_equal(answers[i].x, baseline[i].x) for i in delivered
+    )
+    c = stats["counters"]
+    section = {
+        "offered": len(queries),
+        "accepted": c["accepted"],
+        "completed": c["completed"],
+        "failed": c["failed"],
+        "lane_faults": c["lane_faults"],
+        "retries": c["retries"],
+        "faults_fired": plan.fired,
+        "sites_fired": plan.sites_fired(),
+        "zero_lost": c["accepted"] == c["completed"] + c["failed"] and c["failed"] == 0,
+        "bit_identical": bool(bit_identical),
+    }
+    print(
+        f"serving: {section['completed']}/{section['offered']} answered under "
+        f"{section['faults_fired']} faults at {section['sites_fired']}  "
+        f"lane_faults={section['lane_faults']} retries={section['retries']}  "
+        f"bit-identical={section['bit_identical']}"
+    )
+    return section
+
+
+def degrade_section(args, trace) -> dict:
+    g = make_graph("kron", scale=args.scale, efactor=8, kind="sssp")
+    ref = Solver(g, sssp_problem(), n_workers=args.workers, delta=args.delta).solve(
+        backend="jit"
+    )
+    solver = Solver(
+        g, sssp_problem(), n_workers=args.workers, delta=args.delta, degrade=True
+    )
+    plan = FaultPlan.from_json(trace["degrade_faults"])
+    with inject(plan):
+        out = solver.solve(backend="pallas")
+    d = solver.degradations[0] if solver.degradations else None
+    section = {
+        "rounds": out.rounds,
+        "faults_fired": plan.fired,
+        "degradations": len(solver.degradations),
+        "ladder": None if d is None else f"{d.from_backend}->{d.to_backend}",
+        "bit_identical": bool(
+            out.rounds == ref.rounds and np.array_equal(out.x, ref.x)
+        ),
+    }
+    print(
+        f"degrade: pallas dispatch fault -> {section['ladder']} in "
+        f"{section['rounds']} rounds  bit-identical={section['bit_identical']}"
+    )
+    return section
+
+
+def checkpoint_section(args, trace) -> dict:
+    g = make_graph("kron", scale=args.ckpt_scale, efactor=8, kind="sssp")
+
+    def solver_on(width: int) -> Solver:
+        mesh = make_mesh((width,), ("data",), devices=jax.devices()[:width])
+        return Solver(
+            g,
+            sssp_problem(),
+            n_workers=args.ckpt_workers,
+            delta=args.delta,
+            backend="sharded",
+            mesh=mesh,
+        )
+
+    ref = solver_on(8).solve(backend="sharded")
+    plan = FaultPlan.from_json(trace["checkpoint_faults"])
+    killed_at = plan.specs[0].match["round"]
+    ckpt_dir = tempfile.mkdtemp(prefix="chaos_ckpt_")
+    killed = False
+    try:
+        with inject(plan):
+            checkpointed_solve(
+                solver_on(8),
+                backend="sharded",
+                ckpt_dir=ckpt_dir,
+                every=args.every,
+                max_restores=0,  # the injected fault kills this "process"
+            )
+    except InjectedFault:
+        killed = True
+    out = checkpointed_solve(
+        solver_on(4), backend="sharded", ckpt_dir=ckpt_dir, every=args.every
+    )
+    overhead = killed_at + out.rounds_executed - ref.rounds
+    section = {
+        "baseline_rounds": ref.rounds,
+        "killed_at_round": killed_at,
+        "killed": killed,
+        "resumed_at": out.resumed_at,
+        "resumed_mesh_width": 4,
+        "rounds_after_resume": out.rounds_executed,
+        "recovery_overhead_rounds": overhead,
+        "checkpoint_every": args.every,
+        "resumed_from_checkpoint": out.resumed_at is not None,
+        "overhead_bounded": 0 <= overhead <= args.every,
+        "bit_identical": bool(
+            out.result.rounds == ref.rounds and np.array_equal(out.result.x, ref.x)
+        ),
+    }
+    print(
+        f"checkpoint: killed at round {killed_at} on 8-wide mesh, resumed at "
+        f"round {out.resumed_at} on 4-wide mesh, +{overhead} replayed rounds  "
+        f"bit-identical={section['bit_identical']}"
+    )
+    return section
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--trace", default=str(TRACES))
+    ap.add_argument("--scale", type=int, default=8, help="log2 vertices per tenant")
+    ap.add_argument("--workers", type=int, default=4)
+    ap.add_argument("--delta", type=int, default=32)
+    ap.add_argument("--batch-size", type=int, default=4)
+    ap.add_argument("--min-chunk", type=int, default=8)
+    ap.add_argument("--queue-capacity", type=int, default=16)
+    ap.add_argument("--ckpt-scale", type=int, default=10)
+    ap.add_argument("--ckpt-workers", type=int, default=8)
+    ap.add_argument("--every", type=int, default=4, help="checkpoint cadence")
+    ap.add_argument("--out", default=str(RESULTS / "chaos_replay.json"))
+    ap.add_argument(
+        "--assert-gate",
+        action="store_true",
+        help="fail (exit 1) unless every recovery contract held (the CI gate)",
+    )
+    args = ap.parse_args(argv)
+
+    trace = json.loads(Path(args.trace).read_text())
+    serving = serving_section(args, trace)
+    degrade = degrade_section(args, trace)
+    checkpoint = checkpoint_section(args, trace)
+
+    gate = {
+        "zero_lost": serving["zero_lost"],
+        "serving_bit_identical": serving["bit_identical"],
+        "serving_chaos_exercised": serving["lane_faults"] > 0
+        and serving["faults_fired"] >= 3,
+        "degraded_bit_identical": degrade["bit_identical"]
+        and degrade["degradations"] == 1,
+        "resumed_from_checkpoint": checkpoint["killed"]
+        and checkpoint["resumed_from_checkpoint"],
+        "elastic_bit_identical": checkpoint["bit_identical"],
+        "recovery_overhead_bounded": checkpoint["overhead_bounded"],
+    }
+    report = {
+        "trace": Path(args.trace).name,
+        "config": {
+            "scale": args.scale,
+            "workers": args.workers,
+            "delta": args.delta,
+            "batch_size": args.batch_size,
+            "queue_capacity": args.queue_capacity,
+            "ckpt_scale": args.ckpt_scale,
+            "ckpt_workers": args.ckpt_workers,
+            "checkpoint_every": args.every,
+        },
+        "serving": serving,
+        "degrade": degrade,
+        "checkpoint": checkpoint,
+        "gate": gate,
+    }
+    write_json_atomic(args.out, report)
+    print(f"wrote {args.out}  gate={gate}")
+    if args.assert_gate and not all(gate.values()):
+        raise SystemExit(f"chaos gate failed: {gate}")
+    return report
+
+
+if __name__ == "__main__":
+    main()

@@ -21,7 +21,9 @@ Design points for 1000+ nodes:
 
 from __future__ import annotations
 
+import errno
 import json
+import os
 import threading
 import time
 from pathlib import Path
@@ -29,7 +31,18 @@ from pathlib import Path
 import jax
 import numpy as np
 
+from repro.ft.inject import fire
+
 __all__ = ["save_checkpoint", "restore_checkpoint", "latest_step", "CheckpointManager"]
+
+
+def _write_fsync(path: Path, data):
+    """Write + flush + fsync so a committed marker implies durable bytes."""
+    mode = "wb" if isinstance(data, bytes) else "w"
+    with open(path, mode) as f:
+        f.write(data)
+        f.flush()
+        os.fsync(f.fileno())
 
 
 def _flatten_with_names(tree):
@@ -52,7 +65,11 @@ def save_checkpoint(
     """Save ``tree``; each host writes leaves sliced on axis 0 where possible."""
     directory = Path(directory)
     step_dir = directory / f"step_{step:09d}"
-    tmp_dir = directory / f".tmp_step_{step:09d}_{host_index}"
+    # pid + thread in the staging name: concurrent savers (two managers, or a
+    # restarted process racing a stale background writer) never share tmps
+    tmp_dir = directory / (
+        f".tmp_step_{step:09d}_{host_index}_{os.getpid()}_{threading.get_ident()}"
+    )
     tmp_dir.mkdir(parents=True, exist_ok=True)
     step_dir.mkdir(parents=True, exist_ok=True)
 
@@ -71,8 +88,13 @@ def save_checkpoint(
         host_arrays[name] = sl
 
     def _write():
+        kind = fire("ckpt.write", step=step)
+        if kind == "eio":
+            raise OSError(errno.EIO, f"injected EIO writing checkpoint step {step}")
         fn = tmp_dir / f"shard_{host_index:05d}.npz"
         np.savez(fn, **{n.replace("/", "|"): a for n, a in host_arrays.items()})
+        with open(fn, "rb+") as f:
+            os.fsync(f.fileno())
         fn.rename(step_dir / f"shard_{host_index:05d}.npz")
         if host_index == 0:
             manifest = {
@@ -89,14 +111,22 @@ def save_checkpoint(
                 },
             }
             mf = tmp_dir / "manifest.json"
-            mf.write_text(json.dumps(manifest, indent=1))
+            _write_fsync(mf, json.dumps(manifest, indent=1))
             mf.rename(step_dir / "manifest.json")
+            if kind == "torn":
+                # emulate a kill between data and commit: shards + manifest
+                # are on disk but _COMMITTED never lands, so restart skips it
+                _cleanup(tmp_dir)
+                return
             marker = tmp_dir / "_COMMITTED"
-            marker.write_text("ok")
+            _write_fsync(marker, "ok")
             marker.rename(step_dir / "_COMMITTED")
-        for leftover in tmp_dir.iterdir():
+        _cleanup(tmp_dir)
+
+    def _cleanup(d):
+        for leftover in d.iterdir():
             leftover.unlink()
-        tmp_dir.rmdir()
+        d.rmdir()
 
     if block:
         _write()

@@ -28,6 +28,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.semiring import Semiring
+from repro.ft.inject import fire
 from repro.graphs.formats import CSRGraph, StripeSchedule, build_stripe_schedule
 from repro.graphs.partition import balanced_blocks
 
@@ -529,6 +530,9 @@ def host_loop(
     converged = False
     rounds = 0
     for rounds in range(1, max_rounds + 1):
+        # chaos hook at the natural recovery boundary: between committed
+        # rounds, with `round` = rounds already executed (0-based)
+        fire("solver.round", round=rounds - 1)
         t0 = time.perf_counter()
         x_new = rnd(x_ext)
         x_new.block_until_ready()

@@ -37,6 +37,7 @@ __all__ = [
     "init_delayed_state",
     "make_delayed_commit_step",
     "pod_prefix_specs",
+    "reshard_delayed_state",
 ]
 
 F32 = jnp.float32
@@ -103,6 +104,51 @@ def pod_prefix_specs(specs):
         lambda s: P(*(("pod",) + tuple(s))),
         specs,
         is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def reshard_delayed_state(state: DelayedCommitState, n_pods: int) -> DelayedCommitState:
+    """Re-partition a (restored) state onto ``n_pods`` pods, elastically.
+
+    Same pod count → the state is returned untouched (bit-identical resume).
+    A different count performs one flush-equivalent commit at the *old*
+    width — the mean of the per-pod deltas folds into the global store, so
+    no buffered progress is lost — then lays out fresh zero buffers at the
+    new width and re-provisions per-pod optimizer state from the pod mean
+    (shared scalars pass through).  The fixed point does not depend on the
+    pod partition (delta-accumulative iteration restarts from any
+    intermediate state — Maiter), so training resumes
+    fixed-point-identical, with the δ staleness bound re-established at the
+    new width.
+    """
+    n_pods = int(n_pods)
+    delta_leaves = jax.tree.leaves(state.local_delta)
+    old = int(delta_leaves[0].shape[0]) if delta_leaves else n_pods
+    if old == n_pods:
+        return state
+    new_gp = jax.tree.map(
+        lambda g, d: g + jnp.asarray(d).mean(axis=0).astype(jnp.asarray(g).dtype),
+        state.global_params,
+        state.local_delta,
+    )
+    new_dl = jax.tree.map(
+        lambda g: jnp.zeros((n_pods,) + jnp.asarray(g).shape, jnp.asarray(g).dtype),
+        new_gp,
+    )
+
+    def re_pod(leaf):
+        leaf = jnp.asarray(leaf)
+        if leaf.ndim == 0:
+            return leaf  # shared scalar (e.g. the optimizer step counter)
+        return jnp.broadcast_to(leaf.mean(axis=0), (n_pods,) + leaf.shape[1:]).astype(
+            leaf.dtype
+        )
+
+    return DelayedCommitState(
+        global_params=new_gp,
+        local_delta=new_dl,
+        opt_state=jax.tree.map(re_pod, state.opt_state),
+        step=state.step,
     )
 
 

@@ -1,0 +1,52 @@
+"""Graceful-degradation ladder: which (backend, frontier) to fall back to.
+
+All backends compute bit-identical rounds for a given schedule (the repo's
+core invariant), so degrading trades *performance*, never *answers*: a
+solve that falls from ``pallas`` to ``host`` returns the same fixed point
+it would have returned fault-free.  The ladder first drops the halo
+frontier exchange (``halo`` → ``replicated`` on the same backend), then
+steps down backends ``pallas``/``sharded`` → ``jit`` → ``host``; the host
+rung has no dependencies beyond numpy and is the floor.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+__all__ = ["BACKEND_LADDER", "Degradation", "degradation_ladder"]
+
+#: Next backend to try after a fault; ``None`` terminates the ladder.
+BACKEND_LADDER = {"pallas": "jit", "sharded": "jit", "jit": "host", "host": None}
+
+
+@dataclasses.dataclass(frozen=True)
+class Degradation:
+    """One recorded fallback: where the fault hit and where execution moved."""
+
+    site: str  # "solve" (Solver ladder) or "lane" (scheduler)
+    from_backend: str
+    from_frontier: str
+    to_backend: str
+    to_frontier: str
+    error: str  # repr of the triggering exception
+    rung: int  # 1 = first fallback, 2 = second, ...
+
+
+def degradation_ladder(backend: str, frontier: str) -> list[tuple[str, str]]:
+    """``[(backend, frontier), ...]`` from the requested pair down to host.
+
+    The first element is the requested pair itself; each later element is
+    one rung down.  E.g. ``("pallas", "halo")`` →
+    ``[("pallas", "halo"), ("pallas", "replicated"), ("jit", "replicated"),
+    ("host", "replicated")]``.
+    """
+    if backend not in BACKEND_LADDER:
+        raise ValueError(f"unknown backend {backend!r}")
+    steps = [(backend, frontier)]
+    if frontier == "halo":
+        steps.append((backend, "replicated"))
+    b = backend
+    while BACKEND_LADDER[b] is not None:
+        b = BACKEND_LADDER[b]
+        steps.append((b, "replicated"))
+    return steps

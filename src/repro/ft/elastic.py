@@ -1,0 +1,301 @@
+"""Elastic checkpoints of in-flight solves and delayed-commit training state.
+
+Two restore guarantees, per discipline (see ``solve/README.md``):
+
+* **bit-identical** — deterministic rounds (every backend, fixed schedule)
+  replay the exact trajectory from the snapshot: resuming at round *k*
+  produces the same ``x`` per round as the uninterrupted run, even on a
+  different mesh width (the round is width-invariant for a fixed worker
+  count ``P``).
+* **fixed-point-identical** — state the snapshot cannot carry across a
+  topology change (per-shard error-feedback residuals at a new mesh width,
+  per-pod deltas at a new ``n_pods``) is folded or reset; the iteration
+  still converges to the same fixed point, exactly the slack δ-buffered
+  asynchrony guarantees (Maiter's restart-from-any-intermediate-state).
+
+Snapshots ride :mod:`repro.ckpt.checkpoint`'s manifest machinery, so they
+are atomic (``_COMMITTED`` rename), async (background thread), and elastic
+(the manifest stores the global layout; :func:`load_latest_flat` needs no
+like-tree at all — shapes come from the manifest).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.ckpt.checkpoint import (
+    CheckpointManager,
+    _flatten_with_names,
+    latest_step,
+)
+from repro.ft.inject import fire
+
+__all__ = [
+    "CheckpointedSolve",
+    "SolveCheckpointer",
+    "checkpointed_solve",
+    "load_latest_flat",
+    "restore_delayed_state",
+]
+
+_KEYSTR = re.compile(r"^\['([^']*)'\]$")
+
+
+def load_latest_flat(directory):
+    """``(step, {name: ndarray})`` of the newest committed checkpoint.
+
+    Manifest-driven: no like-tree needed — leaf names, shapes, and dtypes
+    come from ``manifest.json``, shards are concatenated elastically.
+    Returns ``None`` when the directory holds no committed step.
+    """
+    step = latest_step(directory)
+    if step is None:
+        return None
+    step_dir = Path(directory) / f"step_{step:09d}"
+    manifest = json.loads((step_dir / "manifest.json").read_text())
+    shards = [
+        np.load(step_dir / f"shard_{h:05d}.npz") for h in range(manifest["n_hosts"])
+    ]
+    flat = {}
+    for name, info in manifest["leaves"].items():
+        key = name.replace("/", "|")
+        if info["axis"] == 0:
+            arr = np.concatenate([s[key] for s in shards], axis=0)
+        else:
+            arr = shards[0][key]
+        flat[name] = np.asarray(arr).reshape(info["shape"]).astype(info["dtype"])
+    return step, flat
+
+
+class SolveCheckpointer:
+    """Round-indexed snapshots of an in-flight solve (flat dict trees)."""
+
+    def __init__(self, directory, every: int = 8, keep: int = 3):
+        self.every = int(every)
+        self.mgr = CheckpointManager(directory, keep=keep)
+
+    def save(self, rounds: int, tree: dict, block: bool = False):
+        self.mgr.save(rounds, tree, block=block)
+
+    def wait(self):
+        self.mgr.wait()
+
+    def restore_latest(self):
+        """``(rounds, {key: ndarray})`` of the newest snapshot, or ``None``.
+
+        Any torn/corrupt snapshot reads as absent (cold start), never as an
+        exception — the restore path must survive the fault that created it.
+        """
+        try:
+            got = load_latest_flat(self.mgr.directory)
+        except Exception:
+            return None
+        if got is None:
+            return None
+        step, flat = got
+        out = {}
+        for name, arr in flat.items():
+            m = _KEYSTR.match(name)
+            out[m.group(1) if m else name] = arr
+        return step, out
+
+
+@dataclasses.dataclass
+class CheckpointedSolve:
+    """A fault-tolerant solve's result plus its recovery accounting."""
+
+    result: object  # EngineResult
+    rounds_executed: int  # physical rounds run in this call (replays included)
+    restores: int  # restore-from-snapshot events in this call
+    resumed_at: int | None  # round of the snapshot this call started from
+
+
+def _snapshot_tree(x_ext, residuals, rnd) -> dict:
+    tree = {
+        "x_ext": np.asarray(x_ext),
+        # the whole residual trajectory rides along, so a resumed solve
+        # reports the same per-round history as the uninterrupted one
+        "residuals": np.asarray(residuals, np.float32),
+    }
+    ef_state = getattr(rnd, "ef_state", None)
+    if ef_state is not None:
+        for i, leaf in enumerate(jax.tree_util.tree_leaves(ef_state["ef"])):
+            tree[f"ef_{i}"] = np.asarray(leaf)
+    return tree
+
+
+def _restore_ef(rnd, tree: dict):
+    """Put snapshotted error-feedback residuals back into the round closure.
+
+    On any mismatch (no EF in the snapshot, or shapes changed because the
+    mesh width did) the residuals reset to zeros: EF only accelerates
+    convergence, so zeros preserve the fixed point — this is exactly the
+    fixed-point-identical half of the restore contract.
+    """
+    state = getattr(rnd, "ef_state", None)
+    if state is None:
+        return
+    leaves, treedef = jax.tree_util.tree_flatten(rnd.ef_init)
+    restored = []
+    for i, leaf in enumerate(leaves):
+        arr = tree.get(f"ef_{i}")
+        if arr is None or tuple(np.shape(arr)) != tuple(leaf.shape):
+            state["ef"] = rnd.ef_init
+            return
+        restored.append(jnp.asarray(np.asarray(arr), dtype=leaf.dtype))
+    state["ef"] = jax.tree_util.tree_unflatten(treedef, restored)
+
+
+def checkpointed_solve(
+    solver,
+    x0=None,
+    *,
+    q=None,
+    delta=None,
+    backend: str | None = None,
+    frontier: str | None = None,
+    halo_dtype: str | None = None,
+    tol: float | None = None,
+    max_rounds: int | None = None,
+    ckpt_dir,
+    every: int = 8,
+    keep: int = 3,
+    resume: bool = True,
+    max_restores: int = 8,
+) -> CheckpointedSolve:
+    """Host-driven solve with periodic async snapshots and restore-on-fault.
+
+    Every ``every`` rounds the engine state — extended frontier ``x_ext``,
+    residual, round counter, and (pallas+halo) per-shard error-feedback
+    residuals — is snapshotted in the background.  A fault mid-solve
+    restores the newest committed snapshot and replays from there (at most
+    ``every - 1`` recomputed rounds per fault); with ``resume=True`` a fresh
+    process — including one on a **different mesh width** — picks up the
+    same way instead of restarting cold.
+
+    The loop is host-driven, so ``backend="jit"`` runs the host round (the
+    same XLA round, bit-identical); pallas/sharded backends step their own
+    compiled rounds.  Raises after ``max_restores`` consecutive-run faults.
+    """
+    backend = backend or solver.default_backend
+    frontier = solver.resolve_frontier(frontier, backend)
+    round_backend = "host" if backend == "jit" else backend
+    if round_backend == "host":
+        frontier = "replicated"
+    halo_dtype = solver.resolve_halo_dtype(halo_dtype, round_backend, frontier)
+    tol = solver.tol if tol is None else tol
+    max_rounds = solver.max_rounds if max_rounds is None else max_rounds
+    sr = solver.problem.semiring
+    sched = solver.schedule(delta)
+    x_ext0 = solver._x_ext(x0)
+    q = solver.resolve_query(q)
+    rnd = solver._compiled_round(sched, x_ext0, q, round_backend, frontier, halo_dtype)
+    ck = SolveCheckpointer(ckpt_dir, every=every, keep=keep)
+
+    x_ext = x_ext0
+    rounds = 0
+    resumed_at = None
+    residuals: list[float] = []
+    if resume:
+        got = ck.restore_latest()
+        if got is not None:
+            step, tree = got
+            arr = np.asarray(tree["x_ext"])
+            if arr.shape == tuple(np.shape(x_ext0)):
+                x_ext = jnp.asarray(arr, dtype=sr.dtype)
+                rounds = resumed_at = step
+                residuals = [float(v) for v in tree.get("residuals", ())]
+                _restore_ef(rnd, tree)
+
+    times: list[float] = []
+    executed = 0
+    restores = 0
+    converged = False
+    res = float("inf")
+    while rounds < max_rounds and not converged:
+        try:
+            fire("solver.round", round=rounds)
+            t0 = time.perf_counter()
+            x_new = rnd(x_ext)
+            x_new.block_until_ready()
+            times.append(time.perf_counter() - t0)
+            executed += 1
+            res = float(solver.problem.residual(x_ext[:-1], x_new[:-1]))
+            residuals.append(res)
+            x_ext = x_new
+            rounds += 1
+            if res <= tol:
+                converged = True
+            elif rounds % every == 0:
+                ck.save(rounds, _snapshot_tree(x_ext, residuals, rnd), block=False)
+        except (ValueError, TypeError):
+            raise
+        except Exception:
+            restores += 1
+            if restores > max_restores:
+                raise
+            ck.wait()
+            got = ck.restore_latest()
+            if got is not None:
+                step, tree = got
+                x_ext = jnp.asarray(np.asarray(tree["x_ext"]), dtype=sr.dtype)
+                rounds = step
+                residuals = [float(v) for v in tree.get("residuals", ())]
+                _restore_ef(rnd, tree)
+            else:  # nothing committed yet: cold restart
+                x_ext = x_ext0
+                rounds = 0
+                residuals = []
+                if getattr(rnd, "ef_state", None) is not None:
+                    rnd.ef_state["ef"] = rnd.ef_init
+    ck.save(rounds, _snapshot_tree(x_ext, residuals, rnd), block=True)
+    from repro.core.engine import EngineResult
+
+    result = EngineResult.from_run(
+        sched,
+        sr,
+        x_ext,
+        rounds=rounds,
+        converged=converged,
+        residuals=residuals,
+        round_times_s=times,
+        compile_time_s=solver._last_compile_s,
+    )
+    solver._last_x = np.asarray(result.x)
+    return CheckpointedSolve(
+        result=result,
+        rounds_executed=executed,
+        restores=restores,
+        resumed_at=resumed_at,
+    )
+
+
+def restore_delayed_state(directory, like, n_pods: int):
+    """Restore the newest :class:`DelayedCommitState` snapshot, elastically.
+
+    ``like`` supplies the tree *structure* only (any pod width); leaf values
+    and shapes come from the checkpoint, then
+    :func:`repro.dist.delayed_commit.reshard_delayed_state` re-partitions
+    onto ``n_pods``.  Same width → bit-identical resume; different width →
+    buffered deltas fold into the global store (fixed-point-identical).
+    Returns ``(step, state)`` or ``(None, None)``.
+    """
+    from repro.dist.delayed_commit import reshard_delayed_state
+
+    got = load_latest_flat(directory)
+    if got is None:
+        return None, None
+    step, flat = got
+    names, _, treedef = _flatten_with_names(like)
+    if any(n not in flat for n in names):
+        return None, None  # structure changed — not our snapshot
+    state = jax.tree_util.tree_unflatten(treedef, [flat[n] for n in names])
+    return step, reshard_delayed_state(state, n_pods)

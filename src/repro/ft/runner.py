@@ -27,6 +27,7 @@ import jax
 import numpy as np
 
 from repro.ckpt.checkpoint import CheckpointManager
+from repro.ft.inject import FaultPlan, FaultSpec, fire
 
 __all__ = ["RunnerConfig", "StragglerMonitor", "FailureInjector", "run_training"]
 
@@ -66,15 +67,23 @@ class StragglerMonitor:
 
 
 class FailureInjector:
-    """Deterministically raises at given steps (once each) — tests/demos."""
+    """Deprecated shim over :class:`repro.ft.inject.FaultPlan`.
+
+    Keeps the original contract — raise at each listed step value, once —
+    by compiling ``fail_at`` into one ``train.step`` spec per step.  New
+    code should build a :class:`FaultPlan` directly (any site, I/O kinds,
+    probabilistic firing) and pass it to :func:`run_training` or activate
+    it with :func:`repro.ft.inject.inject`.
+    """
 
     def __init__(self, fail_at=()):
-        self.fail_at = set(fail_at)
+        self.fail_at = sorted({int(s) for s in fail_at})
+        self.plan = FaultPlan(
+            [FaultSpec(site="train.step", match={"step": s}) for s in self.fail_at]
+        )
 
     def maybe_fail(self, step: int):
-        if step in self.fail_at:
-            self.fail_at.discard(step)
-            raise RuntimeError(f"injected node failure at step {step}")
+        self.plan.fire("train.step", step=int(step))
 
 
 def run_training(
@@ -82,16 +91,20 @@ def run_training(
     step_fn,
     batch_fn,
     cfg: RunnerConfig,
-    injector: FailureInjector | None = None,
+    injector: FailureInjector | FaultPlan | None = None,
     log_every: int = 10,
     on_metrics=None,
 ):
     """Drive ``state = step_fn(state, batch_fn(step))`` with FT semantics.
 
+    ``injector`` accepts the legacy :class:`FailureInjector` or a
+    :class:`repro.ft.inject.FaultPlan` (fired at site ``"train.step"`` with
+    ``step=<step>``); a globally active plan (``inject(...)``) fires too.
     Returns (state, history dict).
     """
     mgr = CheckpointManager(cfg.ckpt_dir, keep=cfg.keep)
     monitor = StragglerMonitor(z_thresh=cfg.z_thresh)
+    state0 = state  # pristine entry state: a cold restart replays from here
     restored_step, restored = mgr.restore_latest(state)
     start = 0
     if restored is not None:
@@ -99,11 +112,17 @@ def run_training(
         start = restored_step
     restarts = 0
     history = {"loss": [], "restarts": 0, "stragglers": 0, "ckpts": 0}
+    # history["loss"][i] is the loss of step ``base + i``; replay after a
+    # restore truncates back to the restored step so no step is counted twice
+    base = start
 
     step = start
     while step < cfg.total_steps:
         try:
-            if injector is not None:
+            fire("train.step", step=step)
+            if isinstance(injector, FaultPlan):
+                injector.fire("train.step", step=step)
+            elif injector is not None:
                 injector.maybe_fail(step)
             t0 = time.perf_counter()
             state, metrics = step_fn(state, batch_fn(step))
@@ -130,7 +149,10 @@ def run_training(
                 state = restored
                 step = restored_step
             else:
-                step = 0  # cold restart
+                state = state0  # cold restart: nothing committed yet
+                step = 0
+                base = 0
+            del history["loss"][max(0, step - base) :]
     mgr.save(cfg.total_steps, state, block=True)
     history["ckpts"] += 1
     return state, history

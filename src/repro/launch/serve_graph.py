@@ -98,6 +98,7 @@ class GraphService:
         per_graph_quota: int | None = None,
         classes: dict[str, ClassPolicy] | None = None,
         algos: tuple[str, ...] = ("sssp", "ppr"),
+        degrade: bool = False,
     ):
         self.graph = graph
         self.n_workers = n_workers
@@ -114,6 +115,9 @@ class GraphService:
         self.per_graph_quota = per_graph_quota
         self.classes = classes
         self.algos = tuple(algos)
+        # serving deployments usually want degrade=True: a kernel fault turns
+        # into a slower bit-identical answer instead of a failed lane quantum
+        self.degrade = degrade
         self._solvers: dict[str, Solver] = {}
         self._scheduler = None
         self._unclaimed: list[QueryResult] = []
@@ -136,6 +140,7 @@ class GraphService:
                 min_chunk=self.min_chunk,
                 cache_dir=self.cache_dir,
                 reprobe_every=self.reprobe_every,
+                degrade=self.degrade,
             )
             self._solvers[name] = sv
         return sv
@@ -174,6 +179,10 @@ class GraphService:
     def take_update_results(self) -> list:
         """Applied-update lifecycle records (cleared on read)."""
         return self.scheduler.take_update_results()
+
+    def take_failures(self) -> list:
+        """Typed :class:`QueryFailure` tombstones (cleared on read)."""
+        return self.scheduler.take_failures()
 
     def apply_updates(self, batch):
         """Mutate the resident graph in place (synchronous path).

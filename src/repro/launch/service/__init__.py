@@ -7,6 +7,7 @@ from repro.launch.service.types import (
     DEFAULT_CLASSES,
     Admission,
     ClassPolicy,
+    QueryFailure,
     QueryRequest,
     QueryResult,
     UpdateRequest,
@@ -31,6 +32,7 @@ __all__ = [
     "ClassPolicy",
     "ContinuousScheduler",
     "DEFAULT_CLASSES",
+    "QueryFailure",
     "QueryRequest",
     "QueryResult",
     "Trace",

@@ -29,10 +29,12 @@ from collections import deque
 
 import numpy as np
 
+from repro.ft.inject import fire
 from repro.launch.service.types import (
     DEFAULT_CLASSES,
     Admission,
     ClassPolicy,
+    QueryFailure,
     QueryRequest,
     QueryResult,
     UpdateRequest,
@@ -72,17 +74,36 @@ class AdmissionQueue:
         self._q.append((request_id, req))
         return True
 
+    def push_front(self, items) -> None:
+        """Requeue already-admitted entries at the head, preserving order.
+
+        Used by fault recovery: evicted in-flight riders go back *ahead* of
+        everything queued (they were admitted first).  Deliberately ignores
+        ``capacity`` — these entries were already accepted, and dropping them
+        would violate the no-silent-loss contract; the overshoot is transient
+        (they re-admit before anything behind them).
+        """
+        self._q.extendleft(reversed(list(items)))
+
     def items(self) -> tuple[tuple[str, QueryRequest], ...]:
         """FIFO snapshot (for lane materialization / introspection)."""
         return tuple(self._q)
 
     def pop_where(self, pred, k: int) -> list[tuple[str, QueryRequest]]:
-        """Pop up to ``k`` entries matching ``pred``, preserving FIFO order."""
+        """Pop up to ``k`` entries matching ``pred(req)``, preserving FIFO."""
+        return self.pop_items_where(lambda item: pred(item[1]), k)
+
+    def pop_items_where(
+        self, pred, k: int | None = None
+    ) -> list[tuple[str, QueryRequest]]:
+        """Pop up to ``k`` entries matching ``pred((request_id, req))``."""
+        if k is None:
+            k = len(self._q)
         taken: list[tuple[str, QueryRequest]] = []
         kept: deque[tuple[str, QueryRequest]] = deque()
         while self._q:
             item = self._q.popleft()
-            if len(taken) < k and pred(item[1]):
+            if len(taken) < k and pred(item):
                 taken.append(item)
             else:
                 kept.append(item)
@@ -110,6 +131,8 @@ class _Pending:
         "submit_wall",
         "admitted_clock",
         "admit_seq",
+        "attempts",
+        "retry_at_clock",
     )
 
     def __init__(self, req: QueryRequest, clock: int, wall: float):
@@ -118,6 +141,18 @@ class _Pending:
         self.submit_wall = wall
         self.admitted_clock = -1
         self.admit_seq = -1
+        self.attempts = 0  # faulted lane quanta this request rode
+        self.retry_at_clock = 0  # earliest clock it may re-admit (backoff)
+
+
+class _Breaker:
+    """Per-lane circuit breaker: consecutive faults open it for a cooldown."""
+
+    __slots__ = ("consecutive", "open_until")
+
+    def __init__(self):
+        self.consecutive = 0
+        self.open_until = 0
 
 
 class _Lane:
@@ -202,6 +237,8 @@ class ContinuousScheduler:
         self._pending: dict[str, _Pending] = {}
         self._pending_updates: dict[str, deque[tuple[str, _PendingUpdate]]] = {}
         self._update_results: list[UpdateResult] = []
+        self._breakers: dict[tuple[str, str, str], _Breaker] = {}
+        self._failures: list[QueryFailure] = []
         self._next_id = 0
         self._next_admit_seq = 0
         self.clock_rounds = 0
@@ -211,6 +248,9 @@ class ContinuousScheduler:
             "rejected": 0,
             "completed": 0,
             "unconverged": 0,
+            "failed": 0,
+            "lane_faults": 0,
+            "retries": 0,
             "pumps": 0,
             "updates_submitted": 0,
             "updates_applied": 0,
@@ -241,8 +281,12 @@ class ContinuousScheduler:
             return self._reject("unknown_graph")
         if req.algo not in getattr(service, "algos", ("sssp", "ppr")):
             return self._reject("unsupported_algo")
-        if self.resolve_class(req) not in self.classes:
+        cls = self.resolve_class(req)
+        if cls not in self.classes:
             return self._reject("unknown_class")
+        breaker = self._breakers.get((req.graph, req.algo, cls))
+        if breaker is not None and self.clock_rounds < breaker.open_until:
+            return self._reject("lane_open")
         payload = int(req.payload)
         if not 0 <= payload < service.graph.n:
             return self._reject("payload_out_of_range")
@@ -368,28 +412,128 @@ class ContinuousScheduler:
             if graph in self._pending_updates:
                 continue
 
-            def match(r, g=graph, a=algo, c=cls):
-                return r.graph == g and r.algo == a and self.resolve_class(r) == c
+            def match(item, g=graph, a=algo, c=cls):
+                request_id, r = item
+                if r.graph != g or r.algo != a or self.resolve_class(r) != c:
+                    return False
+                # exponential-backoff wait after a lane fault: stay queued
+                # until the retry clock passes
+                return self._pending[request_id].retry_at_clock <= self.clock_rounds
 
-            for request_id, req in self.queue.pop_where(match, free):
+            for request_id, req in self.queue.pop_items_where(match, free):
                 lane.admit(request_id, req)
                 pend = self._pending[request_id]
                 pend.admitted_clock = self.clock_rounds
                 pend.admit_seq = self._next_admit_seq
                 self._next_admit_seq += 1
 
+    def _fail(self, request_id: str, pend: _Pending, reason: str):
+        """Retire one admitted request as a typed :class:`QueryFailure`."""
+        self._pending.pop(request_id, None)
+        self.counters["failed"] += 1
+        self._failures.append(
+            QueryFailure(
+                request_id=request_id,
+                algo=pend.req.algo,
+                graph=pend.req.graph,
+                request_class=self.resolve_class(pend.req),
+                payload=int(pend.req.payload),
+                reason=reason,
+                attempts=pend.attempts,
+                submitted_clock=pend.submitted_clock,
+                failed_clock=self.clock_rounds,
+                latency_s=time.perf_counter() - pend.submit_wall,
+            )
+        )
+
+    def _expire_deadlines(self):
+        """Fail queued requests whose round-clock deadline has passed.
+
+        Deadlines bound *waiting* (queue + retry backoff): once a query is
+        slotted in it runs to retirement — its answer exists, delivering it
+        is strictly better than discarding work.
+        """
+        now = self.clock_rounds
+
+        def expired(item):
+            request_id, req = item
+            if req.deadline_rounds is None:
+                return False
+            pend = self._pending[request_id]
+            return now - pend.submitted_clock > req.deadline_rounds
+
+        for request_id, _ in self.queue.pop_items_where(expired):
+            self._fail(request_id, self._pending[request_id], "deadline_exceeded")
+
+    def _on_lane_fault(self, key: tuple[str, str, str], lane: _Lane):
+        """Recover from one faulted lane quantum — no admitted query is lost.
+
+        The lane's riders are evicted and requeued at the *head* of the
+        admission queue (they were admitted first) with exponential backoff;
+        riders whose retry budget is spent fail typed instead.  The lane
+        itself is dropped (its batch state is suspect) and will lazily
+        rebuild from the solver's still-warm caches; its circuit breaker
+        opens after ``breaker_threshold`` consecutive faults.
+        """
+        self.counters["lane_faults"] += 1
+        policy = lane.policy
+        requeue = []
+        for tag in lane.stepper.evict_all():
+            pend = self._pending.get(tag)
+            if pend is None:  # defensive: unknown rider, nothing to requeue
+                continue
+            pend.attempts += 1
+            pend.admitted_clock = -1
+            if pend.attempts > policy.max_retries:
+                self._fail(tag, pend, "retries_exhausted")
+                continue
+            self.counters["retries"] += 1
+            pend.retry_at_clock = self.clock_rounds + policy.backoff_rounds * (
+                2 ** (pend.attempts - 1)
+            )
+            requeue.append((tag, pend.req))
+        self.queue.push_front(requeue)
+        del self._lanes[key]
+        breaker = self._breakers.setdefault(key, _Breaker())
+        breaker.consecutive += 1
+        if breaker.consecutive >= policy.breaker_threshold:
+            breaker.open_until = self.clock_rounds + policy.breaker_cooldown_rounds
+
     def pump(self) -> list[QueryResult]:
-        """One scheduling quantum: apply ready updates, slot in, run, retire."""
+        """One scheduling quantum: apply ready updates, slot in, run, retire.
+
+        A lane quantum that raises (kernel fault, injected chaos) is a
+        recoverable event, not a scheduler crash: see :meth:`_on_lane_fault`.
+        The faulted quantum still advances the round clock by its
+        ``slot_rounds`` — burned device time is burned — which also makes
+        retry backoff and breaker cooldowns progress deterministically.
+        """
         self.counters["pumps"] += 1
         self._apply_ready_updates()
+        self._expire_deadlines()
         self._admit_from_queue()
         results: list[QueryResult] = []
-        for lane in self._lanes.values():
+        ran = 0
+        for key, lane in list(self._lanes.items()):
             if lane.stepper.occupancy == 0:
                 continue
             before = lane.stepper.rounds_executed
-            retired = lane.run_quantum()
-            self.clock_rounds += lane.stepper.rounds_executed - before
+            try:
+                fire("scheduler.lane", graph=key[0], algo=key[1], request_class=key[2])
+                retired = lane.run_quantum()
+            except (ValueError, TypeError):
+                raise  # caller/config errors — not a fault to retry
+            except Exception:
+                self.clock_rounds += lane.policy.slot_rounds
+                ran += lane.policy.slot_rounds
+                self._on_lane_fault(key, lane)
+                continue
+            breaker = self._breakers.get(key)
+            if breaker is not None:
+                breaker.consecutive = 0  # a clean quantum closes the breaker
+            executed = lane.stepper.rounds_executed - before
+            self.clock_rounds += executed
+            ran += executed
             for row in retired:
                 pend = self._pending.pop(row.tag)
                 self.counters["completed"] += 1
@@ -415,7 +559,29 @@ class ContinuousScheduler:
                         latency_s=time.perf_counter() - pend.submit_wall,
                     )
                 )
+        if ran == 0 and self.in_flight == 0 and len(self.queue):
+            # nothing could run: every queued request is waiting out a retry
+            # backoff — fast-forward virtual time to the earliest retry so
+            # drain() makes progress instead of spinning
+            waits = [
+                self._pending[request_id].retry_at_clock
+                for request_id, _ in self.queue.items()
+            ]
+            future = [w for w in waits if w > self.clock_rounds]
+            if future:
+                self.clock_rounds = min(future)
         return results
+
+    def take_failures(self) -> list[QueryFailure]:
+        """Typed tombstones of admitted-but-failed queries (cleared on read).
+
+        Together with :meth:`pump`'s results this closes the accounting
+        loop: ``accepted == completed + failed + still-pending`` at every
+        quantum boundary — no admitted query is ever silently lost.
+        """
+        out = self._failures
+        self._failures = []
+        return out
 
     def advance_clock(self, to_rounds: int):
         """Fast-forward the round clock across an idle gap (load replay)."""
@@ -460,6 +626,15 @@ class ContinuousScheduler:
             },
             "counters": dict(self.counters),
             "rejections": dict(self.rejections),
+            "breakers": {
+                "/".join(key): {
+                    "consecutive": b.consecutive,
+                    "open": self.clock_rounds < b.open_until,
+                    "open_until": b.open_until,
+                }
+                for key, b in self._breakers.items()
+                if b.consecutive or b.open_until
+            },
             "lanes": {
                 "/".join(key): {
                     "occupancy": lane.stepper.occupancy,

@@ -24,6 +24,7 @@ __all__ = [
     "Admission",
     "ClassPolicy",
     "DEFAULT_CLASSES",
+    "QueryFailure",
     "QueryRequest",
     "QueryResult",
     "UpdateRequest",
@@ -43,12 +44,17 @@ class QueryRequest:
       algorithm (PPR → ``"cheap"``, SSSP → ``"deep"``).
     * ``graph``         — tenant name; the scheduler owns several resident
       :class:`~repro.launch.serve_graph.GraphService` solvers in one process.
+    * ``deadline_rounds`` — optional round-clock budget: if the query is
+      still waiting (queued or in retry backoff) this many rounds after
+      submit, it retires as a ``"deadline_exceeded"`` :class:`QueryFailure`
+      instead of consuming a slot.  ``None`` = no deadline.
     """
 
     algo: str
     payload: int
     request_class: str = "auto"
     graph: str = "default"
+    deadline_rounds: int | None = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -57,8 +63,10 @@ class Admission:
 
     ``accepted=False`` always carries a ``reason`` (``"queue_full"``,
     ``"unknown_graph"``, ``"unsupported_algo"``, ``"unknown_class"``,
-    ``"payload_out_of_range"``, ``"quota_exceeded"``); rejection is
-    deterministic in the submit sequence, never a timing accident.
+    ``"payload_out_of_range"``, ``"quota_exceeded"``, ``"lane_open"`` —
+    the lane's circuit breaker is cooling down after repeated faults);
+    rejection is deterministic in the submit sequence, never a timing
+    accident.
     """
 
     accepted: bool
@@ -103,6 +111,30 @@ class QueryResult:
     def service_rounds(self) -> int:
         """Rounds from slot-in to retirement (includes quantum granularity)."""
         return self.finished_clock - self.admitted_clock
+
+
+@dataclasses.dataclass
+class QueryFailure:
+    """One admitted query that could **not** be answered — a typed tombstone.
+
+    The no-silent-loss contract: every accepted request retires as exactly
+    one :class:`QueryResult` or one :class:`QueryFailure` (collected via
+    ``ContinuousScheduler.take_failures()``).  ``reason`` is
+    ``"deadline_exceeded"`` (the request's round-clock deadline passed while
+    it waited) or ``"retries_exhausted"`` (its lane faulted more than the
+    class policy's ``max_retries`` while it was slotted in).
+    """
+
+    request_id: str
+    algo: str
+    graph: str
+    request_class: str
+    payload: int
+    reason: str
+    attempts: int  # faulted lane quanta this request was slotted into
+    submitted_clock: int  # scheduler clock (rounds) at submit
+    failed_clock: int  # ... at retirement-as-failure
+    latency_s: float = 0.0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -157,6 +189,16 @@ class ClassPolicy:
     scheduling quantum — how many rounds run between retire/slot-in
     boundaries.  Small quanta give admission latency and fast retirement at
     the cost of more host sync points; large quanta amortize.
+
+    Fault handling (see the scheduler's retry loop): a lane quantum that
+    raises evicts the lane's riders back to the queue head; each rider
+    retries up to ``max_retries`` times, waiting
+    ``backoff_rounds * 2**(attempt-1)`` rounds of virtual time before
+    re-admission, then fails typed (``"retries_exhausted"``).
+    ``breaker_threshold`` *consecutive* faulted quanta open the lane's
+    circuit breaker: new submits are rejected (``"lane_open"``) for
+    ``breaker_cooldown_rounds``, after which the lane half-opens and one
+    successful quantum closes it again.
     """
 
     name: str
@@ -165,10 +207,27 @@ class ClassPolicy:
     frontier: str | None = None
     slot_rounds: int = 4
     max_rounds: int | None = None
+    max_retries: int = 2
+    backoff_rounds: int = 2
+    breaker_threshold: int = 3
+    breaker_cooldown_rounds: int = 32
 
     def __post_init__(self):
         if self.slot_rounds < 1:
             raise ValueError(f"slot_rounds must be >= 1, got {self.slot_rounds}")
+        if self.max_retries < 0:
+            raise ValueError(f"max_retries must be >= 0, got {self.max_retries}")
+        if self.backoff_rounds < 0:
+            raise ValueError(f"backoff_rounds must be >= 0, got {self.backoff_rounds}")
+        if self.breaker_threshold < 1:
+            raise ValueError(
+                f"breaker_threshold must be >= 1, got {self.breaker_threshold}"
+            )
+        if self.breaker_cooldown_rounds < 0:
+            raise ValueError(
+                "breaker_cooldown_rounds must be >= 0, "
+                f"got {self.breaker_cooldown_rounds}"
+            )
 
 
 #: Default classes: interactive point lookups vs whole-graph traversals.

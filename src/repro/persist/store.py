@@ -22,10 +22,13 @@ they fail to deserialize).
 
 from __future__ import annotations
 
+import errno
 import hashlib
 import io
+import itertools
 import json
 import os
+import threading
 from pathlib import Path
 
 import jax
@@ -34,6 +37,7 @@ import numpy as np
 from repro.core.delta_model import DeltaModel
 from repro.core.engine import DeviceSchedule
 from repro.dist.compat import export_deserialize, export_serialize
+from repro.ft.inject import fire
 from repro.persist.keys import (
     CACHE_FORMAT,
     env_fingerprint,
@@ -44,11 +48,46 @@ from repro.persist.keys import (
 
 __all__ = ["SolverCache"]
 
+# tmp names are unique per (pid, thread, write): two *threads* of one process
+# used to share a pid-only tmp name, so one thread's write_bytes could land in
+# a file the other was about to os.replace — a torn entry under a valid name.
+_TMP_COUNTER = itertools.count()
+# serializes the observation log's check-compact-append sequence per process
+_OBS_LOCK = threading.Lock()
+
 
 def _atomic_write_bytes(path: Path, data: bytes) -> None:
-    tmp = path.with_name(f"{path.name}.tmp-{os.getpid()}")
-    tmp.write_bytes(data)
+    """Crash- and race-safe publish: unique tmp + fsync + atomic replace.
+
+    Concurrent writers of one key are last-writer-wins: each stages into its
+    own tmp file and publishes with a single ``os.replace``, so a concurrent
+    reader sees the old complete entry or the new complete entry, never a
+    mix; the fsync before replace means the rename can never promote
+    still-unwritten bytes after a crash.
+    """
+    kind = fire("persist.write", key=path.name)
+    if kind == "eio":
+        raise OSError(errno.EIO, f"injected EIO writing {path.name}")
+    if kind == "corrupt":  # bit-flip the head: loaders must treat it as a miss
+        data = bytes(b ^ 0xFF for b in data[:64]) + data[64:]
+    if kind == "torn":  # a kill mid-write: only a prefix reaches the tmp file
+        data = data[: max(1, len(data) // 2)]
+    tmp = path.with_name(
+        f"{path.name}.tmp-{os.getpid()}-{threading.get_ident()}-{next(_TMP_COUNTER)}"
+    )
+    with open(tmp, "wb") as f:
+        f.write(data)
+        f.flush()
+        os.fsync(f.fileno())
     os.replace(tmp, path)
+
+
+def _read_fault(path: Path) -> None:
+    """Chaos hook for the load path; called inside each loader's try block so
+    an injected read fault surfaces as a cache miss, never an exception."""
+    kind = fire("persist.read", key=path.name)
+    if kind is not None:
+        raise OSError(errno.EIO, f"injected {kind} fault reading {path.name}")
 
 
 def _save_npz(path: Path, arrays: dict) -> None:
@@ -141,6 +180,7 @@ class SolverCache:
     def load_schedule(self, delta: int) -> DeviceSchedule | None:
         path = self._sched_path(delta)
         try:
+            _read_fault(path)
             with np.load(path, allow_pickle=False) as arrays:
                 sched = DeviceSchedule.from_host_arrays(arrays)
             if sched.delta != int(delta):
@@ -173,6 +213,7 @@ class SolverCache:
     def load_stripe(self, digest: str) -> dict | None:
         """The stripe dict for ``digest`` or ``None`` (corruption ⇒ miss)."""
         try:
+            _read_fault(self._stripe_path(digest))
             with np.load(self._stripe_path(digest), allow_pickle=False) as arrays:
                 out = {k: np.asarray(arrays[k]) for k in arrays.files}
             if not {"src", "val", "dst_local", "rows"} <= out.keys():
@@ -197,6 +238,7 @@ class SolverCache:
 
     def load_plan_shard(self, digest: str) -> dict | None:
         try:
+            _read_fault(self._plan_shard_path(digest))
             with np.load(self._plan_shard_path(digest), allow_pickle=False) as arrays:
                 out = {k: np.asarray(arrays[k]) for k in arrays.files}
             if not {"halo", "src_loc", "rows_loc"} <= out.keys():
@@ -218,6 +260,7 @@ class SolverCache:
         from repro.dist.engine_sharded import FrontierPlan
 
         try:
+            _read_fault(self._plan_path(delta, D))
             with np.load(self._plan_path(delta, D), allow_pickle=False) as arrays:
                 plan = FrontierPlan.from_host_arrays(arrays)
             if plan.delta != int(delta) or plan.D != int(D):
@@ -262,6 +305,7 @@ class SolverCache:
         """
         path = self._exec_path(key, args)
         try:
+            _read_fault(path)
             blob = path.read_bytes()
         except OSError:
             return None
@@ -300,6 +344,7 @@ class SolverCache:
     ) -> tuple[DeltaModel, int] | None:
         """``(model, best_delta)`` for ``regime`` as last fitted, or ``None``."""
         try:
+            _read_fault(self.dir / "delta_model.json")
             payload = json.loads((self.dir / "delta_model.json").read_text())
             if regime == "cold":
                 model, best = payload["model"], payload["best_delta"]
@@ -341,13 +386,17 @@ class SolverCache:
         }
         path = self.dir / "observations.jsonl"
         try:
-            if path.exists() and path.stat().st_size > self._OBS_MAX_BYTES:
-                tail = self.load_observations()[-self._OBS_KEEP_ROWS :]
-                _atomic_write_bytes(
-                    path, "".join(json.dumps(r) + "\n" for r in tail).encode()
-                )
-            with open(path, "a") as f:
-                f.write(json.dumps(row) + "\n")
+            # the check-compact-append sequence is not atomic; the lock keeps
+            # two in-process writers from interleaving a compaction with an
+            # append (cross-process appends remain safe: O_APPEND semantics)
+            with _OBS_LOCK:
+                if path.exists() and path.stat().st_size > self._OBS_MAX_BYTES:
+                    tail = self.load_observations()[-self._OBS_KEEP_ROWS :]
+                    _atomic_write_bytes(
+                        path, "".join(json.dumps(r) + "\n" for r in tail).encode()
+                    )
+                with open(path, "a") as f:
+                    f.write(json.dumps(row) + "\n")
         except OSError:  # pragma: no cover - best-effort persistence
             pass
 

@@ -32,6 +32,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.engine import round_fn_pallas_q, round_fn_q
+from repro.ft.inject import fire
 
 __all__ = ["BatchResult", "BatchStepper", "RetiredQuery", "solve_batch"]
 
@@ -324,6 +325,18 @@ class BatchStepper:
             portable=self._portable,
         )
 
+    def evict_all(self) -> list:
+        """Clear every occupied slot and return their tags (fault recovery).
+
+        After a faulted quantum the batch state is suspect; the scheduler
+        evicts the riders (requeueing them for retry elsewhere) and drops the
+        lane.  The stepper itself is left empty but reusable.
+        """
+        tags = [self._tags[slot] for slot in np.nonzero(self._occupied)[0]]
+        self._occupied[:] = False
+        self._tags = [None] * self.capacity
+        return tags
+
     def run(self, quantum: int) -> list[RetiredQuery]:
         """One scheduling quantum: at most ``quantum`` rounds, then retire.
 
@@ -336,6 +349,9 @@ class BatchStepper:
         occ = self._occupied
         if not occ.any():
             return []
+        # chaos hook before any state mutates: a kernel fault here leaves the
+        # stepper untouched, so the scheduler can evict + retry its riders
+        fire("kernel.dispatch", backend=self.backend, frontier=self.frontier)
         sr = self._sr
         t0 = time.perf_counter()
         X_ext = jnp.asarray(self._X)

@@ -50,6 +50,8 @@ from repro.core.engine import (
     round_fn_q_dyn,
     schedule_args,
 )
+from repro.ft.degrade import Degradation, degradation_ladder
+from repro.ft.inject import fire
 from repro.graphs.formats import (
     CSRGraph,
     assemble_stripe_schedule,
@@ -121,6 +123,7 @@ class Solver:
         max_rounds: int | None = None,
         cache_dir=None,
         reprobe_every: int | None = None,
+        degrade: bool = False,
     ):
         if backend not in BACKENDS:
             raise ValueError(f"backend must be one of {BACKENDS}, got {backend!r}")
@@ -144,6 +147,11 @@ class Solver:
         self.mesh_axis = mesh_axis
         self.tol = problem.tol if tol is None else tol
         self.max_rounds = problem.max_rounds if max_rounds is None else max_rounds
+        # degrade=True climbs down repro.ft.degrade.degradation_ladder on
+        # kernel/backend faults instead of raising; off by default so tests
+        # and benchmarks never mask a real bug behind a silent fallback.
+        self.degrade = degrade
+        self.degradations: list[Degradation] = []
         self.delta_model = None  # set by the first δ="auto" probe
         self.delta_model_incremental = None  # per-regime fit (evolving graphs)
 
@@ -187,6 +195,7 @@ class Solver:
             "compiles": 0,
             "compile_time_s": 0.0,
             "cache_loads": 0,
+            "degradations": 0,
         }
         self.reprobe_every = reprobe_every
         self._obs_since_refit = 0
@@ -675,6 +684,13 @@ class Solver:
         ``regime`` tags the persisted observation row (``"cold"`` for from-
         scratch solves, ``"incremental"`` when :meth:`resolve` seeds from a
         prior fixed point) so the δ-model learns each curve separately.
+
+        With ``degrade=True`` (constructor knob) a kernel/backend fault does
+        not propagate: the solve retries one rung down the degradation
+        ladder (halo → replicated, then pallas/sharded → jit → host),
+        recording a :class:`repro.ft.degrade.Degradation` per fallback in
+        ``self.degradations``.  Because every backend computes bit-identical
+        rounds, a degraded solve returns the same answer, only slower.
         """
         backend = backend or self.default_backend
         if backend not in BACKENDS:
@@ -687,21 +703,54 @@ class Solver:
         x_ext = self._x_ext(x0)
         q = self.resolve_query(q)
         self.stats["solves"] += 1
-        if backend in _FUSED_ROUND_BUILDERS and frontier != "halo":
-            result = self._solve_fused(backend, sched, x_ext, q, tol, max_rounds)
-        else:
-            if backend == "host":
-                rnd = self._compiled_round(sched, x_ext, q, "host")
-            else:
-                rnd = self._compiled_round(
-                    sched, x_ext, q, backend, frontier, halo_dtype
+        attempts = (
+            degradation_ladder(backend, frontier)
+            if self.degrade
+            else [(backend, frontier)]
+        )
+        result = None
+        for rung, (b, f) in enumerate(attempts):
+            hd = halo_dtype if rung == 0 else self.resolve_halo_dtype(None, b, f)
+            try:
+                result = self._solve_once(b, f, hd, sched, x_ext, q, tol, max_rounds)
+                break
+            except (ValueError, TypeError):
+                raise  # caller errors — never mask these behind a fallback
+            except Exception as err:
+                if rung + 1 == len(attempts):
+                    raise
+                nb, nf = attempts[rung + 1]
+                self.degradations.append(
+                    Degradation(
+                        site="solve",
+                        from_backend=b,
+                        from_frontier=f,
+                        to_backend=nb,
+                        to_frontier=nf,
+                        error=repr(err),
+                        rung=rung + 1,
+                    )
                 )
-            result = self._host_loop(sched, rnd, x_ext, tol, max_rounds)
+                self.stats["degradations"] += 1
         self._last_x = np.asarray(result.x)
         self._record_observation(
             sched.delta, result.rounds, result.total_time_s, backend, regime=regime
         )
         return result
+
+    def _solve_once(
+        self, backend, frontier, halo_dtype, sched, x_ext, q, tol, max_rounds
+    ) -> EngineResult:
+        """One dispatch at a fixed (backend, frontier) rung — the fault domain
+        the degradation ladder retries."""
+        fire("kernel.dispatch", backend=backend, frontier=frontier)
+        if backend in _FUSED_ROUND_BUILDERS and frontier != "halo":
+            return self._solve_fused(backend, sched, x_ext, q, tol, max_rounds)
+        if backend == "host":
+            rnd = self._compiled_round(sched, x_ext, q, "host")
+        else:
+            rnd = self._compiled_round(sched, x_ext, q, backend, frontier, halo_dtype)
+        return self._host_loop(sched, rnd, x_ext, tol, max_rounds)
 
     def _solve_fused(self, backend, sched, x_ext, q, tol, max_rounds) -> EngineResult:
         """The fused ``lax.while_loop`` path: ``backend ∈ {"jit", "pallas"}``.
@@ -870,6 +919,10 @@ class Solver:
             x, state["ef"] = compiled(x, state["ef"], q, *args)
             return x
 
+        # expose the loop-carried error-feedback residuals so checkpointing
+        # (repro.ft.elastic) can snapshot/restore/reset them between rounds
+        rnd.ef_state = state
+        rnd.ef_init = ef0
         return rnd
 
     def _host_loop(self, sched, rnd, x_ext, tol, max_rounds) -> EngineResult:

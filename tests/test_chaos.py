@@ -1,0 +1,234 @@
+"""Graceful degradation and serving-tier fault recovery under injected chaos.
+
+Acceptance-criteria coverage for the degradation ladder and the scheduler's
+retry machinery:
+
+* the ladder drops the halo frontier first, then steps pallas/sharded →
+  jit → host; a degraded solve returns the **bit-identical** answer (every
+  backend computes the same rounds) and records a typed ``Degradation``;
+* a faulted lane quantum evicts its riders back to the queue head and
+  retries with exponential backoff — every answer is still delivered,
+  bit-identical to the fault-free run;
+* retry budgets, per-request deadlines, and per-lane circuit breakers
+  retire undeliverable queries as typed ``QueryFailure`` records — the
+  no-silent-loss accounting ``accepted == completed + failed`` holds, and
+  a poisoned lane never wedges its neighbours or ``drain()``.
+"""
+
+import numpy as np
+import pytest
+
+from repro.ft.degrade import BACKEND_LADDER, degradation_ladder
+from repro.ft.inject import FaultPlan, FaultSpec, InjectedFault, inject
+from repro.graphs.generators import make_graph
+from repro.launch.serve_graph import GraphService
+from repro.launch.service import ClassPolicy, ContinuousScheduler, QueryRequest
+from repro.solve import Solver, sssp_problem
+
+GRAPH_S = make_graph("kron", scale=8, efactor=8, kind="sssp")
+
+
+def sssp_service(**kw):
+    kw.setdefault("n_workers", 4)
+    kw.setdefault("delta", 32)
+    kw.setdefault("batch_size", 4)
+    kw.setdefault("min_chunk", 8)
+    kw.setdefault("algos", ("sssp",))
+    return GraphService(GRAPH_S, **kw)
+
+
+class TestDegradationLadder:
+    def test_ladder_orders(self):
+        assert degradation_ladder("pallas", "halo") == [
+            ("pallas", "halo"),
+            ("pallas", "replicated"),
+            ("jit", "replicated"),
+            ("host", "replicated"),
+        ]
+        assert degradation_ladder("jit", "replicated") == [
+            ("jit", "replicated"),
+            ("host", "replicated"),
+        ]
+        assert degradation_ladder("host", "replicated") == [("host", "replicated")]
+        assert BACKEND_LADDER["host"] is None  # the ladder has a floor
+
+    def test_degraded_solve_bit_identical(self):
+        ref = Solver(GRAPH_S, sssp_problem(), n_workers=4, delta=32).solve(
+            backend="jit"
+        )
+        solver = Solver(GRAPH_S, sssp_problem(), n_workers=4, delta=32, degrade=True)
+        plan = FaultPlan([FaultSpec(site="kernel.dispatch", match={"backend": "jit"})])
+        with inject(plan):
+            out = solver.solve(backend="jit")
+        assert plan.fired == 1
+        assert len(solver.degradations) == 1
+        d = solver.degradations[0]
+        assert (d.from_backend, d.to_backend) == ("jit", "host")
+        assert solver.stats["degradations"] == 1
+        # performance degraded, the answer did not
+        assert out.rounds == ref.rounds
+        np.testing.assert_array_equal(out.x, ref.x)
+
+    def test_degrade_off_raises(self):
+        solver = Solver(GRAPH_S, sssp_problem(), n_workers=4, delta=32)
+        plan = FaultPlan([FaultSpec(site="kernel.dispatch")])
+        with inject(plan):
+            with pytest.raises(InjectedFault):
+                solver.solve(backend="jit")
+
+    def test_ladder_exhausted_reraises(self):
+        solver = Solver(GRAPH_S, sssp_problem(), n_workers=4, delta=32, degrade=True)
+        plan = FaultPlan([FaultSpec(site="kernel.dispatch", at=0, times=-1)])
+        with inject(plan):
+            with pytest.raises(InjectedFault):
+                solver.solve(backend="jit")
+        assert len(solver.degradations) == 1  # jit→host tried before giving up
+
+    def test_caller_errors_never_degraded(self):
+        solver = Solver(GRAPH_S, sssp_problem(), n_workers=4, delta=32, degrade=True)
+        with pytest.raises(ValueError):
+            solver.solve(backend="warp")
+        assert solver.degradations == []
+
+
+def _submit_all(svc, payloads, **kw):
+    ids = []
+    for v in payloads:
+        adm = svc.submit(QueryRequest(algo="sssp", payload=v, **kw))
+        assert adm.accepted, adm.reason
+        ids.append(adm.request_id)
+    return ids
+
+
+class TestSchedulerFaults:
+    def test_lane_fault_retries_and_delivers_bit_identical(self):
+        payloads = list(range(6))
+        baseline = {r.payload: r.x for r in _drain_clean(payloads)}
+        svc = sssp_service(queue_capacity=16)
+        plan = FaultPlan([FaultSpec(site="scheduler.lane", at=0, times=1)])
+        with inject(plan):
+            ids = _submit_all(svc, payloads)
+            results = svc.drain()
+        assert svc.take_failures() == []
+        assert sorted(r.request_id for r in results) == sorted(ids)
+        for r in results:
+            np.testing.assert_array_equal(r.x, baseline[r.payload])
+        st = svc.scheduler.stats()
+        assert st["counters"]["lane_faults"] == 1
+        assert st["counters"]["retries"] >= 1
+        assert st["counters"]["failed"] == 0
+        assert st["counters"]["accepted"] == st["counters"]["completed"] == 6
+
+    def test_poisoned_lane_fails_typed_and_terminates(self):
+        svc = sssp_service(queue_capacity=16)
+        plan = FaultPlan([FaultSpec(site="scheduler.lane", at=0, times=-1)])
+        with inject(plan):
+            ids = _submit_all(svc, range(4))
+            results = svc.drain()  # must terminate, not spin
+        failures = svc.take_failures()
+        assert results == []
+        assert sorted(f.request_id for f in failures) == sorted(ids)
+        assert {f.reason for f in failures} == {"retries_exhausted"}
+        # default policy: max_retries=2 ⇒ three faulted quanta per rider
+        assert {f.attempts for f in failures} == {3}
+        st = svc.scheduler.stats()
+        assert st["counters"]["accepted"] == st["counters"]["failed"] == 4
+        assert st["queue_depth"] == 0 and st["in_flight"] == 0
+
+    def test_poisoned_lane_does_not_wedge_neighbours(self):
+        classes = {
+            "cheap": ClassPolicy(name="cheap", slot_rounds=2),
+            "deep": ClassPolicy(name="deep", slot_rounds=8),
+        }
+        baseline = {r.payload: r.x for r in _drain_clean([1, 2, 3])}
+        svc = sssp_service(classes=classes, queue_capacity=16)
+        sched = ContinuousScheduler({"road": svc}, classes=classes, queue_capacity=16)
+        plan = FaultPlan(
+            [
+                FaultSpec(
+                    site="scheduler.lane",
+                    at=0,
+                    times=-1,
+                    match={"request_class": "cheap"},
+                )
+            ]
+        )
+        with inject(plan):
+            for v in (1, 2, 3):
+                assert sched.submit(
+                    QueryRequest(algo="sssp", payload=v, graph="road")
+                ).accepted
+            doomed = sched.submit(
+                QueryRequest(
+                    algo="sssp", payload=0, graph="road", request_class="cheap"
+                )
+            )
+            assert doomed.accepted
+            results = sched.drain()
+        (failure,) = sched.take_failures()
+        assert failure.request_id == doomed.request_id
+        assert failure.reason == "retries_exhausted"
+        assert len(results) == 3  # the deep lane never noticed
+        for r in results:
+            np.testing.assert_array_equal(r.x, baseline[r.payload])
+
+    def test_circuit_breaker_opens_then_cools(self):
+        classes = {
+            "deep": ClassPolicy(
+                name="deep",
+                slot_rounds=8,
+                max_retries=1,
+                breaker_threshold=2,
+                breaker_cooldown_rounds=10_000,
+            )
+        }
+        svc = sssp_service(classes=classes, queue_capacity=16)
+        plan = FaultPlan([FaultSpec(site="scheduler.lane", at=0, times=2)])
+        with inject(plan):
+            _submit_all(svc, [5])
+            svc.drain()
+        # two consecutive faulted quanta tripped the breaker
+        (failure,) = svc.take_failures()
+        assert failure.reason == "retries_exhausted"
+        adm = svc.submit(QueryRequest(algo="sssp", payload=6))
+        assert not adm.accepted and adm.reason == "lane_open"
+        assert svc.scheduler.rejections["lane_open"] == 1
+        brk = svc.scheduler.stats()["breakers"]["default/sssp/deep"]
+        assert brk["open"] and brk["consecutive"] == 2
+        # after the cooldown the lane half-opens and serves again
+        svc.scheduler.advance_clock(brk["open_until"])
+        assert svc.submit(QueryRequest(algo="sssp", payload=6)).accepted
+        (r,) = svc.drain()
+        assert r.converged
+        assert not svc.scheduler.stats()["breakers"]["default/sssp/deep"]["open"]
+
+    def test_deadline_exceeded_while_queued(self):
+        svc = sssp_service(batch_size=4, queue_capacity=16)
+        _submit_all(svc, range(4))  # fills every slot of the deep lane
+        late = svc.submit(QueryRequest(algo="sssp", payload=9, deadline_rounds=1))
+        assert late.accepted  # admission is about queue space, not deadlines
+        results = svc.drain()
+        (failure,) = svc.take_failures()
+        assert failure.request_id == late.request_id
+        assert failure.reason == "deadline_exceeded"
+        assert failure.attempts == 0  # it never reached a slot
+        assert len(results) == 4  # slotted-in queries run to retirement
+        st = svc.scheduler.stats()
+        assert st["counters"]["accepted"] == 5
+        assert st["counters"]["completed"] == 4
+        assert st["counters"]["failed"] == 1
+
+    def test_deadline_generous_enough_completes(self):
+        svc = sssp_service(batch_size=4, queue_capacity=16)
+        _submit_all(svc, range(4))
+        ok = svc.submit(QueryRequest(algo="sssp", payload=9, deadline_rounds=10_000))
+        assert ok.accepted
+        results = svc.drain()
+        assert svc.take_failures() == []
+        assert len(results) == 5
+
+
+def _drain_clean(payloads):
+    svc = sssp_service(queue_capacity=16)
+    _submit_all(svc, payloads)
+    return svc.drain()
