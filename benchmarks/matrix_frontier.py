@@ -1,0 +1,158 @@
+"""Matrix-frontier smoke: the (n, F) engine vs the vector engine, gated.
+
+Three deterministic claims, pinned to the committed baseline by the CI
+regression guard:
+
+* **F=1 parity** — a ``(n, 1)`` PageRank solve is bit-identical to the
+  ``(n,)`` vector solve (values, rounds, flushes) on every backend;
+* **RWR scaling** — an F-column random-walk-with-restart embedding solve
+  converges and publishes exactly F× the flush bytes of its F=1 run per
+  round (features ride the same commits, no extra flushes);
+* **label propagation** — the F-class matrix solve converges under sync /
+  async / delayed disciplines, anchors keep their labels, and the hard
+  labels agree across disciplines.
+
+Wall-clock fields are suffixed ``_s`` so the guard skips them by name.
+
+    PYTHONPATH=src python -m benchmarks.matrix_frontier [--scale 12]
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+from pathlib import Path
+
+import numpy as np
+
+from benchmarks.common import write_json_atomic
+from repro.graphs.generators import make_graph
+from repro.solve import (
+    Solver,
+    default_landmarks,
+    label_propagation_problem,
+    pagerank_problem,
+    rwr_embedding_problem,
+)
+
+RESULTS = Path(__file__).resolve().parents[1] / "results"
+
+BACKENDS = ("host", "jit", "pallas", "sharded")
+
+
+def f1_parity(graph, n_workers: int, delta: int) -> list[dict]:
+    """(n, 1) vs (n,) PageRank on every backend: bits, rounds, flushes."""
+    prob = pagerank_problem()
+    rows = []
+    for backend in BACKENDS:
+        s = Solver(graph, prob, n_workers=n_workers, delta=delta, backend=backend)
+        t0 = time.perf_counter()
+        r_vec = s.solve()
+        r_mat = s.solve(np.asarray(prob.x0(graph)).reshape(-1, 1))
+        rows.append(
+            {
+                "backend": backend,
+                "bit_identical": bool(
+                    np.array_equal(np.asarray(r_mat.x)[:, 0], np.asarray(r_vec.x))
+                ),
+                "rounds_equal": r_mat.rounds == r_vec.rounds,
+                "flushes_equal": r_mat.flushes == r_vec.flushes,
+                "rounds": int(r_vec.rounds),
+                "solve_pair_s": time.perf_counter() - t0,
+            }
+        )
+    return rows
+
+
+def rwr_scaling(graph, n_workers: int, delta: int, F: int) -> dict:
+    """F restart columns in one matrix solve: converges, flush bytes ×F."""
+    t0 = time.perf_counter()
+    p1 = rwr_embedding_problem(feature_dim=1)
+    pF = rwr_embedding_problem(feature_dim=F)
+    r1 = Solver(graph, p1, n_workers=n_workers, delta=delta, backend="jit").solve()
+    rF = Solver(graph, pF, n_workers=n_workers, delta=delta, backend="jit").solve()
+    per_round_1 = r1.flush_bytes / r1.rounds
+    per_round_f = rF.flush_bytes / rF.rounds
+    return {
+        "feature_dim": F,
+        "converged": bool(rF.converged),
+        "rounds": int(rF.rounds),
+        "flush_bytes_per_round_ratio": per_round_f / per_round_1,
+        "total_s": time.perf_counter() - t0,
+    }
+
+
+def labelprop_disciplines(graph, n_workers: int, F: int) -> dict:
+    """F-class label propagation under the paper's three disciplines."""
+    prob = label_propagation_problem(feature_dim=F)
+    anchors = default_landmarks(graph.n, F)
+    t0 = time.perf_counter()
+    hard, rows = [], []
+    for label, delta in (("sync", "sync"), ("async", "async"), ("delayed", 64)):
+        r = Solver(
+            graph, prob, n_workers=n_workers, delta=delta, backend="jit"
+        ).solve()
+        lab = np.asarray(r.x)
+        hard.append(np.argmax(lab, axis=1))
+        rows.append(
+            {
+                "discipline": label,
+                "delta": int(r.delta),
+                "rounds": int(r.rounds),
+                "converged": bool(r.converged),
+                "anchors_kept": bool(
+                    np.array_equal(np.argmax(lab[anchors], axis=1), np.arange(F))
+                ),
+            }
+        )
+    agree = float(np.mean([(h == hard[0]).mean() for h in hard[1:]]))
+    return {
+        "feature_dim": F,
+        "disciplines": rows,
+        "hard_label_agreement": agree,
+        "all_converged": all(row["converged"] for row in rows),
+        "total_s": time.perf_counter() - t0,
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--scale", type=int, default=12, help="log2 vertices")
+    ap.add_argument("--workers", type=int, default=8)
+    ap.add_argument("--delta", type=int, default=64)
+    ap.add_argument("--feature-dim", type=int, default=4)
+    args = ap.parse_args(argv)
+
+    g_pr = make_graph("twitter", scale=args.scale, efactor=8, kind="pagerank")
+    g_web = make_graph("web", scale=args.scale, efactor=8, kind="pagerank")
+
+    parity = f1_parity(g_pr, args.workers, args.delta)
+    for row in parity:
+        print(
+            f"f1-parity {row['backend']:8s} bit={row['bit_identical']} "
+            f"rounds={row['rounds']} ({row['solve_pair_s']:.2f} s)"
+        )
+    rwr = rwr_scaling(g_pr, args.workers, args.delta, args.feature_dim)
+    print(
+        f"rwr F={rwr['feature_dim']}: converged={rwr['converged']} "
+        f"rounds={rwr['rounds']} flush ratio={rwr['flush_bytes_per_round_ratio']:.1f}"
+    )
+    lp = labelprop_disciplines(g_web, args.workers, args.feature_dim)
+    print(
+        f"labelprop F={lp['feature_dim']}: all converged={lp['all_converged']} "
+        f"hard-label agreement={lp['hard_label_agreement']:.3f}"
+    )
+
+    report = {
+        "scale": args.scale,
+        "f1_parity": parity,
+        "f1_all_bit_identical": all(r["bit_identical"] for r in parity),
+        "rwr": rwr,
+        "labelprop": lp,
+    }
+    write_json_atomic(RESULTS / "matrix_frontier.json", report)
+    return report
+
+
+if __name__ == "__main__":
+    main()

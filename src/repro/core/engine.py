@@ -49,12 +49,26 @@ __all__ = [
     "execute_solve_fn",
     "run_host",
     "run_jit",
+    "extend_frontier",
     "MIN_CHUNK",
 ]
 
 # Finest vectorizable commit granularity (DESIGN.md §2): the TPU analogue of
 # the paper's one-cache-line δ=16.  One VPU lane row = 128 elements.
 MIN_CHUNK = 128
+
+
+def extend_frontier(x0, semiring: Semiring):
+    """Append the padding-dump slot: ``(n,)+feat → (n+1,)+feat``.
+
+    The frontier may be a vector ``(n,)`` or a matrix ``(n, F)``; the dump
+    row (index ``n``, where padded edges and padded δ-rows land) is filled
+    with the ⊕-identity either way.  One authority for the extended-frontier
+    layout shared by every runner, the Solver, and the batch path.
+    """
+    x0 = jnp.asarray(x0, dtype=semiring.dtype)
+    pad = jnp.full((1,) + x0.shape[1:], semiring.zero, dtype=semiring.dtype)
+    return jnp.concatenate([x0, pad])
 
 
 @dataclasses.dataclass(frozen=True)
@@ -190,28 +204,40 @@ def make_schedule(
 def _commit_step(
     s, x_ext, sched: DeviceSchedule, semiring: Semiring, row_update, q=None
 ):
-    """One commit step: chunk-SpMV for all workers + publish."""
+    """One commit step: chunk-SpMV for all workers + publish.
+
+    Shape-generic over the frontier's trailing feature axes: ``x_ext`` may be
+    ``(n+1,)`` (the classic vector engine) or ``(n+1, F)`` (matrix frontiers).
+    For the vector case every reshape below is the identity, so the emitted
+    computation — and therefore the result — is bit-identical to the
+    historical vector-only commit step.
+    """
     P, delta = sched.P, sched.delta
+    feat = x_ext.shape[1:]  # () for vector state, (F,) for matrix state
     src_s = jax.lax.dynamic_index_in_dim(sched.src, s, 0, keepdims=False)
     val_s = jax.lax.dynamic_index_in_dim(sched.val, s, 0, keepdims=False)
     dst_s = jax.lax.dynamic_index_in_dim(sched.dst_local, s, 0, keepdims=False)
     rows_s = jax.lax.dynamic_index_in_dim(sched.rows, s, 0, keepdims=False)
 
-    gathered = x_ext[src_s]  # (P, M) — reads the committed frontier
-    contrib = semiring.mul(gathered, val_s)  # (P, M)
+    gathered = x_ext[src_s]  # (P, M) + feat — reads the committed frontier
+    # Edge values broadcast over the feature axis: one ⊗ weight per edge.
+    val_b = val_s.reshape(val_s.shape + (1,) * len(feat))
+    contrib = semiring.mul(gathered, val_b)  # (P, M) + feat
     # Per-worker segment-⊕ into δ + 1 slots (last = padding dump).
     seg = dst_s + (jnp.arange(P, dtype=jnp.int32) * (delta + 1))[:, None]
     reduced = semiring.segment_reduce(
-        contrib.reshape(-1), seg.reshape(-1), P * (delta + 1)
-    ).reshape(P, delta + 1)[:, :delta]
-    old = x_ext[rows_s]  # (P, delta)
+        contrib.reshape((-1,) + feat), seg.reshape(-1), P * (delta + 1)
+    ).reshape((P, delta + 1) + feat)[:, :delta]
+    old = x_ext[rows_s]  # (P, delta) + feat
     if q is None:
         new = row_update(old, reduced, rows_s)
     else:
         new = row_update(old, reduced, rows_s, q)
     # Publish: the flush.  Padding rows all point at the dump slot (index n).
     return x_ext.at[rows_s.reshape(-1)].set(
-        new.reshape(-1).astype(x_ext.dtype), mode="drop", unique_indices=False
+        new.reshape((-1,) + feat).astype(x_ext.dtype),
+        mode="drop",
+        unique_indices=False,
     )
 
 
@@ -416,7 +442,7 @@ def make_solve_fn(
 
 @dataclasses.dataclass
 class EngineResult:
-    x: np.ndarray  # (n,) converged vertex values
+    x: np.ndarray  # (n,) or (n, F) converged vertex values
     rounds: int
     converged: bool
     flushes: int  # total commit collectives executed
@@ -456,8 +482,13 @@ class EngineResult:
         is reported separately in ``compile_time_s`` (never folded into a round
         time), and ``total_time_s`` is post-compile execution wall time, so
         ``rounds · avg_round_time_s ≈ total_time_s`` on both paths.
+
+        Matrix frontiers publish F values per row per commit, so
+        ``flush_bytes`` scales by the feature width (``F = 1`` reduces to the
+        historical vector accounting, byte for byte).
         """
-        bytes_per = np.dtype(semiring.dtype).itemsize
+        F = int(np.prod(np.shape(x_ext)[1:], dtype=np.int64))
+        bytes_per = np.dtype(semiring.dtype).itemsize * max(F, 1)
         flushes = rounds * sched.S
         if total_time_s is None:
             total_time_s = float(np.sum(round_times_s)) if round_times_s else 0.0
@@ -492,9 +523,7 @@ def run_host(
     The round function is compiled ahead of the loop so every entry of
     ``round_times_s`` is a post-compile measurement.
     """
-    x_ext = jnp.concatenate(
-        [jnp.asarray(x0, dtype=semiring.dtype), jnp.asarray([semiring.zero])]
-    )
+    x_ext = extend_frontier(x0, semiring)
     t0 = time.perf_counter()
     rnd = jax.jit(round_fn(sched, semiring, row_update)).lower(x_ext).compile()
     compile_time_s = time.perf_counter() - t0
@@ -601,9 +630,7 @@ def run_jit(
     max_rounds: int = 1000,
 ) -> EngineResult:
     """Fully fused device loop (``lax.while_loop``) — production path."""
-    x_ext = jnp.concatenate(
-        [jnp.asarray(x0, dtype=semiring.dtype), jnp.asarray([semiring.zero])]
-    )
+    x_ext = extend_frontier(x0, semiring)
     tol_a = jnp.asarray(tol, jnp.float32)
     mr_a = jnp.asarray(max_rounds, jnp.int32)
     jitted = jax.jit(make_solve_fn(sched, semiring, row_update, residual_fn))

@@ -4,6 +4,22 @@ A pull update is ``x'[u] = row_update(x[u], ⊕_{v ∈ in(u)} x[v] ⊗ A[v, u])`
 The semiring supplies ⊕ (as a segment reduction), ⊗, the ⊕-identity, and the
 *annihilating edge value* used for schedule padding (``x ⊗ pad = ⊕-identity``
 for every ``x``), so padded edges are no-ops.
+
+Frontier "rows" need not be scalars: every op here is shape-generic over
+trailing feature axes, so the same semiring drives ``(N,)`` vector frontiers
+and ``(N, F)`` matrix frontiers (random-walk-with-restart embeddings, F-class
+label propagation).  The contract each op must honor:
+
+* ``mul(frontier_vals, edge_vals)`` — ``frontier_vals`` is ``(...,) + feat``
+  while ``edge_vals`` arrives pre-expanded with trailing length-1 axes, so a
+  plain broadcasting elementwise op (``*``, saturating ``+``) just works.
+* ``segment_reduce(vals, seg_ids, num)`` — reduces over the *leading* axis
+  only; ``vals`` may carry trailing feature axes (``jax.ops.segment_sum`` /
+  ``segment_min`` already do).
+* ``add`` — elementwise, broadcasting.
+
+With ``feat = ()`` all of this degenerates to the historical vector engine,
+bit for bit.
 """
 
 from __future__ import annotations
@@ -23,6 +39,8 @@ INT_INF = np.int32(2**30 - 1)
 
 @dataclasses.dataclass(frozen=True)
 class Semiring:
+    """A (⊕, ⊗) pair plus the identities the schedule padding relies on."""
+
     name: str
     dtype: np.dtype
     zero: object  # ⊕ identity
@@ -33,10 +51,12 @@ class Semiring:
 
 
 def _segment_sum(vals, seg_ids, num):
+    """Leading-axis segment-⊕ for plus-times; trailing feature axes ride along."""
     return jax.ops.segment_sum(vals, seg_ids, num_segments=num)
 
 
 def _segment_min(vals, seg_ids, num):
+    """Leading-axis segment-⊕ for min-plus; trailing feature axes ride along."""
     return jax.ops.segment_min(vals, seg_ids, num_segments=num)
 
 
@@ -63,4 +83,5 @@ MIN_PLUS = Semiring(
 
 
 def min_plus_int32() -> Semiring:
+    """The saturating-int32 min-plus semiring (kept for API compatibility)."""
     return MIN_PLUS

@@ -113,6 +113,7 @@ def sharded_round_fn_q(
     row_update,
     mesh,
     axis: str = "data",
+    feature_dims: int = 0,
 ) -> Callable:
     """Return jit-able ``(x_ext, src, val, dst_local, rows, q) -> x_ext``.
 
@@ -121,6 +122,11 @@ def sharded_round_fn_q(
     ``q`` stay replicated.  ``row_update`` is the 4-arg query form
     ``(old, reduced, rows, q) -> new``.  Requires ``sched.P`` divisible by the
     axis size (workers per device is static).
+
+    ``feature_dims`` is the number of trailing feature axes on ``x_ext`` —
+    0 for the classic ``(n+1,)`` vector frontier, 1 for ``(n+1, F)`` matrix
+    frontiers (the feature axis stays replicated; only the worker axis
+    shards).
     """
     axis_size = mesh_axis_sizes(mesh)[axis]
     if sched.P % axis_size != 0:
@@ -129,6 +135,7 @@ def sharded_round_fn_q(
 
     def body(x_ext, src, val, dst_local, rows, q):
         P_loc = src.shape[1]
+        feat = x_ext.shape[1:]
 
         def commit_step(s, x):
             src_s = jax.lax.dynamic_index_in_dim(src, s, 0, keepdims=False)
@@ -136,12 +143,13 @@ def sharded_round_fn_q(
             dst_s = jax.lax.dynamic_index_in_dim(dst_local, s, 0, keepdims=False)
             rows_s = jax.lax.dynamic_index_in_dim(rows, s, 0, keepdims=False)
 
-            gathered = x[src_s]  # (P_loc, M) — committed frontier reads
-            contrib = semiring.mul(gathered, val_s)
+            gathered = x[src_s]  # (P_loc, M) + feat — committed frontier reads
+            val_b = val_s.reshape(val_s.shape + (1,) * len(feat))
+            contrib = semiring.mul(gathered, val_b)
             seg = dst_s + (jnp.arange(P_loc, dtype=jnp.int32) * (delta + 1))[:, None]
             reduced = semiring.segment_reduce(
-                contrib.reshape(-1), seg.reshape(-1), P_loc * (delta + 1)
-            ).reshape(P_loc, delta + 1)[:, :delta]
+                contrib.reshape((-1,) + feat), seg.reshape(-1), P_loc * (delta + 1)
+            ).reshape((P_loc, delta + 1) + feat)[:, :delta]
             old = x[rows_s]
             new = row_update(old, reduced, rows_s, q)
             # Flush: gather every worker's chunk, publish with the reference
@@ -149,7 +157,7 @@ def sharded_round_fn_q(
             new_full = jax.lax.all_gather(new, axis, axis=0, tiled=True)
             rows_full = jax.lax.all_gather(rows_s, axis, axis=0, tiled=True)
             return x.at[rows_full.reshape(-1)].set(
-                new_full.reshape(-1).astype(x.dtype),
+                new_full.reshape((-1,) + feat).astype(x.dtype),
                 mode="drop",
                 unique_indices=False,
             )
@@ -157,11 +165,12 @@ def sharded_round_fn_q(
         return jax.lax.fori_loop(0, sched.S, commit_step, x_ext)
 
     sched_spec = P(None, axis, None)
+    x_spec = P(*((None,) * (1 + feature_dims)))
     return shard_map(
         body,
         mesh=mesh,
-        in_specs=(P(None), sched_spec, sched_spec, sched_spec, sched_spec, P()),
-        out_specs=P(None),
+        in_specs=(x_spec, sched_spec, sched_spec, sched_spec, sched_spec, P()),
+        out_specs=x_spec,
         check_vma=False,
     )
 
@@ -172,6 +181,7 @@ def sharded_round_fn(
     row_update,
     mesh,
     axis: str = "data",
+    feature_dims: int = 0,
 ) -> Callable:
     """Query-free surface: ``(x_ext, src, val, dst_local, rows) -> x_ext``.
 
@@ -183,6 +193,7 @@ def sharded_round_fn(
         lambda old, reduced, rows, q: row_update(old, reduced, rows),
         mesh,
         axis,
+        feature_dims,
     )
 
     def fn(x_ext, src, val, dst_local, rows):
@@ -301,10 +312,12 @@ class FrontierPlan:
         return plan
 
     def gather_x(self, x_loc, dump=None):
-        """Stacked ``(D, L)`` local view → ``(n + 1,)`` global frontier."""
-        owned = jnp.reshape(x_loc, (-1,))[self.owned_flat]
+        """Stacked ``(D, L)+feat`` local view → ``(n + 1,)+feat`` global frontier."""
+        feat = jnp.shape(x_loc)[2:]
+        flat = jnp.reshape(x_loc, (-1,) + tuple(feat))
+        owned = flat[self.owned_flat]
         if dump is None:
-            dump = jnp.reshape(x_loc, (-1,))[-1:]
+            dump = flat[-1:]
         return jnp.concatenate([owned, dump])
 
 
@@ -480,6 +493,7 @@ def frontier_sharded_round_fn(
     row_update,
     mesh,
     axis: str = "data",
+    feature_dims: int = 0,
 ) -> Callable:
     """Owner-computes round over the sharded frontier ``(D, L)``.
 
@@ -489,6 +503,10 @@ def frontier_sharded_round_fn(
     ``row_update`` is the 4-arg query form.  Each commit step publishes the
     shard's own chunk locally, then all-gathers only the ``(D, H)`` boundary
     entries — O(boundary) wire instead of the replicated O(P·δ).
+
+    With ``feature_dims=1`` the local frontier is ``(D, L, F)`` and each halo
+    all-gather ships ``(H, F)`` boundary *blocks* — the FrontierPlan is
+    unchanged; only the gathered payload widens.
     """
     axis_size = mesh_axis_sizes(mesh)[axis]
     if axis_size != plan.D:
@@ -496,10 +514,11 @@ def frontier_sharded_round_fn(
     delta, S = sched.delta, sched.S
 
     def body(x, src_loc, val, dst_local, rows_g, rows_loc, send_idx, recv_idx, q):
-        # Per-shard blocks: x (1, L); plan blocks (1, S, P_loc, ·); schedule
-        # cells (S, P_loc, ·); send (S, 1, H); recv (S, 1, D·H).
+        # Per-shard blocks: x (1, L)+feat; plan blocks (1, S, P_loc, ·);
+        # schedule cells (S, P_loc, ·); send (S, 1, H); recv (S, 1, D·H).
         sl, rl = src_loc[0], rows_loc[0]
         P_loc = sl.shape[1]
+        feat = x.shape[2:]
 
         def commit_step(s, xv):
             src_s = jax.lax.dynamic_index_in_dim(sl, s, 0, keepdims=False)
@@ -510,15 +529,16 @@ def frontier_sharded_round_fn(
             snd_s = jax.lax.dynamic_index_in_dim(send_idx, s, 0, keepdims=False)[0]
             rcv_s = jax.lax.dynamic_index_in_dim(recv_idx, s, 0, keepdims=False)[0]
 
-            gathered = xv[src_s]  # (P_loc, M) — owned + halo reads, all local
-            contrib = semiring.mul(gathered, val_s)
+            gathered = xv[src_s]  # (P_loc, M)+feat — owned + halo reads, local
+            val_b = val_s.reshape(val_s.shape + (1,) * len(feat))
+            contrib = semiring.mul(gathered, val_b)
             seg = dst_s + (jnp.arange(P_loc, dtype=jnp.int32) * (delta + 1))[:, None]
             reduced = semiring.segment_reduce(
-                contrib.reshape(-1), seg.reshape(-1), P_loc * (delta + 1)
-            ).reshape(P_loc, delta + 1)[:, :delta]
+                contrib.reshape((-1,) + feat), seg.reshape(-1), P_loc * (delta + 1)
+            ).reshape((P_loc, delta + 1) + feat)[:, :delta]
             old = xv[rl_s]
             new = row_update(old, reduced, rg_s, q)
-            newv = new.reshape(-1).astype(xv.dtype)
+            newv = new.reshape((-1,) + feat).astype(xv.dtype)
             # Owner-computes publish: only this shard writes its owned rows.
             xv = xv.at[rl_s.reshape(-1)].set(newv, mode="drop", unique_indices=False)
             # Halo exchange: ship only the boundary entries of this commit.
@@ -531,11 +551,12 @@ def frontier_sharded_round_fn(
 
     cell = P(None, axis, None)
     block = P(axis, None, None, None)
+    x_spec = P(axis, *((None,) * (1 + feature_dims)))
     return shard_map(
         body,
         mesh=mesh,
-        in_specs=(P(axis, None), block, cell, cell, cell, block, cell, cell, P()),
-        out_specs=P(axis, None),
+        in_specs=(x_spec, block, cell, cell, cell, block, cell, cell, P()),
+        out_specs=x_spec,
         check_vma=False,
     )
 
@@ -547,37 +568,44 @@ def frontier_round_ext_fn(
     row_update,
     mesh,
     axis: str = "data",
+    feature_dims: int = 0,
 ) -> Callable:
     """Global-frontier view of the halo round: ``(x_ext, q, *plan args) -> x_ext``.
 
     Scatters ``x_ext`` into the owner-computes layout, runs one halo round,
     and gathers the owned entries back (the dump slot passes through), so
-    host-driven convergence loops and residuals see the familiar ``(n + 1,)``
-    frontier.  Argument order after ``q`` matches :func:`frontier_plan_args`.
+    host-driven convergence loops and residuals see the familiar
+    ``(n + 1,)+feat`` frontier.  Argument order after ``q`` matches
+    :func:`frontier_plan_args`.
     """
-    rnd = frontier_sharded_round_fn(sched, plan, semiring, row_update, mesh, axis)
+    rnd = frontier_sharded_round_fn(
+        sched, plan, semiring, row_update, mesh, axis, feature_dims
+    )
 
     def fn(
         x_ext, q, src_loc, val, dst_local, rows_g, rows_loc, send, recv, gidx, oflat
     ):
+        feat = x_ext.shape[1:]
         x_loc = x_ext[gidx]
         x_out = rnd(x_loc, src_loc, val, dst_local, rows_g, rows_loc, send, recv, q)
-        owned = x_out.reshape(-1)[oflat]
+        owned = x_out.reshape((-1,) + feat)[oflat]
         return jnp.concatenate([owned, x_ext[-1:]])
 
     return fn
 
 
-def frontier_ef_init(plan: FrontierPlan) -> jnp.ndarray:
-    """Zero error-feedback residuals ``(D, S, H)`` f32 for the quantized halo.
+def frontier_ef_init(plan: FrontierPlan, feat: tuple = ()) -> jnp.ndarray:
+    """Zero error-feedback residuals ``(D, S, H)+feat`` f32 for the quantized halo.
 
-    One residual per (shard, commit step, boundary row): whatever the
-    quantizer could not represent this round is added back to the same
-    boundary row's send value next round, so quantization error accumulates
-    into the iteration as bounded staleness instead of bias.  Harmless (all
-    zeros stay zero) when ``halo_dtype="f32"``.
+    One residual per (shard, commit step, boundary row[, feature column]):
+    whatever the quantizer could not represent this round is added back to the
+    same boundary row's send value next round, so quantization error
+    accumulates into the iteration as bounded staleness instead of bias.
+    Harmless (all zeros stay zero) when ``halo_dtype="f32"``.  ``feat`` is the
+    frontier's trailing feature shape — matrix frontiers quantize per column,
+    so they carry per-feature residuals.
     """
-    return jnp.zeros((plan.D, plan.S, plan.H), jnp.float32)
+    return jnp.zeros((plan.D, plan.S, plan.H) + tuple(feat), jnp.float32)
 
 
 def frontier_pallas_round_fn(
@@ -589,6 +617,7 @@ def frontier_pallas_round_fn(
     axis: str = "data",
     halo_dtype: str = "f32",
     interpret: bool | None = None,
+    feature_dims: int = 0,
 ) -> Callable:
     """Fused owner-computes round: one Pallas kernel per commit per shard.
 
@@ -609,6 +638,11 @@ def frontier_pallas_round_fn(
     error-feedback residuals ``ef`` carried across rounds — the all-gathered
     payload is genuinely 1 byte/element on the wire, at the price of
     quantization noise entering the iteration as extra staleness.
+
+    With ``feature_dims=1`` each send is an ``(H, F)`` boundary block and
+    quantization applies **per feature column**: the max-abs scale is ``(F,)``
+    per (shard, commit) and the error-feedback residuals carry a feature axis,
+    so one large column can never wash out another's resolution.
     """
     axis_size = mesh_axis_sizes(mesh)[axis]
     if axis_size != plan.D:
@@ -656,16 +690,18 @@ def frontier_pallas_round_fn(
 
             qdtype, qmax = qinfo
             ef_s = jax.lax.dynamic_index_in_dim(efv, s, 0, keepdims=False)
-            want = send.astype(jnp.float32) + ef_s
-            scale = jnp.maximum(jnp.max(jnp.abs(want)), 1e-30) / qmax
+            want = send.astype(jnp.float32) + ef_s  # (H,)+feat
+            # Per-feature max-abs scale: () for vectors, (F,) for matrices.
+            scale = jnp.maximum(jnp.max(jnp.abs(want), axis=0), 1e-30) / qmax
             if qdtype == jnp.int8:
                 qv = jnp.clip(jnp.round(want / scale), -qmax, qmax).astype(qdtype)
             else:
                 qv = jnp.clip(want / scale, -qmax, qmax).astype(qdtype)
-            # 1-byte elements on the wire; scales are a (D,) f32 side channel.
+            # 1-byte elements on the wire; scales are a (D,)+feat f32 side
+            # channel.
             qbuf = jax.lax.all_gather(qv, axis, axis=0, tiled=True)
             sbuf = jax.lax.all_gather(scale[None], axis, axis=0, tiled=True)
-            deq = qbuf.astype(jnp.float32) * jnp.repeat(sbuf, H)
+            deq = qbuf.astype(jnp.float32) * jnp.repeat(sbuf, H, axis=0)
             efv = jax.lax.dynamic_update_index_in_dim(
                 efv, want - qv.astype(jnp.float32) * scale, s, 0
             )
@@ -679,12 +715,14 @@ def frontier_pallas_round_fn(
 
     cell = P(None, axis, None)
     block = P(axis, None, None, None)
+    x_spec = P(axis, *((None,) * (1 + feature_dims)))
+    ef_spec = P(axis, *((None,) * (2 + feature_dims)))
     return shard_map(
         body,
         mesh=mesh,
         in_specs=(
-            P(axis, None),
-            P(axis, None, None),
+            x_spec,
+            ef_spec,
             block,
             cell,
             cell,
@@ -694,7 +732,7 @@ def frontier_pallas_round_fn(
             cell,
             P(),
         ),
-        out_specs=(P(axis, None), P(axis, None, None)),
+        out_specs=(x_spec, ef_spec),
         check_vma=False,
     )
 
@@ -708,6 +746,7 @@ def frontier_pallas_round_ext_fn(
     axis: str = "data",
     halo_dtype: str = "f32",
     interpret: bool | None = None,
+    feature_dims: int = 0,
 ) -> Callable:
     """Global-frontier view of the fused halo round.
 
@@ -717,7 +756,15 @@ def frontier_pallas_round_ext_fn(
     threaded through so callers carry them across rounds.
     """
     rnd = frontier_pallas_round_fn(
-        sched, plan, semiring, row_update, mesh, axis, halo_dtype, interpret
+        sched,
+        plan,
+        semiring,
+        row_update,
+        mesh,
+        axis,
+        halo_dtype,
+        interpret,
+        feature_dims,
     )
 
     def fn(
@@ -734,11 +781,12 @@ def frontier_pallas_round_ext_fn(
         gidx,
         oflat,
     ):
+        feat = x_ext.shape[1:]
         x_loc = x_ext[gidx]
         x_out, ef_out = rnd(
             x_loc, ef, src_loc, val, dst_local, rows_g, rows_loc, send, recv, q
         )
-        owned = x_out.reshape(-1)[oflat]
+        owned = x_out.reshape((-1,) + feat)[oflat]
         return jnp.concatenate([owned, x_ext[-1:]]), ef_out
 
     return fn

@@ -8,16 +8,20 @@ import jax.numpy as jnp
 def spmv_ell_ref(x_ext, idx, val, semiring: str):
     """Semiring SpMV over ELL rows.
 
-    x_ext: (n_slots,) frontier (+ dump slot); idx: (rows, max_deg) int32
-    (padding points anywhere, val annihilates); val: (rows, max_deg).
-    Returns (rows,) = ⊕_j x_ext[idx[r, j]] ⊗ val[r, j].
+    x_ext: (n_slots,)+feat frontier (+ dump slot), feat ∈ {(), (F,)};
+    idx: (rows, max_deg) int32 (padding points anywhere, val annihilates);
+    val: (rows, max_deg) — one ⊗ weight per edge, broadcast over features.
+    Returns (rows,)+feat = ⊕_j x_ext[idx[r, j]] ⊗ val[r, j].
     """
-    gathered = x_ext[idx]  # (rows, max_deg)
+    gathered = x_ext[idx]  # (rows, max_deg) + feat
+    val_b = val.reshape(val.shape + (1,) * (gathered.ndim - val.ndim))
     if semiring == "plus_times":
-        return jnp.sum(gathered * val, axis=1)
+        return jnp.sum(gathered * val_b, axis=1)
     if semiring == "min_plus":
         return jnp.min(
-            jnp.minimum(gathered.astype(jnp.int64) + val.astype(jnp.int64), 2**30 - 1),
+            jnp.minimum(
+                gathered.astype(jnp.int64) + val_b.astype(jnp.int64), 2**30 - 1
+            ),
             axis=1,
         ).astype(val.dtype)
     raise ValueError(semiring)

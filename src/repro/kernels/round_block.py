@@ -94,11 +94,16 @@ def _at_least_1d(leaf):
     return arr.reshape((1,)) if arr.ndim == 0 else arr
 
 
-def _trace_row_update(row_update_q, semiring: Semiring, P, delta, q_avals):
-    """Trace ``row_update(old, reduced, rows, q)`` and hoist its constants."""
+def _trace_row_update(row_update_q, semiring: Semiring, P, delta, q_avals, feat=()):
+    """Trace ``row_update(old, reduced, rows, q)`` and hoist its constants.
+
+    ``feat`` is the frontier's trailing feature shape — ``()`` for the vector
+    engine, ``(F,)`` for matrix frontiers — so ``old``/``reduced`` trace at
+    the same rank the kernel will feed them.
+    """
     closed = jax.make_jaxpr(row_update_q)(
-        jax.ShapeDtypeStruct((P, delta), semiring.dtype),
-        jax.ShapeDtypeStruct((P, delta), semiring.dtype),
+        jax.ShapeDtypeStruct((P, delta) + tuple(feat), semiring.dtype),
+        jax.ShapeDtypeStruct((P, delta) + tuple(feat), semiring.dtype),
         jax.ShapeDtypeStruct((P, delta), np.int32),
         *q_avals,
     )
@@ -124,6 +129,7 @@ def fused_round_fn_q(
     interp = resolve_interpret(interpret)
 
     def rnd(x_ext, q):
+        feat = tuple(jnp.shape(x_ext)[1:])  # () vector, (F,) matrix frontier
         q_leaves, q_tree = jax.tree_util.tree_flatten(q)
         q_avals = [
             jax.ShapeDtypeStruct(jnp.shape(leaf), jnp.result_type(leaf))
@@ -135,7 +141,9 @@ def fused_round_fn_q(
                 old, reduced, rows, jax.tree_util.tree_unflatten(q_tree, leaves)
             )
 
-        jaxpr, consts = _trace_row_update(row_update_flat, semiring, P, delta, q_avals)
+        jaxpr, consts = _trace_row_update(
+            row_update_flat, semiring, P, delta, q_avals, feat
+        )
         c_shapes = [c.shape for c in consts]
         c_in = [_at_least_1d(c) for c in consts]
         q_in = [_at_least_1d(leaf) for leaf in q_leaves]
@@ -153,18 +161,23 @@ def fused_round_fn_q(
             dst = dst_ref[0]
             rows = rows_ref[0]  # (P, delta)
             x = x_ref[...]  # reads every prior step's commits
-            contrib = semiring.mul(x[src], val)
+            val_b = val.reshape(val.shape + (1,) * len(feat))
+            contrib = semiring.mul(x[src], val_b)
             # Per-worker segment-⊕ into δ + 1 slots (last = padding dump).
             seg = dst + (jnp.arange(P, dtype=jnp.int32) * (delta + 1))[:, None]
             reduced = semiring.segment_reduce(
-                contrib.reshape(-1), seg.reshape(-1), P * (delta + 1)
-            ).reshape(P, delta + 1)[:, :delta]
+                contrib.reshape((-1,) + feat), seg.reshape(-1), P * (delta + 1)
+            ).reshape((P, delta + 1) + feat)[:, :delta]
             old = x[rows]
             c_vals = [c[...].reshape(shape) for c, shape in zip(c_refs, c_shapes)]
             leaves = [r[...].reshape(a.shape) for r, a in zip(q_refs, q_avals)]
             (new,) = _eval_jaxpr(jaxpr, c_vals, old, reduced, rows, *leaves)
             # The flush: commit this step's chunks into the VMEM frontier.
-            x_ref[rows.reshape(-1)] = new.reshape(-1).astype(x_ref.dtype)
+            if feat:
+                chunk = new.reshape((-1,) + feat).astype(x_ref.dtype)
+                x_ref[...] = x.at[rows.reshape(-1)].set(chunk)
+            else:
+                x_ref[rows.reshape(-1)] = new.reshape(-1).astype(x_ref.dtype)
 
         stripe = [
             pl.BlockSpec((1, P, M), lambda s: (s, 0, 0)),
@@ -176,9 +189,9 @@ def fused_round_fn_q(
         return pl.pallas_call(
             kernel,
             grid=(S,),
-            in_specs=stripe + resident + [_full_spec((n_slots,))],
-            out_specs=_full_spec((n_slots,)),
-            out_shape=jax.ShapeDtypeStruct((n_slots,), semiring.dtype),
+            in_specs=stripe + resident + [_full_spec((n_slots,) + feat)],
+            out_specs=_full_spec((n_slots,) + feat),
+            out_shape=jax.ShapeDtypeStruct((n_slots,) + feat, semiring.dtype),
             # x_ext in ↔ out: commits stay visible across sequential steps
             input_output_aliases={4 + n_consts + n_q: 0},
             interpret=interp,
@@ -228,6 +241,7 @@ def fused_halo_step_fn(
     interp = resolve_interpret(interpret)
 
     def step(x_loc, src_s, val_s, dst_s, rows_g_s, rows_loc_s, send_s, q):
+        feat = tuple(jnp.shape(x_loc)[1:])  # () vector, (F,) matrix frontier
         q_leaves, q_tree = jax.tree_util.tree_flatten(q)
         q_avals = [
             jax.ShapeDtypeStruct(jnp.shape(leaf), jnp.result_type(leaf))
@@ -240,7 +254,7 @@ def fused_halo_step_fn(
             )
 
         jaxpr, consts = _trace_row_update(
-            row_update_flat, semiring, P_loc, delta, q_avals
+            row_update_flat, semiring, P_loc, delta, q_avals, feat
         )
         c_shapes = [c.shape for c in consts]
         c_in = [_at_least_1d(c) for c in consts]
@@ -259,18 +273,22 @@ def fused_halo_step_fn(
             rows_g = rg_ref[...]  # (P_loc, delta) global ids for row_update
             rows_l = rl_ref[...]  # (P_loc, delta) local slots (dump = L - 1)
             x = x_ref[...]
-            contrib = semiring.mul(x[src], val)
+            val_b = val.reshape(val.shape + (1,) * len(feat))
+            contrib = semiring.mul(x[src], val_b)
             seg = dst + (jnp.arange(P_loc, dtype=jnp.int32) * (delta + 1))[:, None]
             reduced = semiring.segment_reduce(
-                contrib.reshape(-1), seg.reshape(-1), P_loc * (delta + 1)
-            ).reshape(P_loc, delta + 1)[:, :delta]
+                contrib.reshape((-1,) + feat), seg.reshape(-1), P_loc * (delta + 1)
+            ).reshape((P_loc, delta + 1) + feat)[:, :delta]
             old = x[rows_l]
             c_vals = [c[...].reshape(shape) for c, shape in zip(c_refs, c_shapes)]
             leaves = [r[...].reshape(a.shape) for r, a in zip(q_refs, q_avals)]
             (new,) = _eval_jaxpr(jaxpr, c_vals, old, reduced, rows_g, *leaves)
-            chunk = new.reshape(-1).astype(x_ref.dtype)
+            chunk = new.reshape((-1,) + feat).astype(x_ref.dtype)
             # Owner-computes publish: commit this shard's chunk in VMEM.
-            x_ref[rows_l.reshape(-1)] = chunk
+            if feat:
+                x_ref[...] = x.at[rows_l.reshape(-1)].set(chunk)
+            else:
+                x_ref[rows_l.reshape(-1)] = chunk
             # Boundary selection for the halo exchange, also in VMEM.
             send_ref[...] = chunk[snd_ref[...]]
 
@@ -279,10 +297,10 @@ def fused_halo_step_fn(
             kernel,
             grid=(1,),
             in_specs=[_full_spec(jnp.shape(a)) for a in ins],
-            out_specs=[_full_spec((L,)), _full_spec((H,))],
+            out_specs=[_full_spec((L,) + feat), _full_spec((H,) + feat)],
             out_shape=[
-                jax.ShapeDtypeStruct((L,), semiring.dtype),
-                jax.ShapeDtypeStruct((H,), semiring.dtype),
+                jax.ShapeDtypeStruct((L,) + feat, semiring.dtype),
+                jax.ShapeDtypeStruct((H,) + feat, semiring.dtype),
             ],
             input_output_aliases={len(ins) - 1: 0},
             interpret=interp,

@@ -35,15 +35,17 @@ DEFAULT_ROW_TILE = 256
 def _kernel_plus_times(x_ref, idx_ref, val_ref, out_ref):
     idx = idx_ref[...]  # (rows, max_deg)
     val = val_ref[...]
-    gathered = x_ref[idx]  # vectorised VMEM gather
-    out_ref[...] = jnp.sum(gathered * val, axis=1)
+    gathered = x_ref[...][idx]  # vectorised VMEM gather, (rows, max_deg)+feat
+    val_b = val.reshape(val.shape + (1,) * (gathered.ndim - val.ndim))
+    out_ref[...] = jnp.sum(gathered * val_b, axis=1)
 
 
 def _kernel_min_plus(x_ref, idx_ref, val_ref, out_ref):
     idx = idx_ref[...]
     val = val_ref[...]
-    gathered = x_ref[idx]
-    relaxed = jnp.minimum(gathered + val, INT_INF)  # saturating int32
+    gathered = x_ref[...][idx]
+    val_b = val.reshape(val.shape + (1,) * (gathered.ndim - val.ndim))
+    relaxed = jnp.minimum(gathered + val_b, INT_INF)  # saturating int32
     out_ref[...] = jnp.min(relaxed, axis=1)
 
 
@@ -62,25 +64,31 @@ def spmv_ell(
 ):
     """rows = ⊕_j x_ext[idx[r, j]] ⊗ val[r, j] via pl.pallas_call.
 
+    ``x_ext`` may be ``(n_slots,)`` or ``(n_slots, F)``; with a matrix
+    frontier the output is ``(rows, F)`` and the whole ``(n_slots, F)`` tile
+    is pinned in VMEM (feature columns are contiguous lanes).
+
     ``interpret=None`` (the default) auto-dispatches: compiled on TPU,
     interpret-mode emulation elsewhere.  Pass ``True``/``False`` to force.
     """
     interpret = resolve_interpret(interpret)
     rows, max_deg = idx.shape
+    feat = x_ext.shape[1:]
     row_tile = min(row_tile, rows)
     assert rows % row_tile == 0, (rows, row_tile)
     grid = (rows // row_tile,)
     kernel = _KERNELS[semiring]
+    zeros = (0,) * len(feat)
     return pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
-            # frontier: whole vector resident in VMEM for every grid step
-            pl.BlockSpec(x_ext.shape, lambda r: (0,)),
+            # frontier: whole vector/matrix resident in VMEM for every step
+            pl.BlockSpec(x_ext.shape, lambda r, z=zeros: (0,) + z),
             pl.BlockSpec((row_tile, max_deg), lambda r: (r, 0)),
             pl.BlockSpec((row_tile, max_deg), lambda r: (r, 0)),
         ],
-        out_specs=pl.BlockSpec((row_tile,), lambda r: (r,)),
-        out_shape=jax.ShapeDtypeStruct((rows,), val.dtype),
+        out_specs=pl.BlockSpec((row_tile,) + feat, lambda r, z=zeros: (r,) + z),
+        out_shape=jax.ShapeDtypeStruct((rows,) + feat, val.dtype),
         interpret=interpret,
     )(x_ext, idx, val)

@@ -35,13 +35,27 @@ from repro.launch.service.types import (
     QueryRequest,
     QueryResult,
 )
-from repro.solve import BACKEND_FRONTIERS, Solver, ppr_problem, sssp_problem
+from repro.solve import (
+    BACKEND_FRONTIERS,
+    Solver,
+    label_propagation_problem,
+    ppr_problem,
+    rwr_embedding_problem,
+    sssp_problem,
+)
 
 __all__ = ["GraphService", "main"]
 
 
 class GraphService:
-    """Answers SSSP / personalized-PageRank queries on one resident graph.
+    """Answers SSSP / PPR / RWR / label-propagation queries on one graph.
+
+    Vector algorithms (``"sssp"``, ``"ppr"``) retire ``(n,)`` rows; matrix
+    algorithms (``"rwr"`` — F random-walk-with-restart proximity columns,
+    ``"labelprop"`` — F-class semi-supervised labels) retire ``(n, F)``
+    matrices, with ``F = feature_dim``.  All four share the continuous-
+    batching lanes; a matrix lane's compiled loop simply carries the extra
+    trailing feature axis.
 
     The public surface is the typed request/response API: :meth:`submit` a
     :class:`QueryRequest` (constant-time admission or a reasoned rejection),
@@ -98,6 +112,7 @@ class GraphService:
         per_graph_quota: int | None = None,
         classes: dict[str, ClassPolicy] | None = None,
         algos: tuple[str, ...] = ("sssp", "ppr"),
+        feature_dim: int = 4,
         degrade: bool = False,
     ):
         self.graph = graph
@@ -115,6 +130,7 @@ class GraphService:
         self.per_graph_quota = per_graph_quota
         self.classes = classes
         self.algos = tuple(algos)
+        self.feature_dim = feature_dim  # F for the matrix algos (rwr/labelprop)
         # serving deployments usually want degrade=True: a kernel fault turns
         # into a slower bit-identical answer instead of a failed lane quantum
         self.degrade = degrade
@@ -129,6 +145,12 @@ class GraphService:
             problems = {
                 "sssp": sssp_problem,
                 "ppr": lambda: ppr_problem(damping=self.damping),
+                "rwr": lambda: rwr_embedding_problem(
+                    feature_dim=self.feature_dim, damping=self.damping
+                ),
+                "labelprop": lambda: label_propagation_problem(
+                    feature_dim=self.feature_dim
+                ),
             }
             sv = Solver(
                 self.graph,
@@ -286,8 +308,19 @@ def main(argv=None) -> dict:
     ap.add_argument("--efactor", type=int, default=8)
     ap.add_argument("--workers", type=int, default=8)
     ap.add_argument("--delta", default="auto", help="'auto', 'sync', 'async', or int")
-    ap.add_argument("--algo", choices=["sssp", "ppr", "both"], default="both")
+    ap.add_argument(
+        "--algo",
+        choices=["sssp", "ppr", "rwr", "labelprop", "both", "all"],
+        default="both",
+        help="'both' = sssp+ppr (vector algos); 'all' adds the matrix algos",
+    )
     ap.add_argument("--queries", type=int, default=8, help="batch capacity Q")
+    ap.add_argument(
+        "--feature-dim",
+        type=int,
+        default=4,
+        help="F for the matrix-frontier algos (rwr/labelprop)",
+    )
     ap.add_argument("--repeats", type=int, default=3, help="waves per algo")
     ap.add_argument("--min-chunk", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
@@ -324,9 +357,15 @@ def main(argv=None) -> dict:
     args = ap.parse_args(argv)
 
     delta = args.delta if args.delta in ("auto", "sync", "async") else int(args.delta)
-    # PPR queries need weighted pagerank edge values; SSSP needs lengths —
-    # one service per edge-value kind, same topology.
-    algos = ["sssp", "ppr"] if args.algo == "both" else [args.algo]
+    # PPR/RWR queries need weighted pagerank edge values; SSSP needs lengths —
+    # one service per edge-value kind, same topology.  (labelprop overrides
+    # edge values with unit weights itself, so any kind works.)
+    if args.algo == "both":
+        algos = ["sssp", "ppr"]
+    elif args.algo == "all":
+        algos = ["sssp", "ppr", "rwr", "labelprop"]
+    else:
+        algos = [args.algo]
     rng = np.random.default_rng(args.seed)
     report: dict = {"latency_s": {}, "stats": {}}
     for algo in algos:
@@ -345,6 +384,7 @@ def main(argv=None) -> dict:
             reprobe_every=args.reprobe_every,
             queue_capacity=max(64, args.queries),
             algos=(algo,),
+            feature_dim=args.feature_dim,
         )
         lat = []
         for rep in range(args.repeats):
@@ -356,7 +396,12 @@ def main(argv=None) -> dict:
             out = service.drain()
             lat.append(time.perf_counter() - t0)
             assert len(out) == args.queries
-            assert all(r.x.shape == (g.n,) for r in out)
+            want = (
+                (g.n,)
+                if algo in ("sssp", "ppr")
+                else (g.n, args.feature_dim)
+            )
+            assert all(r.x.shape == want for r in out)
         sv = service.solver(algo)
         warm = f"{min(lat[1:]) * 1e3:.1f} ms" if len(lat) > 1 else "n/a (1 repeat)"
         print(

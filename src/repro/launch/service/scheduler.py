@@ -42,7 +42,12 @@ from repro.launch.service.types import (
     default_class_for,
 )
 from repro.solve.batch import BatchStepper
-from repro.solve.problem import multi_source_x0, ppr_teleport
+from repro.solve.problem import (
+    labelprop_anchors,
+    multi_source_x0,
+    ppr_teleport,
+    rwr_restart,
+)
 
 __all__ = ["AdmissionQueue", "ContinuousScheduler"]
 
@@ -178,6 +183,19 @@ class _Lane:
         elif req.algo == "ppr":
             x0 = np.full(g.n, 1.0 / g.n, np.float32)
             q = ppr_teleport(g, [req.payload], self.service.damping)[0]
+            self.stepper.admit(x0, q=q, tag=request_id)
+        elif req.algo in ("rwr", "labelprop"):
+            # matrix-frontier algos: the payload vertex anchors column 0 and
+            # the remaining F-1 landmarks are spread evenly around the id
+            # space, so one int payload parameterizes an (n, F) query
+            F = self.service.solver(req.algo).problem.feature_dim
+            seeds = (req.payload + (np.arange(F, dtype=np.int64) * g.n) // F) % g.n
+            if req.algo == "rwr":
+                x0 = np.full((g.n, F), 1.0 / g.n, np.float32)
+                q = rwr_restart(g, seeds, self.service.damping)
+            else:
+                x0 = np.full((g.n, F), 1.0 / F, np.float32)
+                q = labelprop_anchors(g, seeds)
             self.stepper.admit(x0, q=q, tag=request_id)
         else:  # pre-validated in submit(); defensive for direct callers
             raise ValueError(f"unsupported algo {req.algo!r}")

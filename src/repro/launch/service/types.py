@@ -37,8 +37,10 @@ __all__ = [
 class QueryRequest:
     """One serving query: which algorithm, on which resident graph, from where.
 
-    * ``algo``          — ``"sssp"`` (payload = source vertex) or ``"ppr"``
-      (payload = seed vertex).
+    * ``algo``          — ``"sssp"`` (payload = source vertex), ``"ppr"``
+      (payload = seed vertex), or the matrix-frontier algorithms ``"rwr"`` /
+      ``"labelprop"`` (payload = the first landmark/anchor vertex; the
+      service derives the remaining ``feature_dim - 1`` evenly spaced ones).
     * ``payload``       — the vertex id the query is parameterized by.
     * ``request_class`` — scheduling class name, or ``"auto"`` to route by
       algorithm (PPR → ``"cheap"``, SSSP → ``"deep"``).
@@ -90,7 +92,7 @@ class QueryResult:
     graph: str
     request_class: str
     payload: int  # the vertex the query was parameterized by
-    x: np.ndarray  # (n,) solution row, frozen at first convergence
+    x: np.ndarray  # (n,) — or (n, F) for matrix algos — frozen at convergence
     rounds: int  # rounds to first convergence (this query alone)
     converged: bool
     residual: float
@@ -238,7 +240,7 @@ DEFAULT_CLASSES: dict[str, ClassPolicy] = {
     "deep": ClassPolicy(name="deep", slot_rounds=8),
 }
 
-_AUTO_CLASS = {"ppr": "cheap", "sssp": "deep"}
+_AUTO_CLASS = {"ppr": "cheap", "rwr": "cheap", "sssp": "deep", "labelprop": "deep"}
 
 
 def default_class_for(algo: str) -> str:

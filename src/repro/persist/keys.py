@@ -135,7 +135,7 @@ def plan_shard_fingerprint(sched, vb_lo: int, vb_hi: int, w0: int, w1: int) -> s
     )
 
 
-def row_update_digest(row_update_q, semiring, q_template) -> str:
+def row_update_digest(row_update_q, semiring, q_template, feature_dim: int = 1) -> str:
     """Digest of the row update's traced jaxpr **plus closure constants**.
 
     ``row_update_q`` is the normalized 4-arg form
@@ -145,12 +145,18 @@ def row_update_digest(row_update_q, semiring, q_template) -> str:
     both are hashed, so problems that differ only in baked-in data get
     distinct namespaces.  Untraceable updates degrade to a sentinel (their
     problems then only share entries with themselves via name/tol/semiring).
+
+    ``feature_dim > 1`` traces with a trailing feature axis — matrix-frontier
+    updates (row-normalizing label propagation, per-column RWR) see the rank
+    they will run at; ``feature_dim == 1`` keeps the historical trace shapes,
+    so every pre-existing vector digest is unchanged.
     """
     sds = jax.ShapeDtypeStruct
     dt = np.dtype(semiring.dtype)
+    feat = (int(feature_dim),) if feature_dim > 1 else ()
     args = (
-        sds((2, 3), dt),
-        sds((2, 3), dt),
+        sds((2, 3) + feat, dt),
+        sds((2, 3) + feat, dt),
         sds((2, 3), np.int32),
         jax.tree_util.tree_map(
             lambda a: sds(np.shape(a), np.asarray(a).dtype), q_template
@@ -169,16 +175,27 @@ def row_update_digest(row_update_q, semiring, q_template) -> str:
 
 
 def problem_fingerprint(problem, row_update_q, semiring, q_template) -> str:
-    """Fingerprint of a :class:`~repro.solve.problem.Problem` instance."""
-    return _digest(
+    """Fingerprint of a :class:`~repro.solve.problem.Problem` instance.
+
+    Matrix problems (``feature_dim > 1``) contribute an extra ``F<dim>`` part
+    and trace the row update at matrix rank; vector problems hash exactly the
+    historical parts, so existing on-disk namespaces stay warm.
+    """
+    feature_dim = int(getattr(problem, "feature_dim", 1))
+    parts = [
         problem.name.encode(),
         repr(float(problem.tol)).encode(),
         str(int(problem.max_rounds)).encode(),
         str(np.dtype(semiring.dtype)).encode(),
         repr(semiring.zero).encode(),
         str(bool(problem.takes_query)).encode(),
-        row_update_digest(row_update_q, semiring, q_template).encode(),
-    )
+        row_update_digest(
+            row_update_q, semiring, q_template, feature_dim=feature_dim
+        ).encode(),
+    ]
+    if feature_dim > 1:
+        parts.append(f"F{feature_dim}".encode())
+    return _digest(*parts)
 
 
 def solver_namespace(

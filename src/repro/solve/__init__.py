@@ -6,13 +6,18 @@ from repro.solve.problem import (
     Problem,
     cc_problem,
     count_changed_residual,
+    default_landmarks,
     jacobi_problem,
     l1_residual,
+    label_propagation_problem,
+    labelprop_anchors,
     min_label_row_update,
     multi_source_x0,
     pagerank_problem,
     ppr_problem,
     ppr_teleport,
+    rwr_embedding_problem,
+    rwr_restart,
     sssp_problem,
 )
 from repro.solve.solver import (
@@ -42,13 +47,18 @@ __all__ = [
     "Solver",
     "cc_problem",
     "count_changed_residual",
+    "default_landmarks",
     "jacobi_problem",
     "l1_residual",
+    "label_propagation_problem",
+    "labelprop_anchors",
     "min_label_row_update",
     "multi_source_x0",
     "pagerank_problem",
     "ppr_problem",
     "ppr_teleport",
+    "rwr_embedding_problem",
+    "rwr_restart",
     "solve_batch",
     "sssp_problem",
 ]

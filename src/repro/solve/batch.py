@@ -41,7 +41,7 @@ __all__ = ["BatchResult", "BatchStepper", "RetiredQuery", "solve_batch"]
 class BatchResult:
     """Result of one batched solve (Q queries sharing one schedule)."""
 
-    x: np.ndarray  # (Q, n) per-query converged states
+    x: np.ndarray  # (Q, n) or (Q, n, F) per-query converged states
     rounds: int  # rounds executed by the shared loop (= max over queries)
     rounds_per_query: np.ndarray  # (Q,) round of first convergence (0 = never)
     converged: np.ndarray  # (Q,) bool
@@ -56,8 +56,13 @@ class BatchResult:
     compactions: int = 0  # straggler-compaction shrinks performed
 
 
-def _batched_round(solver, sched, backend: str, frontier: str):
-    """Build ``(X_ext, qb) -> X_ext`` running one round for all Q queries."""
+def _batched_round(solver, sched, backend: str, frontier: str, feature_dims: int = 0):
+    """Build ``(X_ext, qb) -> X_ext`` running one round for all Q queries.
+
+    ``feature_dims`` is 0 for vector frontiers (``X_ext`` is ``(Q, n+1)``)
+    and 1 for matrix frontiers (``(Q, n+1, F)``); the sharded builders need
+    it to size their per-shard partition specs.
+    """
     sr = solver.problem.semiring
     if backend == "pallas" and frontier == "halo":
         # vmapping a shard_map-of-pallas program is not supported; the
@@ -78,7 +83,8 @@ def _batched_round(solver, sched, backend: str, frontier: str):
         from repro.dist.engine_sharded import sharded_round_fn_q
 
         base = sharded_round_fn_q(
-            sched, sr, solver._row_update_q, mesh, axis=solver.mesh_axis
+            sched, sr, solver._row_update_q, mesh, axis=solver.mesh_axis,
+            feature_dims=feature_dims,
         )
         vm = jax.vmap(base, in_axes=(0, None, None, None, None, 0))
         args = (sched.src, sched.val, sched.dst_local, sched.rows)
@@ -87,7 +93,8 @@ def _batched_round(solver, sched, backend: str, frontier: str):
 
     plan = solver.frontier_plan(sched)
     ext = frontier_round_ext_fn(
-        sched, plan, sr, solver._row_update_q, mesh, axis=solver.mesh_axis
+        sched, plan, sr, solver._row_update_q, mesh, axis=solver.mesh_axis,
+        feature_dims=feature_dims,
     )
     args = frontier_plan_args(sched, plan)
     vm = jax.vmap(ext, in_axes=(0, 0) + (None,) * len(args))
@@ -152,7 +159,8 @@ def _make_open_batch_solve_fn(rnd, residual_fn):
             res = res_fn(X[:, :-1], X_new[:, :-1]).astype(jnp.float32)
             just_converged = jnp.logical_and(~converged, res <= tol)
             rpq = jnp.where(just_converged, rounds + 1, rpq)
-            X_keep = jnp.where(converged[:, None], X, X_new)
+            conv_b = converged.reshape(converged.shape + (1,) * (X.ndim - 1))
+            X_keep = jnp.where(conv_b, X, X_new)
             res_keep = jnp.where(converged, res_prev, res)
             return X_keep, res_keep, rounds + 1, converged | (res <= tol), rpq
 
@@ -174,7 +182,7 @@ class RetiredQuery:
     """One slot retired from a :class:`BatchStepper` quantum."""
 
     tag: object  # caller's identifier, passed through admit()
-    x: np.ndarray  # (n,) final state (frozen at first convergence)
+    x: np.ndarray  # (n,) or (n, F) final state (frozen at first convergence)
     rounds: int  # rounds to first convergence (total, across quanta)
     converged: bool  # False = retired on the max_rounds budget
     residual: float
@@ -236,7 +244,11 @@ class BatchStepper:
         sr = solver.problem.semiring
         self._sr = sr
         n = solver.graph.n
-        self._X = np.full((capacity, n + 1), sr.zero, dtype=sr.dtype)
+        # Matrix problems (feature_dim > 1) give every slot a (n+1, F) state;
+        # scalar problems keep the historical (n+1,) layout bit-for-bit.
+        F = getattr(solver.problem, "feature_dim", 1)
+        self._feat = (F,) if F > 1 else ()
+        self._X = np.full((capacity, n + 1) + self._feat, sr.zero, dtype=sr.dtype)
         if solver.problem.takes_query:
             self._qb = None  # built from the first admitted row's structure
         else:
@@ -253,6 +265,7 @@ class BatchStepper:
             from repro.dist.compat import mesh_axis_sizes
 
             key_tail = (mesh_axis_sizes(solver._default_mesh())[solver.mesh_axis],)
+        fk: tuple = ("F", F) if self._feat else ()
         self._key = (
             "batch",
             "open",
@@ -260,7 +273,7 @@ class BatchStepper:
             self.frontier,
             self.sched.delta,
             capacity,
-        ) + key_tail
+        ) + key_tail + fk
         self._portable = key_tail in ((), (1,))
 
     # -------------------------------------------------------------- slots #
@@ -280,8 +293,9 @@ class BatchStepper:
         slot = int(free[0])
         x0 = np.asarray(x0, dtype=self._sr.dtype)
         n = self.solver.graph.n
-        if x0.shape != (n,):
-            raise ValueError(f"x0 must have shape ({n},), got {x0.shape}")
+        want = (n,) + self._feat
+        if x0.shape != want:
+            raise ValueError(f"x0 must have shape {want}, got {x0.shape}")
         self._X[slot, :n] = x0
         self._X[slot, n] = self._sr.zero
         if self.solver.problem.takes_query:
@@ -314,7 +328,10 @@ class BatchStepper:
         return self.solver.compile_cached(
             self._key,
             _make_open_batch_solve_fn(
-                _batched_round(self.solver, self.sched, self.backend, self.frontier),
+                _batched_round(
+                    self.solver, self.sched, self.backend, self.frontier,
+                    feature_dims=len(self._feat),
+                ),
                 self.solver.problem.residual,
             ),
             X_ext,
@@ -372,7 +389,8 @@ class BatchStepper:
         self.rounds_executed += r
         self.quanta += 1
         self.flushes += r * self.sched.S
-        bytes_per = np.dtype(sr.dtype).itemsize
+        F = int(np.prod(self._feat, dtype=np.int64)) if self._feat else 1
+        bytes_per = np.dtype(sr.dtype).itemsize * F
         per_round = self.sched.S * self.sched.P * self.sched.delta * bytes_per
         self.flush_bytes += r * per_round * self.capacity
         n = self.solver.graph.n
@@ -425,7 +443,8 @@ def solve_batch(
 ) -> BatchResult:
     """Solve Q queries of ``solver.problem`` in one compiled device loop.
 
-    * ``x0_batch``      — (Q, n) initial states (e.g. :func:`multi_source_x0`).
+    * ``x0_batch``      — (Q, n) initial states (e.g. :func:`multi_source_x0`),
+      or (Q, n, F) for matrix-frontier problems (e.g. batched RWR embeddings).
     * ``q``             — for query problems, a pytree whose leaves have a
       leading Q axis (e.g. :func:`ppr_teleport`); must be ``None`` otherwise.
     * ``backend``       — ``"jit"`` (default: vmapped single-device round),
@@ -456,10 +475,18 @@ def solve_batch(
         raise ValueError(f"compact_every must be >= 1, got {compact_every}")
 
     X = jnp.asarray(x0_batch, dtype=sr.dtype)
-    if X.ndim != 2 or X.shape[1] != solver.graph.n:
-        raise ValueError(f"x0_batch must be (Q, {solver.graph.n}), got {X.shape}")
+    if X.ndim not in (2, 3) or X.shape[1] != solver.graph.n:
+        raise ValueError(
+            f"x0_batch must be (Q, {solver.graph.n}) or "
+            f"(Q, {solver.graph.n}, F), got {X.shape}"
+        )
     Q = X.shape[0]
-    X_ext = jnp.concatenate([X, jnp.full((Q, 1), sr.zero, dtype=sr.dtype)], axis=1)
+    feat = X.shape[2:]
+    F = int(np.prod(feat, dtype=np.int64)) if feat else 1
+    fk: tuple = ("F", F) if feat else ()
+    X_ext = jnp.concatenate(
+        [X, jnp.full((Q, 1) + feat, sr.zero, dtype=sr.dtype)], axis=1
+    )
 
     if problem.takes_query:
         if q is None:
@@ -474,7 +501,7 @@ def solve_batch(
         qb = jnp.zeros((Q,), jnp.int32)
 
     tol_a = jnp.asarray(tol, jnp.float32)
-    bytes_per = np.dtype(sr.dtype).itemsize
+    bytes_per = np.dtype(sr.dtype).itemsize * F
 
     # Sharded loops are additionally keyed by mesh width: a persisted
     # executable exported by a 1-device process must never satisfy an
@@ -488,9 +515,12 @@ def solve_batch(
     def compiled_loop(X_cur, qb_cur):
         """The fused loop for the current active size (cached per size)."""
         return solver.compile_cached(
-            ("batch", backend, frontier, sched.delta, X_cur.shape[0]) + key_tail,
+            ("batch", backend, frontier, sched.delta, X_cur.shape[0])
+            + key_tail
+            + fk,
             _make_batch_solve_fn(
-                _batched_round(solver, sched, backend, frontier), problem.residual
+                _batched_round(solver, sched, backend, frontier, len(feat)),
+                problem.residual,
             ),
             X_cur,
             qb_cur,
@@ -502,7 +532,7 @@ def solve_batch(
         )
 
     solver.stats["solves"] += 1
-    x_out = np.empty((Q, solver.graph.n), dtype=sr.dtype)
+    x_out = np.empty((Q, solver.graph.n) + feat, dtype=sr.dtype)
     rpq_all = np.zeros(Q, np.int32)
     conv_all = np.zeros(Q, bool)
     res_all = np.full(Q, np.inf, np.float32)

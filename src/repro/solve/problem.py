@@ -11,6 +11,12 @@ Query-parameterized problems (``takes_query=True``) thread an extra per-query
 pytree ``q`` into ``row_update`` — this is how personalized PageRank gets a
 per-seed teleport vector while sharing one compiled round function across the
 whole batch.
+
+State need not be a vector: a problem with ``feature_dim = F > 1`` iterates an
+``(n, F)`` frontier *matrix* on the same engine — each commit step segment-⊕s
+F-wide rows instead of scalars.  :func:`rwr_embedding_problem` (random-walk-
+with-restart, F restart columns) and :func:`label_propagation_problem`
+(F classes, row-normalized ⊕) are the two built-in matrix workloads.
 """
 
 from __future__ import annotations
@@ -34,8 +40,13 @@ __all__ = [
     "sssp_problem",
     "cc_problem",
     "jacobi_problem",
+    "rwr_embedding_problem",
+    "label_propagation_problem",
     "multi_source_x0",
     "ppr_teleport",
+    "rwr_restart",
+    "labelprop_anchors",
+    "default_landmarks",
 ]
 
 
@@ -54,6 +65,12 @@ class Problem:
       when building the schedule (e.g. CC zeroes the weights so ⊗ is a no-op).
     * ``default_query``   — optional ``graph -> q`` for query problems, used
       when :meth:`Solver.solve` is called without an explicit ``q``.
+    * ``feature_dim``     — frontier width F.  ``1`` (the default) is the
+      classic vector engine; problems with ``F > 1`` iterate an ``(n, F)``
+      matrix state (``x0`` must then return ``(n, F)``).  A ``feature_dim=1``
+      problem also accepts an explicit ``(n, 1)`` initial state, which runs
+      the matrix code path and is bit-identical to the vector solve — the
+      degeneracy invariant the tests pin on every backend.
     """
 
     name: str
@@ -66,9 +83,11 @@ class Problem:
     edge_values: Callable | None = None
     takes_query: bool = False
     default_query: Callable | None = None
+    feature_dim: int = 1
 
     @property
     def dtype(self) -> np.dtype:
+        """State dtype, fixed by the semiring."""
         return np.dtype(self.semiring.dtype)
 
 
@@ -94,6 +113,19 @@ def count_changed_residual(x_prev, x_new):
 def l1_residual(x_prev, x_new):
     """Total absolute change across vertices (PageRank/Jacobi stop rule)."""
     return jnp.sum(jnp.abs(x_new - x_prev))
+
+
+def _match_features(table, reduced):
+    """Align a per-row gather against ``reduced``'s optional feature axis.
+
+    ``table`` is a per-row vector gather like ``q[rows]`` (shape ``(P, δ)``);
+    when the engine runs a matrix frontier, ``reduced`` is ``(P, δ, F)`` and
+    the vector table must broadcast as ``(P, δ, 1)``.  The rank test is
+    static, so the vector path's jaxpr is untouched (bit-identity).
+    """
+    if reduced.ndim == table.ndim + 1:
+        return table[..., None]
+    return table
 
 
 # --------------------------------------------------------------------------- #
@@ -145,7 +177,7 @@ def ppr_problem(
 
     def make_row_update(graph):
         def row_update(old, reduced, rows, q):
-            return q[rows] + reduced
+            return _match_features(q[rows], reduced) + reduced
 
         return row_update
 
@@ -218,7 +250,7 @@ def jacobi_problem(
         ext = jnp.asarray(np.concatenate([b_over_diag, [np.float32(0.0)]]))
 
         def row_update(old, reduced, rows):
-            return ext[rows] + reduced
+            return _match_features(ext[rows], reduced) + reduced
 
         return row_update
 
@@ -230,4 +262,120 @@ def jacobi_problem(
         x0=lambda g: np.zeros(g.n, dtype=np.float32),
         tol=tol,
         max_rounds=max_rounds,
+    )
+
+
+# --------------------------------------------------------------------------- #
+# Matrix-frontier factories: the engine's (n, F) workloads.
+# --------------------------------------------------------------------------- #
+def default_landmarks(n: int, feature_dim: int) -> np.ndarray:
+    """``feature_dim`` evenly spaced landmark vertices on an ``n``-vertex graph."""
+    return (np.arange(int(feature_dim), dtype=np.int64) * int(n)) // int(feature_dim)
+
+
+def rwr_restart(graph: CSRGraph, seeds, damping: float = 0.85) -> np.ndarray:
+    """(n, F) restart-mass matrix for :func:`rwr_embedding_problem`.
+
+    Column ``f`` carries ``(1-d)·e_{seeds[f]}`` — one personalized-PageRank
+    restart distribution per landmark, stacked side by side so a single
+    matrix solve computes all F proximity columns at once.
+    """
+    seeds = np.atleast_1d(np.asarray(seeds, dtype=np.int64))
+    r = np.zeros((graph.n, seeds.shape[0]), dtype=np.float32)
+    r[seeds, np.arange(seeds.shape[0])] = np.float32(1.0 - damping)
+    return r
+
+
+def rwr_embedding_problem(
+    feature_dim: int = 4,
+    damping: float = 0.85,
+    tol: float = 1e-4,
+    max_rounds: int = 1000,
+) -> Problem:
+    """Random-walk-with-restart embeddings: F restart columns, one solve.
+
+    Each column of the ``(n, F)`` state solves personalized PageRank toward
+    one landmark (``q`` is the :func:`rwr_restart` matrix), so a vertex's row
+    is its F-dimensional proximity embedding.  Edge values must hold
+    ``d / outdeg(src)`` exactly like :func:`pagerank_problem`.  With
+    ``feature_dim=1`` and a single-seed restart column this is bit-identical
+    to :func:`ppr_problem` — the cross-factory parity test.
+    """
+    F = int(feature_dim)
+
+    def make_row_update(graph):
+        def row_update(old, reduced, rows, q):
+            return _match_features(q[rows], reduced) + reduced
+
+        return row_update
+
+    return Problem(
+        name="rwr",
+        semiring=PLUS_TIMES,
+        make_row_update=make_row_update,
+        residual=l1_residual,
+        x0=lambda g: np.full((g.n, F), 1.0 / g.n, dtype=np.float32),
+        tol=tol,
+        max_rounds=max_rounds,
+        takes_query=True,
+        default_query=lambda g: rwr_restart(g, default_landmarks(g.n, F), damping),
+        feature_dim=F,
+    )
+
+
+def labelprop_anchors(graph: CSRGraph, seeds) -> np.ndarray:
+    """(n, F) one-hot anchor matrix: ``seeds[f]`` is clamped to class ``f``."""
+    seeds = np.atleast_1d(np.asarray(seeds, dtype=np.int64))
+    a = np.zeros((graph.n, seeds.shape[0]), dtype=np.float32)
+    a[seeds, np.arange(seeds.shape[0])] = np.float32(1.0)
+    return a
+
+
+def label_propagation_problem(
+    feature_dim: int = 4, mix: float = 0.9, tol: float = 1e-3, max_rounds: int = 2000
+) -> Problem:
+    """F-class semi-supervised label propagation with a row-normalized ⊕.
+
+    State is an ``(n, F)`` class-membership matrix.  One commit pulls the
+    plus-times segment-⊕ of neighbor rows over unit edge weights (the
+    ``edge_values`` override makes propagation purely structural), then
+    row-normalizes it — the "row-normalized ⊕" — so each row stays a
+    distribution over classes.  Anchored rows (``q`` rows with mass, built by
+    :func:`labelprop_anchors`) clamp back to their one-hot label every
+    commit; rows whose in-edges are all padding keep their previous value.
+
+    ``mix`` damps the update (``mix·prop + (1-mix)·old`` on unanchored rows)
+    — the *smooth* label-propagation variant.  Undamped pull updates
+    (``mix=1``) oscillate with period 2 on near-bipartite neighborhoods and
+    never meet tol for some anchor placements; any ``mix < 1`` breaks the
+    cycle while keeping the same fixed points.
+    """
+    F = int(feature_dim)
+    mix = float(mix)
+    if not 0.0 < mix <= 1.0:
+        raise ValueError(f"mix must be in (0, 1], got {mix}")
+
+    def make_row_update(graph):
+        def row_update(old, reduced, rows, q):
+            total = jnp.sum(reduced, axis=-1, keepdims=True)
+            safe = jnp.where(total > 0, total, jnp.ones_like(total))
+            prop = jnp.where(total > 0, mix * (reduced / safe) + (1 - mix) * old, old)
+            anchor = q[rows]
+            anchored = jnp.sum(anchor, axis=-1, keepdims=True) > 0
+            return jnp.where(anchored, anchor, prop)
+
+        return row_update
+
+    return Problem(
+        name="labelprop",
+        semiring=PLUS_TIMES,
+        make_row_update=make_row_update,
+        residual=l1_residual,
+        x0=lambda g: np.full((g.n, F), 1.0 / F, dtype=np.float32),
+        tol=tol,
+        max_rounds=max_rounds,
+        edge_values=lambda g: np.ones(g.nnz, dtype=np.float32),
+        takes_query=True,
+        default_query=lambda g: labelprop_anchors(g, default_landmarks(g.n, F)),
+        feature_dim=F,
     )

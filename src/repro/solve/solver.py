@@ -41,6 +41,7 @@ from repro.core.engine import (
     DeviceSchedule,
     EngineResult,
     execute_solve_fn,
+    extend_frontier,
     host_loop,
     make_schedule,
     make_solve_fn_q,
@@ -172,7 +173,6 @@ class Solver:
                 return base(old, reduced, rows)
 
             self._row_update_q = _row_update_q
-        self._zero_ext = jnp.asarray([sr.zero]).astype(sr.dtype)
         self._bounds = None
         self._partition = None
         self._auto_delta = None
@@ -643,13 +643,34 @@ class Solver:
     # inputs
     # ------------------------------------------------------------------ #
     def _x_ext(self, x0):
+        """Append the dump slot to ``x0`` — vector ``(n,)`` or matrix ``(n, F)``.
+
+        A 1-D frontier takes the historical vector path bit-for-bit; a 2-D
+        frontier threads its trailing feature axis through every backend.
+        ``(n, 1)`` is accepted even for scalar problems — the degenerate
+        matrix engine is the bit-identity test surface.
+        """
         sr = self.problem.semiring
         if x0 is None:
             x0 = self.problem.x0(self.graph)
         x0 = jnp.asarray(x0, dtype=sr.dtype)
-        if x0.shape != (self.graph.n,):
-            raise ValueError(f"x0 must have shape ({self.graph.n},), got {x0.shape}")
-        return jnp.concatenate([x0, self._zero_ext])
+        n = self.graph.n
+        if not (x0.shape == (n,) or (x0.ndim == 2 and x0.shape[0] == n)):
+            raise ValueError(
+                f"x0 must have shape ({n},) or ({n}, F), got {x0.shape}"
+            )
+        return extend_frontier(x0, sr)
+
+    @staticmethod
+    def _fkey(x_ext) -> tuple:
+        """Compile-key suffix for the frontier's feature shape.
+
+        ``()`` for vector frontiers keeps every pre-existing cache key —
+        and every persisted executable keyed by it — byte-identical;
+        matrix frontiers append ``("F", F)`` so a ``(n,)`` and ``(n, F)``
+        solve never share an executable.
+        """
+        return () if x_ext.ndim == 1 else ("F", int(x_ext.shape[-1]))
 
     def resolve_query(self, q):
         """Normalize the per-query parameter pytree (dummy for query-free)."""
@@ -763,10 +784,11 @@ class Solver:
         form (mutation drops its cache entry).
         """
         sr = self.problem.semiring
+        fk = self._fkey(x_ext)
         if backend == "jit":
             sargs = schedule_args(sched)
             fn = self.compile_cached(
-                ("dyn", backend, sched.delta, sched.S, sched.M),
+                ("dyn", backend, sched.delta, sched.S, sched.M) + fk,
                 make_solve_fn_q_dyn(
                     sched, sr, self._row_update_q, self.problem.residual
                 ),
@@ -783,7 +805,7 @@ class Solver:
 
         else:
             fn = self.compile_cached(
-                (backend, sched.delta),
+                (backend, sched.delta) + fk,
                 make_solve_fn_q(
                     sched,
                     sr,
@@ -812,13 +834,14 @@ class Solver:
     ):
         """Cached compiled one-round ``x_ext -> x_ext`` for host/pallas/sharded."""
         sr = self.problem.semiring
+        fk = self._fkey(x_ext)
         if backend == "pallas" and frontier == "halo":
             return self._pallas_halo_round(sched, x_ext, q, halo_dtype)
         if backend == "host":
             # dynamic form: survives same-shape schedule mutations, like jit
             sargs = schedule_args(sched)
             rnd = self.compile_cached(
-                ("dyn", "host", "round", sched.delta, sched.S, sched.M),
+                ("dyn", "host", "round", sched.delta, sched.S, sched.M) + fk,
                 round_fn_q_dyn(sched, sr, self._row_update_q),
                 x_ext,
                 q,
@@ -827,7 +850,7 @@ class Solver:
             return lambda x: rnd(x, q, *sargs)
         if backend == "pallas":
             rnd = self.compile_cached(
-                ("pallas", "round", sched.delta),
+                ("pallas", "round", sched.delta) + fk,
                 round_fn_pallas_q(sched, sr, self._row_update_q),
                 x_ext,
                 q,
@@ -845,11 +868,12 @@ class Solver:
             from repro.dist.engine_sharded import sharded_round_fn_q
 
             fn = sharded_round_fn_q(
-                sched, sr, self._row_update_q, mesh, axis=self.mesh_axis
+                sched, sr, self._row_update_q, mesh, axis=self.mesh_axis,
+                feature_dims=x_ext.ndim - 1,
             )
             args = (sched.src, sched.val, sched.dst_local, sched.rows)
             compiled = self.compile_cached(
-                ("sharded", "replicated", sched.delta, D),
+                ("sharded", "replicated", sched.delta, D) + fk,
                 fn,
                 x_ext,
                 *args,
@@ -861,11 +885,12 @@ class Solver:
 
         plan = self.frontier_plan(sched)
         fn = frontier_round_ext_fn(
-            sched, plan, sr, self._row_update_q, mesh, axis=self.mesh_axis
+            sched, plan, sr, self._row_update_q, mesh, axis=self.mesh_axis,
+            feature_dims=x_ext.ndim - 1,
         )
         args = frontier_plan_args(sched, plan)
         compiled = self.compile_cached(
-            ("sharded", "halo", sched.delta, D), fn, x_ext, q, *args,
+            ("sharded", "halo", sched.delta, D) + fk, fn, x_ext, q, *args,
             portable=D == 1,
         )
         return lambda x: compiled(x, q, *args)
@@ -901,11 +926,12 @@ class Solver:
             mesh,
             axis=self.mesh_axis,
             halo_dtype=halo_dtype,
+            feature_dims=x_ext.ndim - 1,
         )
         args = frontier_plan_args(sched, plan)
-        ef0 = frontier_ef_init(plan)
+        ef0 = frontier_ef_init(plan, x_ext.shape[1:])
         compiled = self.compile_cached(
-            ("pallas-halo", sched.delta, halo_dtype, D),
+            ("pallas-halo", sched.delta, halo_dtype, D) + self._fkey(x_ext),
             fn,
             x_ext,
             ef0,

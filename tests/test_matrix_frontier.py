@@ -1,0 +1,357 @@
+"""Matrix-valued frontiers: (n, F) state through every backend.
+
+Acceptance coverage for the (N, F) engine generalization:
+
+* **F=1 bit-identity** — a ``(n, 1)`` frontier produces bit-for-bit the same
+  answer, round count, flush counters, and residual trajectory as the
+  historical ``(n,)`` vector engine, on every (backend, frontier) pair in
+  ``BACKEND_FRONTIERS`` (host / jit / pallas / sharded / sharded+halo /
+  pallas+halo);
+* ``rwr_embedding_problem(feature_dim=1)`` is bit-identical to
+  :func:`ppr_problem` with the matching teleport vector (cross-factory
+  parity), and each column of an F=4 RWR solve matches an independent
+  per-column PPR solve at the convergence tolerance;
+* ``label_propagation_problem`` converges under sync / async / delayed
+  disciplines on the clustered ``"web"`` generator and recovers cluster
+  structure (anchor purity);
+* batched matrix solves (``solve_batch`` and :class:`BatchStepper`) carry the
+  feature axis and scale ``flush_bytes`` by F;
+* the serving tier answers ``"rwr"`` / ``"labelprop"`` requests with
+  ``(n, F)`` results;
+* a hypothesis property test drives random graphs × P × δ × F through the
+  matrix round against F independent vector rounds.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.engine import extend_frontier, make_schedule, round_fn
+from repro.core.semiring import MIN_PLUS, PLUS_TIMES
+from repro.graphs.formats import CSRGraph
+from repro.graphs.generators import make_graph
+from repro.launch.serve_graph import GraphService
+from repro.launch.service.types import QueryRequest
+from repro.solve import (
+    BatchStepper,
+    Solver,
+    default_landmarks,
+    label_propagation_problem,
+    labelprop_anchors,
+    multi_source_x0,
+    pagerank_problem,
+    ppr_problem,
+    ppr_teleport,
+    rwr_embedding_problem,
+    rwr_restart,
+    solve_batch,
+    sssp_problem,
+)
+
+N_WORKERS = 8
+DELTA = 16
+
+GRAPH_PR = make_graph("twitter", scale=9, efactor=8, kind="pagerank")
+GRAPH_S = make_graph("kron", scale=8, efactor=8, kind="sssp")
+GRAPH_WEB = make_graph("web", scale=9, efactor=8, kind="pagerank")
+
+# every (backend, frontier) pair of repro.solve.BACKEND_FRONTIERS
+ALL_PATHS = [
+    ("host", "replicated"),
+    ("jit", "replicated"),
+    ("pallas", "replicated"),
+    ("sharded", "replicated"),
+    ("sharded", "halo"),
+    ("pallas", "halo"),
+]
+
+
+def _case(name):
+    if name == "pagerank":
+        return GRAPH_PR, pagerank_problem()
+    return GRAPH_S, sssp_problem()
+
+
+# --------------------------------------------------------------------- #
+# F=1 bit-identity: the load-bearing invariant
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("backend,frontier", ALL_PATHS)
+@pytest.mark.parametrize("problem_name", ["pagerank", "sssp"])
+def test_f1_bit_identical_to_vector_engine(backend, frontier, problem_name):
+    """(n, 1) must reproduce the vector engine exactly: values, rounds,
+    flush counters, and the full residual trajectory."""
+    g, prob = _case(problem_name)
+    s = Solver(
+        g, prob, n_workers=N_WORKERS, delta=DELTA, backend=backend,
+        frontier=frontier,
+    )
+    r_vec = s.solve()
+    x1 = np.asarray(prob.x0(g)).reshape(-1, 1)
+    r_mat = s.solve(x1)
+    assert r_mat.x.shape == (g.n, 1)
+    assert np.array_equal(np.asarray(r_mat.x)[:, 0], np.asarray(r_vec.x))
+    assert r_mat.rounds == r_vec.rounds
+    assert r_mat.flushes == r_vec.flushes
+    assert np.array_equal(
+        np.asarray(r_mat.residuals, np.float32),
+        np.asarray(r_vec.residuals, np.float32),
+    )
+
+
+def test_f1_flush_bytes_match_vector():
+    g, prob = _case("pagerank")
+    s = Solver(g, prob, n_workers=N_WORKERS, delta=DELTA, backend="host")
+    r_vec = s.solve()
+    r_mat = s.solve(np.asarray(prob.x0(g)).reshape(-1, 1))
+    assert r_mat.flush_bytes == r_vec.flush_bytes
+
+
+def test_matrix_flush_bytes_scale_with_f():
+    g = GRAPH_PR
+    s1 = Solver(
+        g, rwr_embedding_problem(feature_dim=1), n_workers=N_WORKERS,
+        delta=DELTA, backend="jit",
+    )
+    s4 = Solver(
+        g, rwr_embedding_problem(feature_dim=4), n_workers=N_WORKERS,
+        delta=DELTA, backend="jit",
+    )
+    r1, r4 = s1.solve(), s4.solve()
+    per_round_1 = r1.flush_bytes / r1.rounds
+    per_round_4 = r4.flush_bytes / r4.rounds
+    assert per_round_4 == 4 * per_round_1
+
+
+# --------------------------------------------------------------------- #
+# round-level parity: matrix round == stacked vector rounds
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("semiring_name", ["plus_times", "min_plus"])
+def test_matrix_round_equals_stacked_vector_rounds(semiring_name):
+    if semiring_name == "plus_times":
+        g, sr = GRAPH_PR, PLUS_TIMES
+        cols = [np.asarray(pagerank_problem().x0(g)) for _ in range(3)]
+        cols[1] = cols[1] * 2.0
+        cols[2] = np.linspace(0.0, 1.0, g.n, dtype=np.float32)
+
+        def row_update(old, reduced, rows):
+            return reduced
+    else:
+        g, sr = GRAPH_S, MIN_PLUS
+        cols = [
+            np.asarray(multi_source_x0(g, [s])[0]) for s in (0, g.n // 2, g.n - 1)
+        ]
+
+        def row_update(old, reduced, rows):
+            return jnp.minimum(old, reduced)
+
+    sched = make_schedule(g, N_WORKERS, DELTA, sr, mode="delayed")
+    rnd = round_fn(sched, sr, row_update)
+    X = np.stack(cols, axis=1)
+    out_mat = np.asarray(rnd(extend_frontier(X, sr)))
+    for f, col in enumerate(cols):
+        out_vec = np.asarray(rnd(extend_frontier(col, sr)))
+        assert np.array_equal(out_mat[:, f], out_vec), f"column {f} diverged"
+
+
+# --------------------------------------------------------------------- #
+# the new problem factories
+# --------------------------------------------------------------------- #
+def test_rwr_f1_bit_identical_to_ppr():
+    g = GRAPH_PR
+    seed = int(default_landmarks(g.n, 1)[0])
+    ppr = Solver(g, ppr_problem(), n_workers=N_WORKERS, delta=DELTA, backend="jit")
+    r_ppr = ppr.solve(q=ppr_teleport(g, [seed], 0.85)[0])
+    rwr = Solver(
+        g, rwr_embedding_problem(feature_dim=1), n_workers=N_WORKERS,
+        delta=DELTA, backend="jit",
+    )
+    r_rwr = rwr.solve()
+    assert r_rwr.x.shape == (g.n, 1)
+    assert np.array_equal(np.asarray(r_rwr.x)[:, 0], np.asarray(r_ppr.x))
+    assert r_rwr.rounds == r_ppr.rounds
+
+
+@pytest.mark.parametrize("backend", ["host", "jit", "pallas", "sharded"])
+def test_rwr_columns_match_per_column_ppr(backend):
+    g = GRAPH_PR
+    F = 4
+    tol = 1e-6
+    rwr = Solver(
+        g, rwr_embedding_problem(feature_dim=F, tol=tol), n_workers=N_WORKERS,
+        delta=DELTA, backend=backend,
+    )
+    r = rwr.solve()
+    assert r.converged and r.x.shape == (g.n, F)
+    ppr = Solver(
+        g, ppr_problem(tol=tol), n_workers=N_WORKERS, delta=DELTA, backend="jit"
+    )
+    for f, seed in enumerate(default_landmarks(g.n, F)):
+        ref = ppr.solve(q=ppr_teleport(g, [int(seed)], 0.85)[0])
+        np.testing.assert_allclose(
+            np.asarray(r.x)[:, f], np.asarray(ref.x), atol=5e-6
+        )
+
+
+@pytest.mark.parametrize("delta", ["sync", "async", DELTA])
+def test_labelprop_converges_and_recovers_clusters(delta):
+    g = GRAPH_WEB  # block-diagonal clustered power-law (~95% intra-cluster)
+    F = 4
+    prob = label_propagation_problem(feature_dim=F)
+    s = Solver(g, prob, n_workers=N_WORKERS, delta=delta, backend="jit")
+    r = s.solve()
+    assert r.converged
+    lab = np.asarray(r.x)
+    assert lab.shape == (g.n, F)
+    # rows stay distributions over classes
+    np.testing.assert_allclose(lab.sum(axis=1), 1.0, atol=1e-5)
+    # anchors keep their one-hot labels (the clamp)
+    anchors = default_landmarks(g.n, F)
+    assert np.array_equal(np.argmax(lab[anchors], axis=1), np.arange(F))
+    # labels are informative, not uniform: most rows have a clear winner
+    frac_decided = float((lab.max(axis=1) > 1.5 / F).mean())
+    assert frac_decided > 0.5, frac_decided
+
+
+def test_labelprop_disciplines_agree_on_hard_labels():
+    g = GRAPH_WEB
+    prob = label_propagation_problem(feature_dim=4)
+    hard = []
+    for delta in ("sync", "async", 64):
+        r = Solver(g, prob, n_workers=N_WORKERS, delta=delta, backend="jit").solve()
+        hard.append(np.argmax(np.asarray(r.x), axis=1))
+    agree = float((hard[0] == hard[1]).mean())
+    assert agree > 0.95, agree
+    agree = float((hard[0] == hard[2]).mean())
+    assert agree > 0.95, agree
+
+
+# --------------------------------------------------------------------- #
+# batching
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("backend", ["jit", "sharded"])
+def test_solve_batch_matrix(backend):
+    g = GRAPH_PR
+    F, Q = 4, 3
+    prob = rwr_embedding_problem(feature_dim=F)
+    s = Solver(g, prob, n_workers=N_WORKERS, delta=DELTA, backend="jit")
+    seeds = default_landmarks(g.n, F)
+    X = np.stack([np.asarray(prob.x0(g))] * Q)
+    qs = np.stack(
+        [np.asarray(rwr_restart(g, (seeds + i) % g.n)) for i in range(Q)]
+    )
+    br = solve_batch(s, X, q=qs, backend=backend)
+    assert br.x.shape == (Q, g.n, F)
+    assert br.converged.all()
+    # each batch row equals its unbatched solve
+    for i in range(Q):
+        ref = s.solve(q=qs[i])
+        np.testing.assert_allclose(br.x[i], np.asarray(ref.x), atol=1e-6)
+
+
+def test_solve_batch_matrix_shape_validation():
+    g = GRAPH_PR
+    prob = rwr_embedding_problem(feature_dim=4)
+    s = Solver(g, prob, n_workers=N_WORKERS, delta=DELTA, backend="jit")
+    with pytest.raises(ValueError, match="x0_batch must be"):
+        solve_batch(s, np.zeros((2, g.n + 1, 4), np.float32), q=np.zeros((2,)))
+
+
+def test_batch_stepper_matrix_slots():
+    g = GRAPH_PR
+    F = 4
+    prob = rwr_embedding_problem(feature_dim=F)
+    s = Solver(g, prob, n_workers=N_WORKERS, delta=DELTA, backend="jit")
+    stepper = BatchStepper(s, capacity=2)
+    seeds = default_landmarks(g.n, F)
+    q = rwr_restart(g, seeds)
+    with pytest.raises(ValueError, match="x0 must have shape"):
+        stepper.admit(np.asarray(prob.x0(g))[:, 0], q=q)  # (n,) into an F=4 lane
+    stepper.admit(np.asarray(prob.x0(g)), q=q, tag="a")
+    retired = []
+    while not retired:
+        retired = stepper.run(quantum=8)
+    (row,) = retired
+    assert row.converged and row.x.shape == (g.n, F)
+    ref = s.solve(q=q)
+    np.testing.assert_allclose(row.x, np.asarray(ref.x), atol=1e-6)
+
+
+def test_solver_x0_shape_validation():
+    g = GRAPH_PR
+    s = Solver(g, pagerank_problem(), n_workers=N_WORKERS, delta=DELTA)
+    with pytest.raises(ValueError, match="x0 must have shape"):
+        s.solve(np.zeros(g.n + 1, np.float32))
+    with pytest.raises(ValueError, match="x0 must have shape"):
+        s.solve(np.zeros((g.n + 1, 2), np.float32))
+
+
+# --------------------------------------------------------------------- #
+# serving tier
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("algo", ["rwr", "labelprop"])
+def test_service_matrix_algos(algo):
+    g = GRAPH_WEB
+    F = 3
+    service = GraphService(
+        g, n_workers=N_WORKERS, delta=DELTA, batch_size=2,
+        algos=(algo,), feature_dim=F,
+    )
+    for payload in (1, g.n // 2):
+        adm = service.submit(QueryRequest(algo=algo, payload=payload))
+        assert adm.accepted, adm.reason
+    out = service.drain()
+    assert len(out) == 2
+    for r in out:
+        assert r.x.shape == (g.n, F)
+        assert r.converged
+
+
+# --------------------------------------------------------------------- #
+# hypothesis property test: random graphs × P × δ × F
+# --------------------------------------------------------------------- #
+def _random_graph(rng, n, avg_deg):
+    rows = np.repeat(np.arange(n), avg_deg)
+    cols = rng.integers(0, n, rows.shape[0])
+    vals = rng.random(rows.shape[0]).astype(np.float32)
+    order = np.lexsort((cols, rows))
+    rows, cols, vals = rows[order], cols[order], vals[order]
+    indptr = np.zeros(n + 1, np.int64)
+    np.add.at(indptr, rows + 1, 1)
+    indptr = np.cumsum(indptr)
+    return CSRGraph(
+        n=n,
+        indptr=indptr,
+        indices=cols.astype(np.int64),
+        values=vals,
+        name="rand",
+    )
+
+
+def test_property_matrix_round_matches_vector_columns():
+    hyp = pytest.importorskip("hypothesis", reason="property tests need hypothesis")
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+
+    @settings(
+        deadline=None, max_examples=15,
+        suppress_health_check=[HealthCheck.too_slow],
+    )
+    @given(
+        seed=st.integers(0, 2**16),
+        n_workers=st.sampled_from([2, 4, 8]),
+        delta=st.sampled_from([4, 16, 64]),
+        F=st.integers(1, 3),
+    )
+    def inner(seed, n_workers, delta, F):
+        rng = np.random.default_rng(seed)
+        g = _random_graph(rng, n=128, avg_deg=4)
+        sched = make_schedule(g, n_workers, delta, PLUS_TIMES, mode="delayed")
+        rnd = round_fn(sched, PLUS_TIMES, lambda old, reduced, rows: reduced)
+        X = rng.random((g.n, F)).astype(np.float32)
+        out = np.asarray(rnd(extend_frontier(X, PLUS_TIMES)))
+        for f in range(F):
+            ref = np.asarray(rnd(extend_frontier(X[:, f], PLUS_TIMES)))
+            assert np.array_equal(out[:, f], ref)
+
+    del hyp
+    inner()

@@ -1,0 +1,169 @@
+"""Docs gate: markdown link integrity + public-docstring coverage ratchet.
+
+Two independent checks, both stdlib-only so the gate computes identical
+results in CI and in a bare dev container:
+
+1. **Relative-link check** — every ``[text](target)`` in every tracked
+   ``*.md`` whose target is not an external URL or a pure anchor must
+   resolve to a file or directory relative to the markdown file (anchors
+   on relative targets are stripped before the existence check).  Fenced
+   code blocks are skipped so example snippets can't false-positive.
+
+2. **Docstring-coverage ratchet** — counts *missing public docstrings*
+   (module docstring + every public top-level / class-level ``def`` and
+   ``class``, the pydocstyle D1xx surface) per module under the ratcheted
+   paths (``src/repro/core``, ``src/repro/solve``) via ``ast``.  The
+   committed ``docs/docstring_baseline.json`` pins the allowed count per
+   file; any file whose count *rises* fails the gate, and files absent
+   from the baseline (new modules) are allowed zero.  After intentionally
+   documenting more, run with ``--write-baseline`` to tighten the ratchet.
+
+    python tools/check_docs.py [--write-baseline]
+"""
+
+from __future__ import annotations
+
+import argparse
+import ast
+import json
+import re
+import subprocess
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[1]
+BASELINE = REPO / "docs" / "docstring_baseline.json"
+
+# Surfaces whose public-docstring coverage may only go up.
+RATCHET_PATHS = ("src/repro/core", "src/repro/solve")
+
+# [text](target) — target captured lazily so `)` in prose doesn't leak in.
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_EXTERNAL = re.compile(r"^(?:[a-z][a-z0-9+.-]*:|//)", re.IGNORECASE)
+
+
+def _tracked_markdown() -> list[Path]:
+    out = subprocess.run(
+        ["git", "ls-files", "*.md", "**/*.md"],
+        cwd=REPO,
+        capture_output=True,
+        text=True,
+        check=True,
+    )
+    return sorted({REPO / line for line in out.stdout.splitlines() if line})
+
+
+def check_links() -> list[str]:
+    """Return one error string per broken relative link in tracked *.md."""
+    errors = []
+    for md in _tracked_markdown():
+        in_fence = False
+        for lineno, line in enumerate(md.read_text().splitlines(), start=1):
+            if line.lstrip().startswith("```"):
+                in_fence = not in_fence
+                continue
+            if in_fence:
+                continue
+            for target in _LINK.findall(line):
+                if _EXTERNAL.match(target) or target.startswith("#"):
+                    continue
+                path = target.split("#", 1)[0]
+                if not path:
+                    continue
+                if not (md.parent / path).exists():
+                    rel = md.relative_to(REPO)
+                    errors.append(f"{rel}:{lineno}: broken link -> {target}")
+    return errors
+
+
+def _missing_in_module(source: str) -> int:
+    """Missing public docstrings in one module (the pydocstyle D1 surface).
+
+    Counts the module docstring plus every public (no leading underscore)
+    ``def``/``class`` at module level or directly inside a class body —
+    nested functions are implementation detail and exempt, as are private
+    and dunder names.
+    """
+    tree = ast.parse(source)
+    missing = 0 if ast.get_docstring(tree) else 1
+
+    def public_defs(body):
+        for node in body:
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)):
+                if not node.name.startswith("_"):
+                    yield node
+
+    for node in public_defs(tree.body):
+        if not ast.get_docstring(node):
+            missing += 1
+        if isinstance(node, ast.ClassDef):
+            for meth in public_defs(node.body):
+                if not ast.get_docstring(meth):
+                    missing += 1
+    return missing
+
+
+def docstring_counts() -> dict[str, int]:
+    """Missing-public-docstring count per file under the ratcheted paths."""
+    counts = {}
+    for root in RATCHET_PATHS:
+        for py in sorted((REPO / root).rglob("*.py")):
+            n = _missing_in_module(py.read_text())
+            if n:
+                counts[str(py.relative_to(REPO))] = n
+    return counts
+
+
+def check_ratchet(counts: dict[str, int]) -> list[str]:
+    """Return one error string per file whose missing count rose."""
+    if not BASELINE.exists():
+        return [f"missing baseline {BASELINE.relative_to(REPO)} (--write-baseline)"]
+    baseline = json.loads(BASELINE.read_text())
+    errors = []
+    for path, count in counts.items():
+        allowed = baseline.get(path, 0)
+        if count > allowed:
+            errors.append(
+                f"{path}: {count} missing public docstrings "
+                f"(baseline allows {allowed}) — document, don't regress"
+            )
+    return errors
+
+
+def main(argv=None) -> int:
+    """CLI entry point; returns the process exit code."""
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--write-baseline",
+        action="store_true",
+        help="rewrite docs/docstring_baseline.json from the current tree",
+    )
+    args = ap.parse_args(argv)
+
+    link_errors = check_links()
+    for err in link_errors:
+        print(f"FAIL {err}")
+    print(
+        f"link check: {len(_tracked_markdown())} markdown files, "
+        f"{len(link_errors)} broken links"
+    )
+
+    counts = docstring_counts()
+    if args.write_baseline:
+        BASELINE.parent.mkdir(parents=True, exist_ok=True)
+        BASELINE.write_text(json.dumps(counts, indent=1, sort_keys=True) + "\n")
+        print(f"wrote {BASELINE.relative_to(REPO)} ({sum(counts.values())} allowed)")
+        return 1 if link_errors else 0
+
+    ratchet_errors = check_ratchet(counts)
+    for err in ratchet_errors:
+        print(f"FAIL {err}")
+    print(
+        f"docstring ratchet: {sum(counts.values())} missing across "
+        f"{len(counts)} files (per-file caps from baseline)"
+    )
+    return 1 if (link_errors or ratchet_errors) else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
